@@ -1,0 +1,52 @@
+"""Paper claim C1/C2: N models in ONE forward call + one memory space.
+
+Compares the fused ensemble dispatch (one jitted computation over all
+members) against N sequential per-member dispatches on the same batch —
+the paper's 'removes additional data transformation calls' claim, measured.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, time_call
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import Ensemble, EnsembleMember
+from repro.models import build_model
+
+
+def _members(n, C=16):
+    cfg = reduce_for_smoke(get_config("yi-9b"))
+    model = build_model(cfg)
+    out = []
+    for i in range(n):
+        params = model.init(jax.random.PRNGKey(i))
+
+        def apply(p, batch, _m=model, _c=C):
+            return _m.forward(p, batch)[:, -1, :_c]
+
+        out.append(EnsembleMember(f"m{i}", apply, params, C))
+    return out
+
+
+def run() -> None:
+    batch = {"tokens": np.ones((8, 32), np.int32)}
+    for n in (2, 4):
+        members = _members(n)
+        ens = Ensemble(members, max_batch=8)
+        t_fused = time_call(ens.forward, batch)
+
+        solo_fns = [jax.jit(m.apply) for m in members]
+
+        def sequential():
+            import jax.numpy as jnp
+            b = {"tokens": jnp.asarray(batch["tokens"])}
+            return [f(m.params, b) for f, m in zip(solo_fns, members)]
+
+        t_seq = time_call(sequential)
+        emit(f"ensemble_fused_n{n}", t_fused,
+             f"speedup_vs_sequential={t_seq / t_fused:.2f}x")
+        ledger = ens.memory_ledger(n_chips=1)
+        emit(f"ensemble_memory_n{n}", 0.0,
+             f"bytes_per_chip={ledger.bytes_per_chip};fits={ledger.fits()}")

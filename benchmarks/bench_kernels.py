@@ -1,0 +1,85 @@
+"""Kernel microbench: pure-jnp oracle timings at serving shapes + kernel
+correctness deltas.
+
+NOTE: this container is CPU-only; Pallas kernels execute in interpret mode
+(a correctness simulator), so their wall time is NOT meaningful.  We report
+the jnp reference path's time (the production fallback) and the kernel's
+max deviation from it; kernel PERFORMANCE is assessed structurally via the
+dry-run roofline (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_call
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_oracle)
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.mamba2_ssd import ssd, ssd_ref
+from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def run() -> None:
+    # flash attention @ prefill-like shape
+    B, S, H, K, hd = 1, 512, 8, 2, 64
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    ref_fn = jax.jit(lambda a, b, c: jnp.moveaxis(flash_attention_ref(
+        jnp.moveaxis(a, 2, 1), jnp.moveaxis(b, 2, 1),
+        jnp.moveaxis(c, 2, 1)), 1, 2))
+    t = time_call(ref_fn, q, k, v)
+    out = flash_attention(q, k, v, q_blk=128, kv_blk=128)
+    err = float(jnp.abs(out - ref_fn(q, k, v)).max())
+    emit("flash_attention_ref_512", t, f"kernel_max_err={err:.2e}")
+
+    # decode attention @ long-cache shape
+    B, Smax, H, K, hd = 4, 4096, 8, 2, 64
+    ks = jax.random.split(RNG, 4)
+    q1 = jax.random.normal(ks[0], (B, H, hd))
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd))
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd))
+    lengths = jnp.full((B,), Smax - 3)
+    oracle = jax.jit(decode_attention_oracle)
+    t = time_call(oracle, q1, ck, cv, lengths)
+    err = float(jnp.abs(decode_attention(q1, ck, cv, lengths)
+                        - oracle(q1, ck, cv, lengths)).max())
+    emit("decode_attention_ref_4096", t, f"kernel_max_err={err:.2e}")
+
+    # rwkv6 wkv @ chunked-prefill shape
+    B, T, H, N = 1, 256, 4, 64
+    ks = jax.random.split(RNG, 6)
+    r = jax.random.normal(ks[0], (B, T, H, N))
+    kk = jax.random.normal(ks[1], (B, T, H, N))
+    vv = jax.random.normal(ks[2], (B, T, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) - 1.0)
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    s0 = jnp.zeros((B, H, N, N))
+    ref = jax.jit(lambda *a: wkv6_ref(*a))
+    args = tuple(jnp.moveaxis(t_, 1, 2) for t_ in (r, kk, vv, logw)) + (u, s0)
+    t = time_call(ref, *args)
+    y, _ = wkv6(r, kk, vv, logw, u, s0, chunk=32)
+    yr, _ = ref(*args)
+    err = float(jnp.abs(y - jnp.moveaxis(yr, 2, 1)).max())
+    emit("rwkv6_wkv_ref_256", t, f"kernel_max_err={err:.2e}")
+
+    # mamba2 ssd
+    B, T, H, P, N = 1, 256, 4, 64, 64
+    ks = jax.random.split(RNG, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    h0 = jnp.zeros((B, H, P, N))
+    ref = jax.jit(ssd_ref)
+    t = time_call(ref, x, dt, A, Bm, Cm, h0)
+    y, _ = ssd(x, dt, A, Bm, Cm, h0, chunk=64)
+    yr, _ = ref(x, dt, A, Bm, Cm, h0)
+    scale = float(jnp.abs(yr).max()) + 1.0
+    err = float(jnp.abs(y - yr).max()) / scale
+    emit("mamba2_ssd_ref_256", t, f"kernel_rel_err={err:.2e}")

@@ -1,0 +1,47 @@
+"""REST endpoint throughput: concurrent clients against one FlexServe
+endpoint (the Gunicorn-workers story on the stdlib threaded server)."""
+
+from __future__ import annotations
+
+import concurrent.futures
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import Ensemble, EnsembleMember, ModelRegistry
+from repro.models import build_model
+from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+
+
+def run() -> None:
+    cfg = reduce_for_smoke(get_config("yi-9b"))
+    model = build_model(cfg)
+    registry = ModelRegistry()
+    members = []
+    for i in range(2):
+        params = model.init(jax.random.PRNGKey(i))
+        registry.register(f"m{i}", model, params)
+
+        def apply(p, batch, _m=model):
+            return _m.forward(p, batch)[:, -1, :8]
+
+        members.append(EnsembleMember(f"m{i}", apply, params, 8))
+    app = FlexServeApp(registry, Ensemble(members, max_batch=8))
+    srv = FlexServeServer(app).start()
+    host, port = srv.address
+    client = FlexServeClient(host, port)
+    payload = {"tokens": np.ones((4, 16), np.int32).tolist()}
+    client.infer(payload)                      # warm the jit cache
+
+    for workers in (1, 4):
+        n_req = 24
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(workers) as ex:
+            list(ex.map(lambda _: client.infer(payload), range(n_req)))
+        dt = time.perf_counter() - t0
+        emit(f"rest_throughput_w{workers}", dt / n_req * 1e6,
+             f"req_per_s={n_req / dt:.1f}")
+    srv.stop()

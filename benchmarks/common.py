@@ -1,0 +1,42 @@
+"""Benchmark helpers: timing + CSV rows.
+
+The paper has no numeric tables (capability claims only), so each paper
+claim gets one benchmark: C1 ensemble-in-one-forward, C2 shared memory,
+C3 flexible batching; plus the production extensions (continuous batching)
+and kernel oracles.  CSV schema: name,us_per_call,derived.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+ROWS: List[Tuple[str, float, str]] = []
+
+
+def time_call(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+              **kwargs) -> float:
+    """Median wall time per call in microseconds (blocks on jax arrays)."""
+    for _ in range(warmup):
+        _block(fn(*args, **kwargs))
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        _block(fn(*args, **kwargs))
+        samples.append((time.perf_counter() - t0) * 1e6)
+    samples.sort()
+    return samples[len(samples) // 2]
+
+
+def _block(out):
+    for leaf in jax.tree_util.tree_leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,35 @@
+"""Benchmark driver — one benchmark per paper claim + production extensions.
+
+Prints ``name,us_per_call,derived`` CSV rows (deliverable d):
+  C1/C2  bench_ensemble   — fused multi-model forward + shared-memory ledger
+  C3     bench_flexbatch  — variable batch sizes, bounded jit cache
+  REST   bench_server     — endpoint throughput under concurrent clients
+  +      bench_scheduler  — continuous vs static batching
+  +      bench_kernels    — kernel oracles (perf is roofline-structural;
+                            this container is CPU-only)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> int:
+    from benchmarks import (bench_ensemble, bench_flexbatch, bench_kernels,
+                            bench_scheduler, bench_server)
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in (bench_ensemble, bench_flexbatch, bench_server,
+                bench_scheduler, bench_kernels):
+        try:
+            mod.run()
+        except Exception:
+            failures += 1
+            print(f"# {mod.__name__} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == '__main__':
+    sys.exit(main())

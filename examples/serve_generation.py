@@ -1,0 +1,67 @@
+"""End-to-end serving driver (deliverable b): serve a small model with
+batched generation requests through the full stack — REST endpoint,
+flexible batching, and the continuous-batching scheduler.
+
+    PYTHONPATH=src python examples/serve_generation.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_for_smoke
+from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
+                        ModelRegistry)
+from repro.models import build_model
+from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+
+
+def main():
+    cfg = reduce_for_smoke(get_config("h2o-danube-1.8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = InferenceEngine(model, params, max_len=128, max_batch=8)
+
+    registry = ModelRegistry()
+    registry.register("danube-smoke", model, params)
+    server = FlexServeServer(FlexServeApp(registry, None, engine)).start()
+    client = FlexServeClient(*server.address)
+
+    # --- batched requests over REST ---------------------------------------
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, 400, rng.integers(2, 9)).tolist()
+               for _ in range(5)]
+    t0 = time.perf_counter()
+    resp = client.generate(prompts, max_new_tokens=8)
+    dt = time.perf_counter() - t0
+    print(f"REST generate: {len(prompts)} prompts x 8 tokens "
+          f"in {dt:.2f}s ({resp['steps']} decode steps)")
+    for p, o in zip(prompts, resp["outputs"]):
+        print(f"  prompt={p} -> {o}")
+
+    # --- continuous batching: requests arrive while others decode -----------
+    sched = ContinuousBatchingScheduler(engine, num_slots=4)
+    arrivals = [(0, 12), (0, 4), (1, 9), (2, 3), (2, 15), (4, 6)]
+    reqs = []
+    step = 0
+    ai = 0
+    while ai < len(arrivals) or not sched.idle():
+        while ai < len(arrivals) and arrivals[ai][0] <= step:
+            _, budget = arrivals[ai]
+            prompt = rng.integers(1, 400, 4).tolist()
+            reqs.append((sched.submit(prompt, max_new_tokens=budget),
+                         budget))
+            ai += 1
+        sched.step()
+        step += 1
+    ok = all(r.done and len(r.output) == b for r, b in reqs)
+    print(f"continuous batching: {len(reqs)} staggered requests finished "
+          f"in {sched.steps} decode steps (all correct: {ok})")
+    assert ok
+    server.stop()
+    print("serve_generation OK")
+
+
+if __name__ == "__main__":
+    main()

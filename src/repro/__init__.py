@@ -1,0 +1,4 @@
+"""repro: FlexServe-JAX - multi-pod JAX serving framework with flexible
+batching and multi-model ensembles (reproduction of Verenich et al. 2020)."""
+
+__version__ = "0.1.0"

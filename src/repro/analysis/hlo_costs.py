@@ -1,0 +1,415 @@
+"""Loop-aware cost extraction from optimized (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE — for
+scan-over-layers models that under-reports FLOPs/bytes/collectives by the
+layer count.  This parser walks the HLO computation graph, multiplies each
+computation's costs by the product of enclosing loop trip counts (XLA
+annotates ``backend_config={"known_trip_count":{"n":L}}``), and reports:
+
+  * flops            — 2 * prod(result dims) * contraction size, per dot
+  * memory bytes     — operands+result of top-level ops (fusion bodies are
+                       VMEM-internal and skipped), an HBM-traffic model
+  * collective bytes — per kind, operand sizes of all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute
+
+All values are PER-DEVICE (the SPMD partition is what XLA prints).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_NAME_RE = re.compile(r"^\s*(ROOT\s+)?(%[\w.\-]+)\s*=\s*")
+_OP_RE = re.compile(r"\s*([\w\-]+)\(")
+
+
+def _parse_instr(line: str):
+    """Split '%name = <type> op(...)' robustly — tuple types contain parens
+    and '/*index=N*/' comments that defeat a single regex."""
+    m = _NAME_RE.match(line)
+    if not m:
+        return None
+    name = m.group(2)
+    rest = line[m.end():]
+    if rest.startswith("("):                 # tuple type: match parens
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        type_str, rest2 = rest[:end + 1], rest[end + 1:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, rest2 = rest[:sp], rest[sp:]
+    m2 = _OP_RE.match(rest2)
+    if not m2:
+        return None
+    return name, type_str, m2.group(1)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?(%[\w.\-]+)\s*\(.*\)\s*->.*{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"?(\d+)"?\}')
+_CALLS_RE = re.compile(r"calls=(%[\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=(%[\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=(%[\w.\-]+), body=(%[\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_ZERO_COST_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "while", "conditional", "call",
+}
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "type_str", "op", "line", "is_root")
+
+    def __init__(self, name, type_str, op, line):
+        self.name, self.type_str, self.op, self.line = name, type_str, op, line
+        self.is_root = line.lstrip().startswith("ROOT ")
+
+
+def _parse_computations(hlo: str) -> Dict[str, List[Instr]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry: Optional[str] = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        cm = _COMP_RE.match(line)
+        if cm:
+            cur = cm.group(2)
+            comps[cur] = []
+            if cm.group(1):
+                entry = cur
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        parsed = _parse_instr(line)
+        if parsed:
+            comps[cur].append(Instr(*parsed, line))
+    comps["__entry__"] = comps.get(entry, [])
+    comps["__entry_name__"] = entry          # type: ignore
+    return comps
+
+
+def _operand_names(line: str, op: str) -> List[str]:
+    idx = line.find(op + "(")
+    if idx < 0:
+        return []
+    args = line[idx + len(op) + 1:]
+    # stop at the matching close paren (greedy regex over the arg span)
+    depth = 1
+    end = 0
+    for i, ch in enumerate(args):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return re.findall(r"%[\w.\-]+", args[:end])
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+_TRIVIAL_BODY_OPS = {"parameter", "convert", "bitcast"}
+
+
+def _is_pure_convert_fusion(ins: Instr, comps) -> bool:
+    """True for fusions that only change dtype/layout (XLA:CPU materializes
+    bf16->f32 copies around every dot; TPU consumes bf16 natively, so these
+    carry no HBM traffic on the target)."""
+    cm = _CALLS_RE.search(ins.line)
+    if not cm or cm.group(1) not in comps:
+        return False
+    body = comps[cm.group(1)]
+    return all(b.op in _TRIVIAL_BODY_OPS for b in body)
+
+
+def _convert_derived(ins: Instr, comps, instrs) -> bool:
+    """True if an f32 collective's operand is a bf16->f32 convert product
+    (the wire traffic on the TPU target would be bf16)."""
+    if "f32[" not in ins.type_str:
+        return False
+    ops_ = _operand_names(ins.line, ins.op)
+    if not ops_:
+        return False
+    by_name = {b.name: b for b in instrs}
+    src = by_name.get(ops_[0])
+    if src is None:
+        return False
+    if src.op == "fusion" and _is_pure_convert_fusion(src, comps):
+        return True
+    return src.op == "convert" and "bf16" in src.line
+
+
+def _fusion_bytes(ins: Instr, comps, sizes, result: int) -> int:
+    """HBM bytes for one fusion op, looking inside its body:
+
+    * an operand consumed ONLY by slice/dynamic-slice/gather ops is read
+      slice-sized, not full-sized (XLA fuses cache-lookups this way);
+    * a root dynamic-update-slice writes only the update region in place
+      (the canonical KV-cache-append fusion), not the full buffer.
+    """
+    cm = _CALLS_RE.search(ins.line)
+    operands = _operand_names(ins.line, ins.op)
+    if not cm or cm.group(1) not in comps:
+        return result + sum(sizes.get(o, 0) for o in operands)
+    body = comps[cm.group(1)]
+    params: Dict[int, Instr] = {}
+    for b in body:
+        if b.op == "parameter":
+            pm = _PARAM_IDX_RE.search(b.line)
+            if pm:
+                params[int(pm.group(1))] = b
+    body_sizes = {b.name: _type_bytes(b.type_str) for b in body}
+
+    read = 0
+    for i, opnd in enumerate(operands):
+        p = params.get(i)
+        full = sizes.get(opnd, 0)
+        if p is None:
+            read += full
+            continue
+        consumers = [b for b in body
+                     if b is not p and p.name in b.line.split("(", 1)[-1]]
+        if consumers and all(b.op in ("dynamic-slice", "slice", "gather")
+                             for b in consumers):
+            read += sum(body_sizes.get(b.name, 0) for b in consumers)
+        else:
+            read += full
+
+    root = next((b for b in body if b.is_root), None)
+    # resolve through convert/bitcast chains: CPU XLA wraps bf16 scatter/DUS
+    # in f32 convert pairs (TPU updates bf16 in place — model the target)
+    by_name = {b.name: b for b in body}
+    hops = 0
+    while root is not None and root.op in ("convert", "bitcast") and hops < 4:
+        ops_ = _operand_names(root.line, root.op)
+        root = by_name.get(ops_[0]) if ops_ else None
+        hops += 1
+
+    def _discount_base(base_name: str) -> None:
+        # the in-place-updated buffer was counted as a full read — undo
+        nonlocal read
+        b = by_name.get(base_name)
+        while b is not None and b.op in ("convert", "bitcast"):
+            ops2 = _operand_names(b.line, b.op)
+            b = by_name.get(ops2[0]) if ops2 else None
+        if b is not None and b.op == "parameter":
+            pm = _PARAM_IDX_RE.search(b.line)
+            if pm and int(pm.group(1)) < len(operands):
+                read -= sizes.get(operands[int(pm.group(1))], 0)
+
+    if root is not None and root.op == "dynamic-update-slice":
+        ops_ = _operand_names(root.line, root.op)
+        upd = body_sizes.get(ops_[1], 0) if len(ops_) > 1 else 0
+        write = 2 * upd          # read+write of the updated region
+        if ops_:
+            _discount_base(ops_[0])
+    elif root is not None and root.op == "scatter":
+        ops_ = _operand_names(root.line, root.op)
+        upd = body_sizes.get(ops_[-1], 0) if ops_ else 0
+        write = 2 * upd
+        if ops_:
+            _discount_base(ops_[0])
+    else:
+        write = result
+    return max(read, 0) + write
+
+
+def analyze_hlo(hlo: str) -> Dict[str, object]:
+    comps = _parse_computations(hlo)
+    entry_name = comps.pop("__entry_name__")
+    comps.pop("__entry__")
+
+    # symbol table: instruction -> bytes, per computation (names are unique
+    # module-wide in practice; collisions resolve to last writer, fine here)
+    sizes: Dict[str, int] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            sizes[ins.name] = _type_bytes(ins.type_str)
+
+    # ---- multipliers via BFS over the call graph ---------------------------
+    mult: Dict[str, float] = {entry_name: 1.0}
+    fusion_body: Dict[str, bool] = {c: False for c in comps}
+    queue = [entry_name]
+    seen = set()
+    while queue:
+        cname = queue.pop()
+        if cname in seen or cname not in comps:
+            continue
+        seen.add(cname)
+        m = mult.get(cname, 1.0)
+        for ins in comps[cname]:
+            callees: List[Tuple[str, float, bool]] = []
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                trips = float(tm.group(1)) if tm else 1.0
+                cb = _COND_BODY_RE.search(ins.line)
+                if cb:
+                    callees.append((cb.group(1), trips, False))
+                    callees.append((cb.group(2), trips, False))
+            elif ins.op == "fusion":
+                cm = _CALLS_RE.search(ins.line)
+                if cm:
+                    callees.append((cm.group(1), 1.0, True))
+            elif ins.op in ("call", "custom-call", "map", "reduce",
+                            "reduce-window", "sort", "scatter",
+                            "select-and-scatter", "all-reduce"):
+                am = _TO_APPLY_RE.search(ins.line)
+                if am:
+                    callees.append((am.group(1), 1.0, True))
+            elif ins.op == "conditional":
+                bm = _BRANCHES_RE.search(ins.line)
+                if bm:
+                    for b in re.findall(r"%[\w.\-]+", bm.group(1)):
+                        callees.append((b, 1.0, False))
+            for callee, k, is_fusion in callees:
+                nm = m * k
+                if mult.get(callee, 0.0) < nm:
+                    mult[callee] = nm
+                    seen.discard(callee)
+                if is_fusion:
+                    fusion_body[callee] = True
+                queue.append(callee)
+
+    # ---- walk instructions --------------------------------------------------
+    flops = 0.0
+    mem_bytes = 0.0
+    coll_bytes = {k: 0.0 for k in _COLLECTIVES}
+    coll_counts = {k: 0 for k in _COLLECTIVES}
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = fusion_body.get(cname, False)
+        for ins in instrs:
+            # FLOPs: dots anywhere (incl. fusion bodies)
+            if ins.op in ("dot", "convolution"):
+                dims = _result_dims(ins.type_str)
+                out_elems = 1
+                for d in dims:
+                    out_elems *= d
+                contract = 1
+                lm = _LHS_CONTRACT_RE.search(ins.line)
+                ops = _operand_names(ins.line, ins.op)
+                if lm and ops:
+                    lhs_dims_m = None
+                    # find lhs type from the symbol table line is not enough;
+                    # reparse the defining instruction's type
+                    lhs_name = ops[0]
+                    for other in instrs:
+                        if other.name == lhs_name:
+                            lhs_dims_m = _result_dims(other.type_str)
+                            break
+                    if lhs_dims_m is None:
+                        # defined in another computation (rare) — search all
+                        for oi in comps.values():
+                            for other in oi:
+                                if other.name == lhs_name:
+                                    lhs_dims_m = _result_dims(other.type_str)
+                                    break
+                            if lhs_dims_m:
+                                break
+                    if lhs_dims_m:
+                        for ci in lm.group(1).split(","):
+                            if ci:
+                                idx = int(ci)
+                                if idx < len(lhs_dims_m):
+                                    contract *= lhs_dims_m[idx]
+                flops += 2.0 * out_elems * contract * m
+
+            # collectives (never inside fusion bodies).  Traffic model:
+            # max(operands, result) — an all-gather MOVES its result bytes,
+            # a reduce-scatter its operand bytes, all-reduce either.
+            base = None
+            for c in _COLLECTIVES:
+                if ins.op == c or (ins.op.startswith(c + "-")
+                                   and not ins.op.endswith("-done")):
+                    base = c
+                    break
+            if base is not None:
+                op_bytes = sum(sizes.get(o, 0)
+                               for o in _operand_names(ins.line, ins.op))
+                nbytes = max(op_bytes, _type_bytes(ins.type_str))
+                if _convert_derived(ins, comps, instrs):
+                    nbytes //= 2     # CPU-only bf16->f32 dot promotion
+                coll_bytes[base] += nbytes * m
+                coll_counts[base] += 1
+                continue
+
+            # memory traffic: top-level ops only (fusion internals are VMEM)
+            if in_fusion or ins.op in _ZERO_COST_OPS:
+                continue
+            result = _type_bytes(ins.type_str)
+            if ins.op in ("dynamic-slice", "slice", "gather"):
+                # reads only the sliced region, not the whole operand
+                nbytes = 2 * result
+            elif ins.op == "dynamic-update-slice":
+                # in-place: touches only the update region (read+write)
+                ops_ = _operand_names(ins.line, ins.op)
+                upd = sizes.get(ops_[1], 0) if len(ops_) > 1 else 0
+                nbytes = 2 * upd
+            elif ins.op == "scatter":
+                ops_ = _operand_names(ins.line, ins.op)
+                upd = sizes.get(ops_[-1], 0) if ops_ else 0
+                nbytes = 2 * upd
+            elif ins.op == "fusion":
+                if _is_pure_convert_fusion(ins, comps):
+                    continue     # CPU f32-dot promotion; TPU fuses bf16
+                nbytes = _fusion_bytes(ins, comps, sizes, result)
+            else:
+                nbytes = result + sum(
+                    sizes.get(o, 0)
+                    for o in _operand_names(ins.line, ins.op))
+            mem_bytes += nbytes * m
+
+    return {
+        "flops": flops,
+        "memory_bytes": mem_bytes,
+        "collectives": {"bytes": coll_bytes, "counts": coll_counts,
+                        "total_bytes": sum(coll_bytes.values())},
+    }

@@ -1,0 +1,77 @@
+"""Baseline-vs-optimized roofline comparison (EXPERIMENTS.md §Perf).
+
+Reads two dry-run result directories (e.g. results/dryrun_base with
+--opts none, results/dryrun_opt with --opts all) and prints per-pair
+deltas of the three roofline terms + the dominant-term verdict.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, Optional
+
+from repro.analysis import roofline
+
+
+def _load(dir_path: str) -> Dict[tuple, roofline.RooflineRow]:
+    out = {}
+    for rec in roofline.load_results(dir_path):
+        row = roofline.analyze(rec)
+        if row is not None:
+            out[(row.arch, row.shape, row.mesh)] = row
+    return out
+
+
+def _fmt(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s "
+    if x >= 1e-3:
+        return f"{x * 1e3:7.2f}ms"
+    return f"{x * 1e6:7.1f}us"
+
+
+def compare(base_dir: str, opt_dir: str, mesh: Optional[str] = "pod16x16",
+            only: Optional[list] = None) -> str:
+    base = _load(base_dir)
+    opti = _load(opt_dir)
+    hdr = (f"{'arch x shape':44s} {'term':9s} {'baseline':10s} "
+           f"{'optimized':10s} {'gain':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for key in sorted(base):
+        if mesh and key[2] != mesh:
+            continue
+        if only and (key[0], key[1]) not in only:
+            continue
+        b, o = base[key], opti.get(key)
+        if o is None:
+            continue
+        name = f"{key[0]} x {key[1]}"
+        for term in ("compute_s", "memory_s", "collective_s"):
+            bv, ov = getattr(b, term), getattr(o, term)
+            gain = bv / ov if ov > 0 else float("inf")
+            mark = " <-- dominant" if term[:-2] == b.dominant else ""
+            lines.append(f"{name:44s} {term[:-2]:9s} {_fmt(bv)} {_fmt(ov)} "
+                         f"{gain:6.2f}x{mark}")
+            name = ""
+        bb = (b.bytes_per_chip or 0) / 2 ** 30
+        ob = (o.bytes_per_chip or 0) / 2 ** 30
+        lines.append(f"{'':44s} {'GiB/chip':9s} {bb:9.2f} {ob:10.2f} "
+                     f"{'fits Y' if o.fits_hbm else 'fits N'}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="results/dryrun_base")
+    ap.add_argument("--opt", default="results/dryrun_opt")
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args(argv)
+    print(compare(args.base, args.opt, mesh=args.mesh))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -1,0 +1,109 @@
+"""InferenceEngine: bucketed prefill + jitted autoregressive decode.
+
+One engine serves one model (the Ensemble wraps several).  The engine owns
+the decode state (KV cache / recurrent state), donates it through the jitted
+decode step so caches update in place, and buckets prompt lengths and batch
+sizes so arbitrary client requests hit a bounded jit cache (paper §2.3 on
+XLA terms).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.batching import BucketSpec, pad_sequences
+from repro.models.build import Model
+
+
+@dataclass
+class GenerationResult:
+    tokens: List[List[int]]            # new tokens per row
+    prompt_lengths: List[int]
+    steps: int
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params, *, max_len: int = 2048,
+                 max_batch: int = 8, window: Optional[int] = None,
+                 donate_state: bool = True):
+        self.model = model
+        self.params = params
+        self.max_len = max_len
+        self.window = window
+        self.batch_buckets = BucketSpec.pow2(max_batch)
+        self.seq_buckets = BucketSpec.pow2(max_len, min_size=16)
+
+        kw = {}
+        if window is not None:
+            kw["window"] = window
+        self._prefill = jax.jit(
+            functools.partial(model.prefill, **kw))
+        self._decode = jax.jit(
+            functools.partial(model.decode, **kw),
+            donate_argnums=(2,) if donate_state else ())
+
+    # --- API -----------------------------------------------------------------
+
+    def new_state(self, batch: int):
+        return self.model.init_state(batch, self.max_len)
+
+    def prefill(self, batch: Dict[str, Any], state):
+        return self._prefill(self.params, batch, state)
+
+    def decode(self, token, state):
+        return self._decode(self.params, token, state)
+
+    def generate(self, prompts: Sequence[Sequence[int]], *,
+                 max_new_tokens: int = 32, eos_id: Optional[int] = None,
+                 extras: Optional[Dict[str, Any]] = None) -> GenerationResult:
+        """Greedy generation for a variable-size batch of variable-length
+        prompts. Batch and prompt length are bucketed; rows beyond the real
+        batch are masked out of the result."""
+        n = len(prompts)
+        B = self.batch_buckets.bucket_for(n)
+        tokens, lengths = pad_sequences(prompts, self.seq_buckets)
+        tokens = np.asarray(pad_batch_rows(tokens, B))
+        lengths = np.asarray(pad_batch_rows(lengths, B, fill=1))
+        state = self.new_state(B)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths)}
+        if extras:
+            batch.update({k: _pad_rows(v, B) for k, v in extras.items()})
+        logits, state = self.prefill(batch, state)
+
+        out: List[List[int]] = [[] for _ in range(n)]
+        done = np.zeros((n,), bool)
+        steps = 0
+        for _ in range(max_new_tokens):
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
+            host = np.asarray(next_tok)
+            for i in range(n):
+                if not done[i]:
+                    out[i].append(int(host[i]))
+                    if eos_id is not None and host[i] == eos_id:
+                        done[i] = True
+            steps += 1
+            if done.all():
+                break
+            logits, state = self.decode(next_tok, state)
+        return GenerationResult(tokens=out,
+                                prompt_lengths=[len(p) for p in prompts],
+                                steps=steps)
+
+
+def pad_batch_rows(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
+    if arr.shape[0] == n:
+        return arr
+    pad = [(0, n - arr.shape[0])] + [(0, 0)] * (arr.ndim - 1)
+    return np.pad(arr, pad, constant_values=fill)
+
+
+def _pad_rows(x, n):
+    x = np.asarray(x)
+    return jnp.asarray(pad_batch_rows(x, n))

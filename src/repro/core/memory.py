@@ -1,0 +1,107 @@
+"""Shared-device memory accounting (paper §2.2).
+
+The paper's point: deployed models are usually much smaller than
+accelerator memory, so loading multiple models into ONE device's memory
+amortizes the hardware.  On a TPU mesh the analogue is one HBM pool per
+chip shared by every ensemble member's (sharded) params plus KV caches and
+activation headroom.  The MemoryLedger proves an ensemble + cache
+configuration fits BEFORE any allocation, and is cross-checked against
+``compiled.memory_analysis()`` in the dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+# TPU v5e
+HBM_PER_CHIP = 16 * 1024 ** 3          # 16 GiB
+DEFAULT_HEADROOM = 0.10                # reserve 10% for XLA scratch
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of arrays or ShapeDtypeStructs."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        size = 1
+        for d in leaf.shape:
+            size *= d
+        total += size * jnp.dtype(leaf.dtype).itemsize
+    return total
+
+
+@dataclass
+class MemoryEntry:
+    name: str
+    kind: str          # "params" | "cache" | "activations"
+    total_bytes: int
+    shard_factor: int  # how many chips the entry is divided across
+
+    @property
+    def bytes_per_chip(self) -> int:
+        return -(-self.total_bytes // self.shard_factor)
+
+
+@dataclass
+class MemoryLedger:
+    """HBM accounting for one mesh-resident serving/training program."""
+
+    n_chips: int
+    hbm_per_chip: int = HBM_PER_CHIP
+    headroom: float = DEFAULT_HEADROOM
+    entries: List[MemoryEntry] = field(default_factory=list)
+
+    def add_params(self, name: str, params, *,
+                   shard_factor: Optional[int] = None) -> MemoryEntry:
+        e = MemoryEntry(name, "params", tree_bytes(params),
+                        shard_factor or self.n_chips)
+        self.entries.append(e)
+        return e
+
+    def add_cache(self, name: str, state, *,
+                  shard_factor: Optional[int] = None) -> MemoryEntry:
+        e = MemoryEntry(name, "cache", tree_bytes(state),
+                        shard_factor or self.n_chips)
+        self.entries.append(e)
+        return e
+
+    def add_activations(self, name: str, nbytes: int, *,
+                        shard_factor: Optional[int] = None) -> MemoryEntry:
+        e = MemoryEntry(name, "activations", nbytes,
+                        shard_factor or self.n_chips)
+        self.entries.append(e)
+        return e
+
+    @property
+    def bytes_per_chip(self) -> int:
+        return sum(e.bytes_per_chip for e in self.entries)
+
+    @property
+    def budget_per_chip(self) -> int:
+        return int(self.hbm_per_chip * (1 - self.headroom))
+
+    def fits(self) -> bool:
+        return self.bytes_per_chip <= self.budget_per_chip
+
+    def utilization(self) -> float:
+        return self.bytes_per_chip / self.hbm_per_chip
+
+    def report(self) -> str:
+        lines = [f"MemoryLedger: {self.n_chips} chips x "
+                 f"{self.hbm_per_chip / 2**30:.0f} GiB HBM "
+                 f"(budget {self.budget_per_chip / 2**30:.1f} GiB/chip)"]
+        for e in self.entries:
+            lines.append(
+                f"  {e.kind:12s} {e.name:32s} "
+                f"{e.total_bytes / 2**30:9.2f} GiB total  "
+                f"{e.bytes_per_chip / 2**20:9.1f} MiB/chip "
+                f"(/{e.shard_factor})")
+        lines.append(
+            f"  TOTAL {self.bytes_per_chip / 2**30:.2f} GiB/chip  "
+            f"({100 * self.utilization():.1f}% of HBM)  "
+            f"{'FITS' if self.fits() else 'DOES NOT FIT'}")
+        return "\n".join(lines)

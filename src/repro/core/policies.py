@@ -1,0 +1,101 @@
+"""Ensemble sensitivity policies (paper §2.1).
+
+The paper's motivating example: n binary detectors for the same target
+object; for *maximum sensitivity* the combined output is the OR of the
+member outputs (y' = y_1 | y_2 | ... | y_n) — one positive member makes
+the ensemble positive.  Clients choose the policy per request, so the
+ensemble's sensitivity (false-negative rate) is adjusted dynamically
+without redeploying models.
+
+Two input kinds:
+  binary  — member outputs (M, B) bool/int (presence of the target)
+  probs   — member outputs (M, B, C) class probabilities
+
+All policies are pure jnp and jit-safe.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+
+# --- binary policies (M, B) -> (B,) -----------------------------------------
+
+
+def policy_or(outputs, weights=None):
+    """Maximum sensitivity: positive if ANY member is positive."""
+    return jnp.any(outputs.astype(bool), axis=0)
+
+
+def policy_and(outputs, weights=None):
+    """Maximum specificity: positive only if ALL members agree."""
+    return jnp.all(outputs.astype(bool), axis=0)
+
+
+def policy_majority(outputs, weights=None):
+    """Positive if more than half the members are positive."""
+    M = outputs.shape[0]
+    return jnp.sum(outputs.astype(jnp.int32), axis=0) * 2 > M
+
+
+def policy_weighted(outputs, weights):
+    """Weighted vote with per-member reliabilities; threshold 0.5."""
+    w = weights / jnp.sum(weights)
+    return jnp.einsum("m,mb->b", w, outputs.astype(jnp.float32)) > 0.5
+
+
+def policy_at_least_k(outputs, k: int):
+    return jnp.sum(outputs.astype(jnp.int32), axis=0) >= k
+
+
+# --- probability policies (M, B, C) -> (B,) class ids ------------------------
+
+
+def policy_soft_vote(probs, weights=None):
+    """Average member distributions, then argmax."""
+    if weights is not None:
+        w = (weights / jnp.sum(weights))[:, None, None]
+        return jnp.argmax(jnp.sum(probs * w, axis=0), axis=-1)
+    return jnp.argmax(jnp.mean(probs, axis=0), axis=-1)
+
+
+def policy_hard_vote(probs, weights=None):
+    """Each member votes its argmax; plurality wins (ties -> lowest id)."""
+    M, B, C = probs.shape
+    votes = jnp.argmax(probs, axis=-1)                     # (M, B)
+    counts = jnp.sum(votes[:, :, None] == jnp.arange(C)[None, None, :],
+                     axis=0)                               # (B, C)
+    return jnp.argmax(counts, axis=-1)
+
+
+def policy_max_confidence(probs, weights=None):
+    """The single most confident member decides."""
+    conf = jnp.max(probs, axis=-1)                         # (M, B)
+    best = jnp.argmax(conf, axis=0)                        # (B,)
+    cls = jnp.argmax(probs, axis=-1)                       # (M, B)
+    return jnp.take_along_axis(cls, best[None], axis=0)[0]
+
+
+BINARY_POLICIES: Dict[str, Callable] = {
+    "or": policy_or,
+    "and": policy_and,
+    "majority": policy_majority,
+    "weighted": policy_weighted,
+}
+
+PROB_POLICIES: Dict[str, Callable] = {
+    "soft_vote": policy_soft_vote,
+    "hard_vote": policy_hard_vote,
+    "max_confidence": policy_max_confidence,
+}
+
+
+def get_policy(name: str) -> Callable:
+    if name in BINARY_POLICIES:
+        return BINARY_POLICIES[name]
+    if name in PROB_POLICIES:
+        return PROB_POLICIES[name]
+    raise KeyError(f"unknown policy {name!r}; available: "
+                   f"{sorted(BINARY_POLICIES) + sorted(PROB_POLICIES)}")

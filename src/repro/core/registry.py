@@ -1,0 +1,68 @@
+"""Model registry: names -> (config, Model, params) for the serving layer.
+
+One registry instance backs one endpoint process; the REST server exposes
+its contents at /v1/models and routes inference to members by name.
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.models.build import Model
+
+
+@dataclass
+class RegisteredModel:
+    name: str
+    model: Model
+    params: Any
+    meta: Dict[str, Any]
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._models: Dict[str, RegisteredModel] = {}
+        self._lock = threading.Lock()
+
+    def register(self, name: str, model: Model, params,
+                 **meta) -> RegisteredModel:
+        with self._lock:
+            if name in self._models:
+                raise ValueError(f"model {name!r} already registered")
+            rm = RegisteredModel(name, model, params, meta)
+            self._models[name] = rm
+            return rm
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            self._models.pop(name, None)
+
+    def get(self, name: str) -> RegisteredModel:
+        try:
+            return self._models[name]
+        except KeyError:
+            raise KeyError(f"model {name!r} not deployed; available: "
+                           f"{sorted(self._models)}") from None
+
+    def names(self) -> List[str]:
+        return sorted(self._models)
+
+    def __len__(self) -> int:
+        return len(self._models)
+
+    def describe(self) -> List[Dict[str, Any]]:
+        out = []
+        for name in self.names():
+            rm = self._models[name]
+            cfg = rm.model.config
+            out.append({
+                "name": name,
+                "arch": cfg.name,
+                "family": cfg.family,
+                "params": cfg.param_count(),
+                "source": cfg.source,
+                **rm.meta,
+            })
+        return out

@@ -1,0 +1,153 @@
+"""Continuous batching scheduler (beyond-paper production extension of
+FlexServe's flexible batching, applied to autoregressive decode).
+
+A fixed pool of ``num_slots`` decode slots shares one batched KV cache.
+Requests are admitted into free slots as they arrive (single-row prefill +
+in-place insertion into the batched state), decoded together one token per
+step, and evicted individually on EOS / token budget — so the decode batch
+composition changes every step, exactly like vLLM-style serving.
+
+Slot insertion is family-agnostic: for each state leaf, the batch axis is
+located by comparing the slot-state shape against the pool-state shape.
+"""
+
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import InferenceEngine
+
+
+@dataclass
+class Request:
+    req_id: int
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    extras: Optional[Dict[str, Any]] = None
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _find_batch_axis(pool_shape, slot_shape) -> int:
+    for i, (a, b) in enumerate(zip(pool_shape, slot_shape)):
+        if a != b:
+            return i
+    return 0
+
+
+def insert_slot(pool_state, slot_state, slot: int):
+    """Write a batch=1 state into row ``slot`` of the pooled state."""
+
+    def one(pool, sub):
+        if pool.shape == sub.shape:        # scalar-per-batch edge (B==1 pool)
+            return sub
+        axis = _find_batch_axis(pool.shape, sub.shape)
+        start = [0] * pool.ndim
+        start[axis] = slot
+        return jax.lax.dynamic_update_slice(pool, sub.astype(pool.dtype),
+                                            tuple(start))
+
+    return jax.tree_util.tree_map(one, pool_state, slot_state)
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, engine: InferenceEngine, num_slots: int = 4):
+        self.engine = engine
+        self.num_slots = num_slots
+        self.state = engine.new_state(num_slots)
+        self.slots: List[Optional[Request]] = [None] * num_slots
+        self.queue: Deque[Request] = collections.deque()
+        self._next_id = itertools.count()
+        self._last_token = np.zeros((num_slots,), np.int32)
+        self._insert = jax.jit(insert_slot, static_argnums=(2,))
+        self.completed: List[Request] = []
+        self.steps = 0
+
+    # --- client API ------------------------------------------------------------
+
+    def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
+               eos_id: Optional[int] = None,
+               extras: Optional[Dict[str, Any]] = None) -> Request:
+        req = Request(next(self._next_id), list(prompt), max_new_tokens,
+                      eos_id, extras)
+        self.queue.append(req)
+        return req
+
+    @property
+    def active(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def idle(self) -> bool:
+        return self.active == 0 and not self.queue
+
+    # --- one scheduler tick ------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """Admit-from-queue + one decode step. Returns newly finished."""
+        self._admit()
+        finished: List[Request] = []
+        if self.active == 0:
+            return finished
+        token = jnp.asarray(self._last_token)
+        logits, self.state = self.engine.decode(token, self.state)
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.steps += 1
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(next_tok[b])
+            req.output.append(t)
+            if ((req.eos_id is not None and t == req.eos_id)
+                    or len(req.output) >= req.max_new_tokens):
+                req.done = True
+                finished.append(req)
+                self.completed.append(req)
+                self.slots[b] = None
+            else:
+                self._last_token[b] = t
+        return finished
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        for _ in range(max_steps):
+            if self.idle():
+                break
+            self.step()
+        return self.completed
+
+    # --- admission -----------------------------------------------------------------
+
+    def _admit(self) -> None:
+        for b in range(self.num_slots):
+            if self.slots[b] is not None or not self.queue:
+                continue
+            req = self.queue.popleft()
+            slot_state = self.engine.new_state(1)
+            # bucket the prompt length so admissions reuse jit specializations
+            S = self.engine.seq_buckets.bucket_for(len(req.prompt))
+            tokens = np.zeros((1, S), np.int32)
+            tokens[0, :len(req.prompt)] = req.prompt
+            batch = {
+                "tokens": jnp.asarray(tokens),
+                "lengths": jnp.asarray([len(req.prompt)], np.int32),
+            }
+            if req.extras:
+                batch.update({k: jnp.asarray(np.asarray(v)[None])
+                              for k, v in req.extras.items()})
+            logits, slot_state = self.engine.prefill(batch, slot_state)
+            first = int(np.asarray(jnp.argmax(logits, -1))[0])  # (1, V)
+            req.output.append(first)
+            self.state = self._insert(self.state, slot_state, b)
+            self.slots[b] = req
+            self._last_token[b] = first

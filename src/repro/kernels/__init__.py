@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the serving hot spots.
+
+Each kernel package ships three modules:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (layout handling, interpret switch)
+  ref.py    — pure-jnp oracle, written INDEPENDENTLY of the kernel math
+
+On this CPU container kernels are validated with interpret=True; on TPU the
+same code compiles natively.  ``interpret`` defaults to True when no TPU is
+present (see repro.kernels.common.default_interpret).
+"""
+
+from repro.kernels import common
+
+__all__ = ["common"]

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper: cache layout (B,Smax,K,hd) -> kernel layout."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.decode_attention.kernel import decode_attention_bkgd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "kv_blk", "interpret"))
+def decode_attention(q, cache_k, cache_v, lengths, *,
+                     window: Optional[int] = None, kv_blk: int = 512,
+                     interpret: Optional[bool] = None):
+    """q (B,H,hd); cache_k/v (B,Smax,K,hd); lengths (B,) -> (B,H,hd)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, H, hd = q.shape
+    Smax, K = cache_k.shape[1], cache_k.shape[2]
+    G = H // K
+    kv_blk = min(kv_blk, round_up(Smax, 8))
+    Sp = round_up(Smax, kv_blk)
+    qk = q.reshape(B, K, G, hd)
+    kt = jnp.pad(jnp.moveaxis(cache_k, 2, 1),
+                 ((0, 0), (0, 0), (0, Sp - Smax), (0, 0)))
+    vt = jnp.pad(jnp.moveaxis(cache_v, 2, 1),
+                 ((0, 0), (0, 0), (0, Sp - Smax), (0, 0)))
+    out = decode_attention_bkgd(qk, kt, vt, lengths.astype(jnp.int32),
+                                window=window, kv_blk=kv_blk,
+                                interpret=interpret)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,14 @@
+"""Oracle: one-token attention vs cache (reuses the model-layer reference,
+which is an independent einsum implementation)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.models.attention import decode_attention_ref
+
+
+def decode_attention_oracle(q, cache_k, cache_v, lengths, *,
+                            window: Optional[int] = None):
+    """q (B,H,hd); cache_k/v (B,Smax,K,hd); lengths (B,) -> (B,H,hd)."""
+    return decode_attention_ref(q, cache_k, cache_v, lengths, window=window)

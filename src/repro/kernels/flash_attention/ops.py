@@ -1,0 +1,44 @@
+"""Public jit'd wrapper: model layout (B,S,H,hd) -> kernel layout, padding."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, round_up
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_blk",
+                                             "kv_blk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None, lengths=None,
+                    q_blk: int = 128,
+                    kv_blk: int = 128, interpret: Optional[bool] = None):
+    """Flash attention in model layout: q (B,S,H,hd), k/v (B,S,K,hd).
+
+    Pads S up to the block size; padded keys are masked inside the kernel.
+    ``lengths`` (B,) enables ragged right-padded prefill batches.
+    Returns (B,S,H,hd) in q.dtype."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    q_blk = min(q_blk, round_up(S, 8))
+    kv_blk = min(kv_blk, round_up(S, 8))
+    Sq = round_up(S, q_blk)
+    Skv = round_up(S, kv_blk)
+    qt = jnp.moveaxis(q, 2, 1)                    # (B,H,S,hd)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    qt = jnp.pad(qt, ((0, 0), (0, 0), (0, Sq - S), (0, 0)))
+    kt = jnp.pad(kt, ((0, 0), (0, 0), (0, Skv - S), (0, 0)))
+    vt = jnp.pad(vt, ((0, 0), (0, 0), (0, Skv - S), (0, 0)))
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               seq_len=S, lengths=lengths,
+                               q_blk=q_blk, kv_blk=kv_blk,
+                               interpret=interpret)
+    return jnp.moveaxis(out[:, :, :S], 1, 2)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for flash attention (materializes the full score matrix)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        seq_len: Optional[int] = None, lengths=None):
+    """q (B,H,Sq,hd); k/v (B,K,Skv,hd). Naive masked softmax attention."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    seq_len = Skv if seq_len is None else seq_len
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) / (hd ** 0.5)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = kpos < seq_len
+    mask = jnp.broadcast_to(mask, (Sq, Skv))[None]
+    if lengths is not None:
+        mask = mask & (kpos[None] < lengths[:, None, None])
+    if causal:
+        mask = mask & (kpos <= qpos)[None]
+    if window is not None:
+        mask = mask & (kpos > qpos - window)[None]
+    mask = mask[:, None]                        # (B|1, 1, Sq, Skv)
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)   # rows with no valid key -> all zeros
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,4 @@
+from repro.kernels.mamba2_ssd.ops import ssd
+from repro.kernels.mamba2_ssd.ref import ssd_ref
+
+__all__ = ["ssd", "ssd_ref"]

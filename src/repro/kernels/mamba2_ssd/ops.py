@@ -1,0 +1,36 @@
+"""Public jit'd wrapper for the SSD kernel (model layout (B,T,H,P))."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.mamba2_ssd.kernel import ssd_bhtp
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(x, dt, A, Bm, Cm, h0, *, chunk: int = 128,
+        interpret: Optional[bool] = None):
+    """Model layout: x (B,T,H,P); dt (B,T,H); A (H,)<0; Bm/Cm (B,T,N);
+    h0 (B,H,P,N).  Returns (y (B,T,H,P), h_T).
+
+    Pads T to a chunk multiple with dt=0 (decay=1, no state change)."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, T, H, P = x.shape
+    Tp = -(-T // chunk) * chunk
+    pad3 = ((0, 0), (0, Tp - T), (0, 0))
+    xt = jnp.moveaxis(jnp.pad(x, pad3 + ((0, 0),)), 1, 2)
+    dtt = jnp.moveaxis(jnp.pad(dt, pad3), 1, 2)[..., None]     # (B,H,Tp,1)
+    dAt = dtt * A[None, :, None, None]
+    Bp = jnp.pad(Bm, pad3)
+    Cp = jnp.pad(Cm, pad3)
+    y, hT = ssd_bhtp(xt.astype(jnp.float32), dtt.astype(jnp.float32),
+                     dAt.astype(jnp.float32), Bp.astype(jnp.float32),
+                     Cp.astype(jnp.float32), h0.astype(jnp.float32),
+                     chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(y, 2, 1)[:, :T], hT

@@ -1,0 +1,24 @@
+"""Oracle: literal sequential SSD recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0):
+    """x (B,T,H,P); dt (B,T,H); A (H,); Bm/Cm (B,T,N); h0 (B,H,P,N).
+
+    y_t = C_t . h_t where h_t = exp(dt_t A) h_{t-1} + dt_t B_t x_t^T."""
+    def step(h, xs):
+        x_t, dt_t, B_t, C_t = xs                     # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dt_t * A)                    # (B,H)
+        h = decay[..., None, None] * h + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt_t, x_t, B_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t)
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(Bm, 1, 0), jnp.moveaxis(Cm, 1, 0))
+    h_T, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1), h_T

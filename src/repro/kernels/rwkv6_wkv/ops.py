@@ -1,0 +1,33 @@
+"""Public jit'd wrapper for the WKV-6 kernel (model layout (B,T,H,N))."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.rwkv6_wkv.kernel import wkv6_bhtn
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, logw, u, s0, *, chunk: int = 32,
+         interpret: Optional[bool] = None):
+    """Model layout: r/k/v/logw (B,T,H,N); u (H,N); s0 (B,H,N,N).
+
+    Returns (y (B,T,H,N), s_T). Pads T up to a chunk multiple with zero
+    log-decay (= decay 1.0) and zero k/v, which leaves the state unchanged."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, T, H, N = r.shape
+    Tp = -(-T // chunk) * chunk
+    pad = ((0, 0), (0, Tp - T), (0, 0), (0, 0))
+    rt, kt, vt, wt = [jnp.moveaxis(jnp.pad(x, pad), 1, 2)
+                      for x in (r, k, v, logw)]
+    y, sT = wkv6_bhtn(rt.astype(jnp.float32), kt.astype(jnp.float32),
+                      vt.astype(jnp.float32), wt.astype(jnp.float32),
+                      u.astype(jnp.float32), s0.astype(jnp.float32),
+                      chunk=chunk, interpret=interpret)
+    return jnp.moveaxis(y, 2, 1)[:, :T], sT

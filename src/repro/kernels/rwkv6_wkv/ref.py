@@ -1,0 +1,27 @@
+"""Oracle: direct sequential recurrence (independent of the chunked math)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, logw, u, s0):
+    """r/k/v/logw (B,H,T,N); u (H,N); s0 (B,H,N,N) -> (y, s_T).
+
+    Literal step-by-step recurrence:
+        y_t = r_t (S_{t-1} + diag(u) k_t v_t^T);  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    B, H, T, N = r.shape
+
+    def step(S, xs):
+        r_t, k_t, v_t, lw_t = xs                      # (B,H,N)
+        bonus = u[None] * k_t                          # (B,H,N)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, S) \
+            + jnp.einsum("bhn,bhn->bh", r_t, bonus)[..., None] * v_t
+        S = jnp.exp(lw_t)[..., None] * S + k_t[..., None] * v_t[..., None, :]
+        return S, y
+
+    xs = tuple(jnp.moveaxis(t, 2, 0) for t in (r, k, v, logw))  # (T,B,H,N)
+    s_T, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2), s_T

@@ -1,0 +1,82 @@
+"""Serving launcher: deploy one or more archs behind a FlexServe endpoint.
+
+CPU/container mode serves REDUCED variants (the paper's kind of
+deployment, runnable here); --full targets the production mesh on TPU.
+
+  PYTHONPATH=src python -m repro.launch.serve \
+      --ensemble yi-9b yi-9b h2o-danube-1.8b --port 8000
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
+from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
+                        ModelRegistry)
+from repro.models.build import build_model
+from repro.serving import FlexServeApp, FlexServeServer
+
+
+def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
+              max_batch: int = 8, full: bool = False,
+              seed: int = 0) -> FlexServeApp:
+    registry = ModelRegistry()
+    members = []
+    engine = None
+    for i, name in enumerate(arch_names):
+        cfg = get_config(name)
+        if not full:
+            cfg = reduce_for_smoke(cfg)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(seed + i))
+        reg_name = f"{name}#{i}"
+        registry.register(reg_name, model, params)
+
+        def apply(p, batch, _m=model, _c=num_classes):
+            # classification readout: last-position logits over C classes
+            return _m.forward(p, batch)[:, -1, :_c]
+
+        members.append(EnsembleMember(reg_name, apply, params, num_classes))
+        if engine is None and cfg.family in ("dense", "moe", "ssm",
+                                             "hybrid"):
+            engine = InferenceEngine(model, params, max_len=max_len,
+                                     max_batch=max_batch)
+    ensemble = Ensemble(members, max_batch=max_batch)
+    return FlexServeApp(registry, ensemble, engine)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ensemble", nargs="+", default=["yi-9b"],
+                    choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000)
+    ap.add_argument("--num-classes", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args(argv)
+
+    app = build_app(args.ensemble, num_classes=args.num_classes,
+                    max_len=args.max_len, max_batch=args.max_batch,
+                    full=args.full)
+    server = FlexServeServer(app, host=args.host, port=args.port)
+    host, port = server.address
+    print(f"[serve] FlexServe endpoint on http://{host}:{port} — "
+          f"{len(app.registry)} model(s): {app.registry.names()}")
+    print("[serve] routes: GET /health /v1/models; "
+          "POST /v1/infer /v1/detect /v1/generate")
+    try:
+        server.httpd.serve_forever()
+    except KeyboardInterrupt:
+        print("\n[serve] shutting down")
+        server.stop()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""Training launcher.
+
+CPU/container mode trains a REDUCED variant of the selected arch on the
+synthetic pipeline (the end-to-end example driver); on a real TPU pod the
+same entry point takes --full and the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+      --steps 200 --seq-len 64 --batch 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
+from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.models.build import build_model
+from repro.sharding import use_mesh
+from repro.training import (
+    DataConfig, OptimizerConfig, SyntheticLM, Trainer, TrainerConfig)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b",
+                    choices=list(ASSIGNED_ARCHS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-reduced) config — TPU pods only")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--history-out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg)
+    mesh = (make_production_mesh(multi_pod=args.multi_pod) if args.full
+            else None)
+
+    data = SyntheticLM(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.batch, num_dialects=1))
+    opt = OptimizerConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 5),
+                          total_steps=args.steps)
+    tcfg = TrainerConfig(total_steps=args.steps, log_every=args.log_every,
+                         ckpt_dir=args.ckpt_dir,
+                         grad_accum=args.grad_accum)
+
+    def run():
+        trainer = Trainer(model, opt, tcfg, rng=jax.random.PRNGKey(0))
+        hist = trainer.fit(iter(data))
+        return hist
+
+    if mesh is not None:
+        with use_mesh(mesh):
+            hist = run()
+    else:
+        hist = run()
+
+    if args.history_out:
+        with open(args.history_out, "w") as f:
+            json.dump(hist, f, indent=1)
+    first, last = hist[0]["loss"], hist[-1]["loss"]
+    print(f"[train] {args.arch}: loss {first:.4f} -> {last:.4f} over "
+          f"{args.steps} steps")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

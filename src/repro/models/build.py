@@ -1,0 +1,140 @@
+"""Uniform model API: config -> Model(init / loss / prefill / decode / specs).
+
+Every family exposes the same five entry points so the serving engine,
+trainer, dry-run, and ensemble module are family-agnostic.
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for every model input of an assigned InputShape —
+this is what the multi-pod dry-run lowers against.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape
+from repro.models import encdec, hybrid, rwkv6, transformer, vlm
+from repro.models.layers import compute_dtype
+
+
+class Model(NamedTuple):
+    config: ModelConfig
+    init: Callable[..., Any]                  # (rng) -> params
+    loss: Callable[..., Any]                  # (params, batch) -> (loss, metrics)
+    forward: Callable[..., Any]               # (params, batch) -> logits
+    init_state: Callable[..., Any]            # (batch, max_len) -> state
+    prefill: Callable[..., Any]               # (params, batch, state) -> (logits, state)
+    decode: Callable[..., Any]                # (params, token, state) -> (logits, state)
+    input_specs: Callable[[InputShape], Dict[str, Any]]
+    state_specs: Callable[[int, int], Any]    # (batch, max_len) -> SDS pytree
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _token_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    dt = compute_dtype(cfg)
+    if shape.kind == "train":
+        out = {"tokens": _sds((B, S), jnp.int32),
+               "labels": _sds((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        out = {"tokens": _sds((B, S), jnp.int32),
+               "lengths": _sds((B,), jnp.int32)}
+    else:  # decode: ONE new token; the cache state is supplied separately
+        out = {"token": _sds((B,), jnp.int32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["image_embeds"] = _sds((B, cfg.vlm.image_tokens,
+                                    cfg.vlm.vision_dim), dt)
+    if cfg.family == "encdec" and shape.kind != "decode":
+        out["frames"] = _sds((B, cfg.encdec.encoder_frames, cfg.d_model), dt)
+    return out
+
+
+def _state_sds(state) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: _sds(x.shape, x.dtype), state)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    fam = cfg.family
+
+    if fam in ("dense", "moe"):
+        mod = transformer
+        init = lambda rng: transformer.init_params(rng, cfg)
+        loss = lambda p, b, **kw: transformer.train_loss(p, b, cfg, **kw)
+        fwd = lambda p, b, **kw: transformer.forward(p, b["tokens"], cfg, **kw)[0]
+        init_state = lambda batch, max_len, **kw: transformer.init_state(
+            cfg, batch, max_len, **kw)
+        pre = lambda p, b, s, **kw: transformer.prefill(
+            p, b["tokens"], s, cfg, lengths=b.get("lengths"), **kw)
+        dec = lambda p, t, s, **kw: transformer.decode_step(p, t, s, cfg, **kw)
+
+    elif fam == "ssm":
+        init = lambda rng: rwkv6.init_params(rng, cfg)
+        loss = lambda p, b, **kw: rwkv6.train_loss(p, b, cfg, **kw)
+        fwd = lambda p, b, **kw: rwkv6.forward(p, b["tokens"], cfg, **kw)[0]
+        init_state = lambda batch, max_len, **kw: rwkv6.init_state(
+            cfg, batch, max_len, **kw)
+        pre = lambda p, b, s, **kw: rwkv6.prefill(
+            p, b["tokens"], s, cfg, lengths=b.get("lengths"), **kw)
+        dec = lambda p, t, s, **kw: rwkv6.decode_step(p, t, s, cfg, **kw)
+
+    elif fam == "hybrid":
+        init = lambda rng: hybrid.init_params(rng, cfg)
+        loss = lambda p, b, **kw: hybrid.train_loss(p, b, cfg, **kw)
+        fwd = lambda p, b, **kw: hybrid.forward(p, b["tokens"], cfg, **kw)[0]
+        init_state = lambda batch, max_len, **kw: hybrid.init_state(
+            cfg, batch, max_len, **kw)
+        pre = lambda p, b, s, **kw: hybrid.prefill(
+            p, b["tokens"], s, cfg, lengths=b.get("lengths"), **kw)
+        dec = lambda p, t, s, **kw: hybrid.decode_step(p, t, s, cfg, **kw)
+
+    elif fam == "vlm":
+        init = lambda rng: vlm.init_params(rng, cfg)
+        loss = lambda p, b, **kw: vlm.train_loss(p, b, cfg, **kw)
+        fwd = lambda p, b, **kw: vlm.forward(
+            p, b["tokens"], b["image_embeds"], cfg, **kw)[0]
+        init_state = lambda batch, max_len, **kw: vlm.init_state(
+            cfg, batch, max_len, **kw)
+        pre = lambda p, b, s, **kw: vlm.prefill(
+            p, b["tokens"], b["image_embeds"], s, cfg,
+            lengths=b.get("lengths"), **kw)
+        dec = lambda p, t, s, **kw: vlm.decode_step(p, t, s, cfg, **kw)
+
+    elif fam == "encdec":
+        init = lambda rng: encdec.init_params(rng, cfg)
+        loss = lambda p, b, **kw: encdec.train_loss(p, b, cfg, **kw)
+        fwd = lambda p, b, **kw: encdec.forward(
+            p, b["tokens"], b["frames"], cfg, **kw)[0]
+        init_state = lambda batch, max_len, **kw: encdec.init_state(
+            cfg, batch, max_len, **kw)
+        pre = lambda p, b, s, **kw: encdec.prefill(
+            p, b["tokens"], b["frames"], s, cfg, lengths=b.get("lengths"),
+            **kw)
+        dec = lambda p, t, s, **kw: encdec.decode_step(p, t, s, cfg, **kw)
+
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def state_specs(batch: int, max_len: int, **kw):
+        state = jax.eval_shape(lambda: init_state(batch, max_len, **kw))
+        return _state_sds(state)
+
+    return Model(
+        config=cfg,
+        init=init,
+        loss=loss,
+        forward=fwd,
+        init_state=init_state,
+        prefill=pre,
+        decode=dec,
+        input_specs=functools.partial(_token_specs, cfg),
+        state_specs=state_specs,
+    )

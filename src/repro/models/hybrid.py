@@ -1,0 +1,286 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + ONE shared attention block.
+
+The shared transformer block's weights are applied every
+``hybrid.shared_block_period`` layers (9 applications for 54 layers).  Each
+application j gets its own low-rank (LoRA) adapter on the fused qkv
+projection, and the block consumes concat(hidden, original-embeddings)
+projected back to d_model — both per arXiv:2411.15242.
+
+Decode keeps: per-layer Mamba2 conv+SSD states (O(1) in context) and one
+windowed KV cache per shared-block application.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (
+    apply_mlp, apply_norm, compute_dtype, cross_entropy_loss, dense_init,
+    embed_init, init_mlp, init_norm, stack_init)
+from repro.models.mamba2 import (
+    init_mamba2_layer, init_mamba2_state, mamba2_dims, mamba2_full,
+    mamba2_step)
+from repro.sharding import shard
+
+_LORA_RANK = 64
+
+
+def _num_groups(cfg: ModelConfig) -> int:
+    period = cfg.hybrid.shared_block_period
+    assert cfg.num_layers % period == 0, "layers must divide by period"
+    return cfg.num_layers // period
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    d, hd = cfg.d_model, cfg.head_dim
+    H = cfg.num_heads
+    dt = compute_dtype(cfg)
+    napp = _num_groups(cfg)
+    ks = jax.random.split(key, 10)
+    shared = {
+        "ln_h": init_norm(cfg),
+        "ln_e": init_norm(cfg),
+        "concat_proj": dense_init(ks[0], (2 * d, d), dt),
+        "attn": attn.init_attention(ks[1], cfg),
+        "ln1": init_norm(cfg),
+        "ln2": init_norm(cfg),
+        "mlp": init_mlp(ks[2], cfg),
+        # per-application LoRA on the fused qkv projection
+        "lora_a": stack_init(ks[3], napp, dense_init, (d, _LORA_RANK), dt),
+        "lora_b": stack_init(
+            ks[4], napp, lambda k, s, t: dense_init(k, s, t) * 0.0,
+            (_LORA_RANK, (H + 2 * cfg.num_kv_heads) * hd), dt),
+    }
+    return {
+        "embed": embed_init(ks[5], (cfg.vocab_size, d), dt),
+        "final_norm": init_norm(cfg),
+        "head": dense_init(ks[6], (d, cfg.vocab_size), dt),
+        "mamba": stack_init(ks[7], cfg.num_layers, init_mamba2_layer, cfg),
+        "mamba_ln": stack_init(ks[8], cfg.num_layers,
+                               lambda k, c: init_norm(c), cfg),
+        "shared": shared,
+    }
+
+
+# ---------------------------------------------------------------------------
+# Shared attention block
+# ---------------------------------------------------------------------------
+
+
+def _shared_qkv(sp, xin, lora_a, lora_b, cfg):
+    """Fused qkv with per-application LoRA delta."""
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ap = sp["attn"]
+    q = xin @ ap["wq"]
+    k = xin @ ap["wk"]
+    v = xin @ ap["wv"]
+    delta = (xin @ lora_a) @ lora_b                    # (B,S,(H+2K)*hd)
+    dq, dk, dv = jnp.split(delta, [H * hd, (H + K) * hd], axis=-1)
+    B, S = xin.shape[:2]
+    q = (q + dq).reshape(B, S, H, hd)
+    k = (k + dk).reshape(B, S, K, hd)
+    v = (v + dv).reshape(B, S, K, hd)
+    return q, k, v
+
+
+def shared_block_full(sp, cfg: ModelConfig, x, e0, lora_a, lora_b, positions,
+                      window, kv_lengths=None):
+    """Full-seq shared block. Returns (x, (k, v)) for cache capture."""
+    B, S, d = x.shape
+    xin = jnp.concatenate([apply_norm(sp["ln_h"], x, cfg),
+                           apply_norm(sp["ln_e"], e0, cfg)], -1)
+    xin = xin @ sp["concat_proj"]
+    h = apply_norm(sp["ln1"], xin, cfg)
+    q, k, v = _shared_qkv(sp, h, lora_a, lora_b, cfg)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    mask = attn.make_mask(S, S, causal=True, window=window,
+                          kv_lengths=kv_lengths)
+    out = attn.gqa_attention(q, k, v, mask)
+    out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+    xin = xin + out @ sp["attn"]["wo"]
+    xin = xin + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], xin, cfg), cfg)
+    return x + xin, (k, v)
+
+
+def shared_block_step(sp, cfg: ModelConfig, x1, e0_1, lora_a, lora_b,
+                      cache_k, cache_v, lengths, window):
+    """Single-token shared block with KV cache."""
+    from repro.models.layers import apply_rope
+    B = x1.shape[0]
+    xin = jnp.concatenate([apply_norm(sp["ln_h"], x1, cfg),
+                           apply_norm(sp["ln_e"], e0_1, cfg)], -1)
+    xin = xin @ sp["concat_proj"]
+    h = apply_norm(sp["ln1"], xin, cfg)
+    q, k, v = _shared_qkv(sp, h, lora_a, lora_b, cfg)
+    positions = lengths[:, None]
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    Smax = cache_k.shape[1]
+    if window is not None and Smax <= window:           # ring cache
+        ck, cv = attn.ring_write(cache_k, cache_v, k, v, lengths, Smax)
+        out = attn.decode_attention_ref(q[:, 0], ck, cv,
+                                        attn.ring_lengths(lengths, Smax))
+    else:
+        ck, cv = attn.cache_write(cache_k, cache_v, k, v, lengths)
+        out = attn.decode_attention_ref(q[:, 0], ck, cv, lengths + 1,
+                                        window=window)
+    out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+    xin = xin + out @ sp["attn"]["wo"]
+    xin = xin + apply_mlp(sp["mlp"], apply_norm(sp["ln2"], xin, cfg), cfg)
+    return x1 + xin, ck, cv
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, window=None) -> Dict[str, Any]:
+    from repro import opt
+    napp = _num_groups(cfg)
+    st = init_mamba2_state(cfg, cfg.num_layers, batch)
+    dt = dtype or compute_dtype(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    window = window if window is not None else cfg.hybrid.shared_window
+    if opt.enabled("ring_cache"):
+        max_len = min(max_len, window)   # shared block is windowed by design
+    st["shared_k"] = jnp.zeros((napp, batch, max_len, K, hd), dt)
+    st["shared_v"] = jnp.zeros((napp, batch, max_len, K, hd), dt)
+    st["length"] = jnp.zeros((batch,), jnp.int32)
+    return st
+
+
+def _group_tree(params_mamba, params_ln, napp):
+    """Reshape stacked (L, ...) mamba params into (napp, period, ...)."""
+    f = lambda t: t.reshape(napp, t.shape[0] // napp, *t.shape[1:])
+    return (jax.tree_util.tree_map(f, params_mamba),
+            jax.tree_util.tree_map(f, params_ln))
+
+
+def forward(params, tokens, cfg: ModelConfig, *, state=None,
+            lengths=None, window=None, remat: bool = False,
+            return_state: bool = False, capture_kv: bool = False):
+    B, S = tokens.shape
+    napp = _num_groups(cfg)
+    window = window if window is not None else cfg.hybrid.shared_window
+    if state is None:
+        state = init_mamba2_state(cfg, cfg.num_layers, B)
+    e0 = params["embed"][tokens]
+    e0 = shard(e0, "batch", None, None)
+    x = e0
+    positions = jnp.arange(S)[None, :]
+    gm, gln = _group_tree(params["mamba"], params["mamba_ln"], napp)
+    conv_g = state["conv"].reshape(napp, -1, *state["conv"].shape[1:])
+    ssd_g = state["ssd"].reshape(napp, -1, *state["ssd"].shape[1:])
+    sp = params["shared"]
+
+    def group_step(carry, xs):
+        x, = carry
+        mp, lnp, conv_l, ssd_l, la, lb = xs
+        x, (k, v) = shared_block_full(sp, cfg, x, e0, la, lb, positions,
+                                      window, kv_lengths=lengths)
+
+        def mamba_step(x, xs2):
+            lp, ln, cs, ss = xs2
+            h = apply_norm(ln, x, cfg)
+            out, nc, ns = mamba2_full(lp, cfg, h, cs, ss, lengths=lengths)
+            x = shard(x + out, "batch", None, None)
+            return x, (nc, ns)
+
+        if remat:
+            mamba_step = jax.checkpoint(mamba_step, prevent_cse=False)
+        x, (ncs, nss) = jax.lax.scan(mamba_step, x, (mp, lnp, conv_l, ssd_l))
+        return (x,), (ncs, nss, k, v)
+
+    (x,), (nconv, nssd, ks_, vs_) = jax.lax.scan(
+        group_step, (x,), (gm, gln, conv_g, ssd_g,
+                           sp["lora_a"], sp["lora_b"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = h @ params["head"]
+    logits = shard(logits, "batch", None, "vocab")
+    if return_state:
+        new_state = dict(state)
+        new_state["conv"] = nconv.reshape(cfg.num_layers,
+                                          *nconv.shape[2:])
+        new_state["ssd"] = nssd.reshape(cfg.num_layers, *nssd.shape[2:])
+        if capture_kv:
+            new_state["_kv"] = (ks_, vs_)                  # (napp,B,S,K,hd)
+        return logits, new_state
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, _ = forward(params, batch["tokens"], cfg, remat=remat)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "loss": loss}
+
+
+def prefill(params, tokens, state, cfg: ModelConfig, *, lengths=None,
+            window=None):
+    B, S = tokens.shape
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    logits, ns = forward(params, tokens, cfg, state=state, window=window,
+                         lengths=lengths, return_state=True,
+                         capture_kv=True)
+    ks_, vs_ = ns.pop("_kv")
+    Smax = state["shared_k"].shape[2]
+    if Smax < S or Smax <= (window or cfg.hybrid.shared_window):
+        # ring: per application, keep the last Smax positions
+        rf = jax.vmap(lambda t: attn.ring_fill(t, lengths, Smax))
+        ns["shared_k"] = rf(ks_).astype(state["shared_k"].dtype)
+        ns["shared_v"] = rf(vs_).astype(state["shared_v"].dtype)
+    else:
+        pad = [(0, 0), (0, 0), (0, Smax - S), (0, 0), (0, 0)]
+        ns["shared_k"] = jnp.pad(ks_, pad).astype(state["shared_k"].dtype)
+        ns["shared_v"] = jnp.pad(vs_, pad).astype(state["shared_v"].dtype)
+    ns["length"] = lengths
+    rows = jnp.arange(B)
+    return logits[rows, lengths - 1], ns
+
+
+def decode_step(params, token, state, cfg: ModelConfig, *, window=None):
+    napp = _num_groups(cfg)
+    window = window if window is not None else cfg.hybrid.shared_window
+    lengths = state["length"]
+    e0 = params["embed"][token][:, None]
+    x = e0
+    gm, gln = _group_tree(params["mamba"], params["mamba_ln"], napp)
+    conv_g = state["conv"].reshape(napp, -1, *state["conv"].shape[1:])
+    ssd_g = state["ssd"].reshape(napp, -1, *state["ssd"].shape[1:])
+    sp = params["shared"]
+
+    def group_step(x, xs):
+        mp, lnp, conv_l, ssd_l, la, lb, ck, cv = xs
+        x, ck, cv = shared_block_step(sp, cfg, x, e0, la, lb, ck, cv,
+                                      lengths, window)
+
+        def mamba_step(x, xs2):
+            lp, ln, cs, ss = xs2
+            h = apply_norm(ln, x, cfg)
+            out, nc, ns2 = mamba2_step(lp, cfg, h, cs, ss)
+            return x + out, (nc, ns2)
+
+        x, (ncs, nss) = jax.lax.scan(mamba_step, x, (mp, lnp, conv_l, ssd_l))
+        return x, (ncs, nss, ck, cv)
+
+    x, (nconv, nssd, nck, ncv) = jax.lax.scan(
+        group_step, x, (gm, gln, conv_g, ssd_g, sp["lora_a"], sp["lora_b"],
+                        state["shared_k"], state["shared_v"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = (h @ params["head"])[:, 0]
+    new_state = {
+        "conv": nconv.reshape(cfg.num_layers, *nconv.shape[2:]),
+        "ssd": nssd.reshape(cfg.num_layers, *nssd.shape[2:]),
+        "shared_k": nck, "shared_v": ncv,
+        "length": lengths + 1,
+    }
+    return logits, new_state

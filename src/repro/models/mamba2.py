@@ -1,0 +1,217 @@
+"""Mamba-2 (SSD) blocks — the zamba2 backbone.
+
+State-space dual recurrence per head (P = head_dim, N = state_size):
+
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T       h: (P, N)
+    y_t = h_t C_t + D * x_t
+
+Full-sequence path is the chunked SSD algorithm (minimal-ssd): intra-chunk
+quadratic attention-like term with a log-space segment-sum decay matrix,
+inter-chunk state carried by a scan.  All exponentials have non-positive
+arguments.  The Pallas kernel in repro.kernels.mamba2_ssd mirrors this math.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import compute_dtype, dense_init
+from repro.sharding import shard
+
+
+def mamba2_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    heads = inner // s.head_dim
+    return inner, heads, s.head_dim, s.state_size
+
+
+def init_mamba2_layer(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    inner, H, P, N = mamba2_dims(cfg)
+    conv_ch = inner + 2 * N                      # x, B, C share the conv
+    dt = compute_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * inner + 2 * N + H             # z, xBC, dt
+    return {
+        "in_proj": dense_init(ks[0], (d, proj_out), dt),
+        "conv_w": dense_init(ks[1], (s.conv_kernel, conv_ch), dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "gn_scale": jnp.ones((inner,), jnp.float32),
+        "out_proj": dense_init(ks[2], (inner, d), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _segsum(logdecay):
+    """logdecay (..., c) -> (..., c, c) where out[t,s] = sum_{s<u<=t} logdecay[u],
+    -inf for s > t (strictly upper)."""
+    c = logdecay.shape[-1]
+    cs = jnp.cumsum(logdecay, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]           # L_t - L_s
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, h0, chunk: int = 64):
+    """x (Bt,T,H,P); dt (Bt,T,H) >0; A (H,)<0; B,C (Bt,T,N); h0 (Bt,H,P,N).
+
+    Returns (y (Bt,T,H,P), h_T)."""
+    Bt, T, H, P = x.shape
+    N = B.shape[-1]
+    c = chunk
+    nc = T // c
+    dA = dt * A                                           # (Bt,T,H) log-decay
+    xr = x.reshape(Bt, nc, c, H, P)
+    dtr = dt.reshape(Bt, nc, c, H)
+    dAr = dA.reshape(Bt, nc, c, H)
+    Br = B.reshape(Bt, nc, c, N)
+    Cr = C.reshape(Bt, nc, c, N)
+
+    def body(h, inp):
+        x_, dt_, dA_, B_, C_ = inp                        # (Bt,c,...)
+        Lmat = _segsum(dA_.transpose(0, 2, 1))            # (Bt,H,c,c)
+        decay = jnp.exp(Lmat)                             # masked lower-tri
+        # intra-chunk: y[t] = sum_s decay[t,s] (C_t.B_s) dt_s x_s
+        G = jnp.einsum("btn,bsn->bts", C_, B_)            # (Bt,c,c)
+        M = G[:, None] * decay                            # (Bt,H,c,c)
+        y = jnp.einsum("bhts,bsh,bshp->bthp", M, dt_, x_)
+        # inter-chunk: state contribution
+        Lcum = jnp.cumsum(dA_, axis=1)                    # (Bt,c,H)
+        y += jnp.einsum("bth,btn,bhpn->bthp", jnp.exp(Lcum), C_, h)
+        # state update: h' = exp(L_c) h + sum_s exp(L_c - L_s) dt_s B_s x_s^T
+        Lc = Lcum[:, -1]                                  # (Bt,H)
+        rest = jnp.exp(Lc[:, None] - Lcum)                # (Bt,c,H)
+        h_new = (jnp.exp(Lc)[:, :, None, None] * h
+                 + jnp.einsum("bth,bth,bthp,btn->bhpn", rest, dt_, x_, B_))
+        return h_new, y
+
+    h_T, ys = jax.lax.scan(body, h0, (xr.transpose(1, 0, 2, 3, 4),
+                                      dtr.transpose(1, 0, 2, 3),
+                                      dAr.transpose(1, 0, 2, 3),
+                                      Br.transpose(1, 0, 2, 3),
+                                      Cr.transpose(1, 0, 2, 3)))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bt, T, H, P)
+    return y, h_T
+
+
+def ssd_step(x, dt, A, B, C, h):
+    """Single step. x (Bt,H,P); dt (Bt,H); B,C (Bt,N); h (Bt,H,P,N)."""
+    dA = jnp.exp(dt * A)                                  # (Bt,H)
+    h_new = dA[..., None, None] * h \
+        + jnp.einsum("bh,bhp,bn->bhpn", dt, x, B)
+    y = jnp.einsum("bhpn,bn->bhp", h_new, C)
+    return y, h_new
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _split_proj(z_xbc_dt, cfg):
+    inner, H, P, N = mamba2_dims(cfg)
+    z, xBC, dt = jnp.split(z_xbc_dt, [inner, 2 * inner + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv over time. xBC (B,T,C); conv_w (K,C).
+
+    conv_state (B,K-1,C) holds the last K-1 inputs from the previous segment.
+    Returns (out (B,T,C), new_conv_state)."""
+    K = conv_w.shape[0]
+    B = xBC.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([conv_state, xBC], axis=1)     # (B,T+K-1,C)
+    out = sum(xpad[:, i:i + xBC.shape[1]] * conv_w[i] for i in range(K))
+    new_state = xpad[:, -(K - 1):] if K > 1 else conv_state
+    return out + conv_b, new_state
+
+
+def mamba2_full(p, cfg: ModelConfig, x, conv_state, ssd_state,
+                lengths=None):
+    """x (B,T,D) -> (out (B,T,D), new conv_state, new ssd_state).
+
+    ``lengths`` (B,) makes ragged prefill exact: pad steps get dt=0 (state
+    decay 1, no input) and the conv window is gathered at each row's last
+    valid position."""
+    inner, H, P, N = mamba2_dims(cfg)
+    B_, T, D = x.shape
+    zxd = x @ p["in_proj"]
+    z, xBC, dtp = _split_proj(zxd, cfg)
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B_, K - 1, xBC.shape[-1]), xBC.dtype)
+    xpad = jnp.concatenate([conv_state, xBC], axis=1)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    if lengths is not None:
+        # window of the K-1 inputs ending at each row's last valid token
+        idx = lengths[:, None] + jnp.arange(K - 1)[None, :]   # in xpad coords
+        new_conv = jnp.take_along_axis(xpad, idx[:, :, None], axis=1)
+    xBC = jax.nn.silu(xBC)
+    xin, Bmat, Cmat = jnp.split(xBC, [inner, inner + N], axis=-1)
+    xin = shard(xin, "batch", None, "ff")
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    if lengths is not None:
+        valid = (jnp.arange(T)[None, :] < lengths[:, None])
+        dt = dt * valid[:, :, None]
+    A = -jnp.exp(p["a_log"])                                      # (H,)
+    xh = xin.reshape(B_, T, H, P).astype(jnp.float32)
+    chunk = cfg.ssm.chunk_size
+    while T % chunk:                       # largest divisor of T <= chunk_size
+        chunk //= 2
+    y, h_T = ssd_chunked(xh, dt, A, Bmat.astype(jnp.float32),
+                         Cmat.astype(jnp.float32), ssd_state, chunk=chunk)
+    y = y + p["d_skip"][:, None] * xh
+    y = y.reshape(B_, T, inner)
+    # gated RMSNorm
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-5)
+    y = (y * p["gn_scale"]).astype(x.dtype)
+    return y @ p["out_proj"], new_conv, h_T
+
+
+def mamba2_step(p, cfg: ModelConfig, x1, conv_state, ssd_state):
+    """Single-token step. x1 (B,1,D)."""
+    inner, H, P, N = mamba2_dims(cfg)
+    B_ = x1.shape[0]
+    zxd = x1 @ p["in_proj"]
+    z, xBC, dtp = _split_proj(zxd, cfg)
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xBC = jax.nn.silu(xBC)
+    xin, Bmat, Cmat = jnp.split(xBC[:, 0], [inner, inner + N], axis=-1)
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    y, h_new = ssd_step(xin.reshape(B_, H, P).astype(jnp.float32), dt, A,
+                        Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                        ssd_state)
+    y = y + p["d_skip"][:, None] * xin.reshape(B_, H, P).astype(jnp.float32)
+    y = y.reshape(B_, 1, inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = y * jax.lax.rsqrt(jnp.mean(jnp.square(y), -1, keepdims=True) + 1e-5)
+    y = (y * p["gn_scale"]).astype(x1.dtype)
+    return y @ p["out_proj"], new_conv, h_new
+
+
+def init_mamba2_state(cfg: ModelConfig, num_layers: int, batch: int):
+    inner, H, P, N = mamba2_dims(cfg)
+    K = cfg.ssm.conv_kernel
+    dt = compute_dtype(cfg)
+    return {
+        "conv": jnp.zeros((num_layers, batch, K - 1, inner + 2 * N), dt),
+        "ssd": jnp.zeros((num_layers, batch, H, P, N), jnp.float32),
+    }

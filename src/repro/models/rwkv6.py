@@ -1,0 +1,353 @@
+"""RWKV-6 "Finch": attention-free time-mix with data-dependent decay.
+
+Time-mix recurrence per head (key dim N = value dim N = head_dim):
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    y_t = r_t (S_{t-1} + diag(u) k_t v_t^T)
+
+with per-channel data-dependent decay w_t = exp(-exp(w0 + lora_w(x_w,t)))
+and data-dependent token-shift interpolation (ddlerp) on every projection
+input.  [arXiv:2404.05892]
+
+The full-sequence path uses a *chunked* formulation that is numerically
+stable by construction: every exponential has a non-positive argument
+(products of decays between ordered timesteps), so there is no division by
+tiny cumulative decays.  Chunk-local interactions materialize a
+(B, c, c, H, N) tensor only inside the chunk scan (c = 16 by default).
+The Pallas kernel in repro.kernels.rwkv6_wkv implements the same math.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (
+    apply_norm, compute_dtype, cross_entropy_loss, dense_init, embed_init,
+    group_norm, init_norm, stack_init)
+from repro.sharding import shard
+
+_LORA_RANK = 32
+_DECAY_RANK = 64
+_MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def rwkv_dims(cfg: ModelConfig):
+    """(num_heads, head_dim) derived so that H * N == d_model always."""
+    N = cfg.ssm.head_dim
+    assert cfg.d_model % N == 0
+    return cfg.d_model // N, N
+
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dt = compute_dtype(cfg)
+    H, N = rwkv_dims(cfg)
+    ks = jax.random.split(key, 12)
+    ramp = jnp.linspace(0.0, 1.0, d, dtype=jnp.float32)
+    p = {
+        "ln1": init_norm(cfg),
+        "ln2": init_norm(cfg),
+        # ddlerp token-shift
+        "mu_x": ramp * 0.5,
+        "mu_mix": jnp.stack([ramp * 0.5 + 0.1 * i for i in range(5)]),  # (5,D)
+        "tm_a1": dense_init(ks[0], (d, 5 * _LORA_RANK), jnp.float32),
+        "tm_a2": dense_init(ks[1], (5, _LORA_RANK, d), jnp.float32,
+                            in_axis=-2) * 0.1,
+        # decay
+        "w0": jnp.linspace(-6.0, -0.5, d, dtype=jnp.float32),
+        "dw_a1": dense_init(ks[2], (d, _DECAY_RANK), jnp.float32),
+        "dw_a2": dense_init(ks[3], (_DECAY_RANK, d), jnp.float32) * 0.1,
+        # bonus
+        "first": dense_init(ks[4], (H, N), jnp.float32),
+        # projections
+        "w_r": dense_init(ks[5], (d, d), dt),
+        "w_k": dense_init(ks[6], (d, d), dt),
+        "w_v": dense_init(ks[7], (d, d), dt),
+        "w_g": dense_init(ks[8], (d, d), dt),
+        "w_o": dense_init(ks[9], (d, d), dt),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "mu_ck": ramp * 0.5,
+        "mu_cr": ramp * 0.5,
+        "w_up": dense_init(ks[10], (d, cfg.d_ff), dt),
+        "w_down": dense_init(ks[11], (cfg.d_ff, d), dt),
+        "w_rc": dense_init(ks[11], (d, d), dt),
+    }
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    dt = compute_dtype(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "ln_in": init_norm(cfg),
+        "final_norm": init_norm(cfg),
+        "head": dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt),
+        "layers": stack_init(ks[2], cfg.num_layers, init_layer, cfg),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Chunked WKV (stable log-space form)
+# ---------------------------------------------------------------------------
+
+
+def wkv_chunked(r, k, v, logw, u, S0, chunk: int = 16):
+    """r/k/v/logw: (B,T,H,N) fp32, logw<=0; u: (H,N); S0: (B,H,N,N).
+
+    Returns (y (B,T,H,N), S_T).  T must be a multiple of ``chunk``."""
+    B, T, H, N = r.shape
+    c = chunk
+    nc = T // c
+    resh = lambda x: x.reshape(B, nc, c, H, N).transpose(1, 0, 2, 3, 4)
+    rs, ks_, vs, ws = map(resh, (r, k, v, logw))           # (nc,B,c,H,N)
+    tril = jnp.tril(jnp.ones((c, c), bool), k=-1)          # strict lower
+
+    def body(S, inp):
+        r_, k_, v_, lw = inp                               # (B,c,H,N)
+        L = jnp.cumsum(lw, axis=1)                         # inclusive
+        Lprev = L - lw                                     # exclusive
+        # intra-chunk: D[t,s] = exp(L_{t-1} - L_s), s < t  (arg <= 0)
+        D = jnp.exp(Lprev[:, :, None] - L[:, None, :])     # (B,c,c,H,N)
+        A = jnp.einsum("bthn,btshn,bshn->btsh",
+                       r_, D, k_)                          # (B,c,c,H)
+        A = jnp.where(tril[None, :, :, None], A, 0.0)
+        y = jnp.einsum("btsh,bshn->bthn", A, v_)
+        # diagonal bonus term
+        y += jnp.einsum("bthn,hn,bthn->bth", r_, u, k_)[..., None] * v_
+        # state contribution
+        y += jnp.einsum("bthn,bhnm->bthm", r_ * jnp.exp(Lprev), S)
+        # state update: S' = diag(exp(L_c)) S + sum_s (k_s exp(L_c - L_s)) v_s^T
+        Lc = L[:, -1][:, None]                             # (B,1,H,N)
+        S_new = (jnp.exp(Lc[:, 0])[..., None] * S
+                 + jnp.einsum("bshn,bshm->bhnm", k_ * jnp.exp(Lc - L), v_))
+        return S_new, y
+
+    S_T, ys = jax.lax.scan(body, S0, (rs, ks_, vs, ws))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, T, H, N)
+    return y, S_T
+
+
+def wkv_step(r, k, v, logw, u, S):
+    """Single decode step. r/k/v/logw: (B,H,N); S: (B,H,N,N)."""
+    y = jnp.einsum("bhn,bhnm->bhm", r, S) \
+        + jnp.einsum("bhn,hn,bhn->bh", r, u, k)[..., None] * v
+    S_new = jnp.exp(logw)[..., None] * S + k[..., None] * v[..., None, :]
+    return y, S_new
+
+
+# ---------------------------------------------------------------------------
+# Block forward
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent token-shift: returns dict name -> mixed input (B,T,D)."""
+    xx = x_prev - x
+    base = x + xx * p["mu_x"]
+    lora = jnp.tanh(base.astype(jnp.float32) @ p["tm_a1"])
+    lora = lora.reshape(*lora.shape[:-1], 5, _LORA_RANK)
+    mix = p["mu_mix"] + jnp.einsum("...ir,ird->...id", lora, p["tm_a2"])
+    out = {}
+    for i, name in enumerate(_MIX_NAMES):
+        out[name] = (x.astype(jnp.float32)
+                     + xx.astype(jnp.float32) * mix[..., i, :]).astype(x.dtype)
+    return out
+
+
+def _time_mix_common(p, cfg, mixed):
+    """Projections shared by chunked and step paths."""
+    H, N = rwkv_dims(cfg)
+    def heads(t):
+        return t.reshape(*t.shape[:-1], H, N).astype(jnp.float32)
+    r = heads(mixed["r"] @ p["w_r"])
+    k = heads(mixed["k"] @ p["w_k"])
+    v = heads(mixed["v"] @ p["w_v"])
+    g = mixed["g"] @ p["w_g"]
+    w_pre = (p["w0"] + jnp.tanh(mixed["w"].astype(jnp.float32) @ p["dw_a1"])
+             @ p["dw_a2"])
+    logw = -jnp.exp(w_pre)                                 # <= 0
+    logw = heads(logw)
+    return r, k, v, g, logw
+
+
+def time_mix_full(p, cfg: ModelConfig, x, shift_state, wkv_state,
+                  mask=None, lengths=None):
+    """x (B,T,D). Returns (out, new_shift (B,D), new_wkv (B,H,N,N)).
+
+    ``mask`` (B,T) zeroes pad positions' state contributions (k,v -> 0,
+    decay -> 1) so ragged prefill leaves the recurrent state exact."""
+    B, T, D = x.shape
+    H, N = rwkv_dims(cfg)
+    x_prev = jnp.concatenate([shift_state[:, None], x[:, :-1]], axis=1)
+    mixed = _ddlerp(p, x, x_prev)
+    r, k, v, g, logw = _time_mix_common(p, cfg, mixed)
+    if mask is not None:
+        m = mask[:, :, None, None].astype(jnp.float32)
+        k = k * m
+        v = v * m
+        logw = logw * m
+    chunk = min(cfg.ssm.chunk_size, 16) if T % 16 == 0 else 1
+    if T % chunk != 0:
+        chunk = 1
+    y, S = wkv_chunked(r, k, v, logw, p["first"], wkv_state, chunk=chunk)
+    y = y.reshape(B, T, D)
+    y = group_norm(y, p["gn_scale"], p["gn_bias"], num_groups=H)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    if lengths is None:
+        shift_out = x[:, -1]
+    else:
+        shift_out = x[jnp.arange(B), lengths - 1]
+    return y @ p["w_o"], shift_out, S
+
+
+def time_mix_step(p, cfg: ModelConfig, x1, shift_state, wkv_state):
+    """x1 (B,1,D) single token."""
+    B, _, D = x1.shape
+    H, _ = rwkv_dims(cfg)
+    mixed = _ddlerp(p, x1, shift_state[:, None])
+    r, k, v, g, logw = _time_mix_common(p, cfg, mixed)
+    y, S = wkv_step(r[:, 0], k[:, 0], v[:, 0], logw[:, 0], p["first"],
+                    wkv_state)
+    y = y.reshape(B, 1, D)
+    y = group_norm(y, p["gn_scale"], p["gn_bias"], num_groups=H)
+    y = (y * jax.nn.silu(g.astype(jnp.float32))).astype(x1.dtype)
+    return y @ p["w_o"], x1[:, 0], S
+
+
+def channel_mix(p, x, x_prev):
+    """rwkv6 channel-mix (relu^2). x, x_prev: (B,T,D)."""
+    xx = (x_prev - x).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    xk = (xf + xx * p["mu_ck"]).astype(x.dtype)
+    xr = (xf + xx * p["mu_cr"]).astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["w_up"]))
+    kk = shard(kk, "batch", None, "ff")
+    rr = jax.nn.sigmoid((xr @ p["w_rc"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * (kk @ p["w_down"])
+
+
+def _layer_full(cfg, x, lp, tm_shift, cm_shift, wkv_state, mask=None,
+                lengths=None):
+    h = apply_norm(lp["ln1"], x, cfg)
+    tm_out, new_tm_shift, new_wkv = time_mix_full(lp, cfg, h, tm_shift,
+                                                  wkv_state, mask=mask,
+                                                  lengths=lengths)
+    x = x + tm_out
+    h2 = apply_norm(lp["ln2"], x, cfg)
+    h2_prev = jnp.concatenate([cm_shift[:, None], h2[:, :-1]], axis=1)
+    x = x + channel_mix(lp, h2, h2_prev)
+    x = shard(x, "batch", None, None)
+    if lengths is None:
+        cm_out = h2[:, -1]
+    else:
+        cm_out = h2[jnp.arange(x.shape[0]), lengths - 1]
+    return x, new_tm_shift, cm_out, new_wkv
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int = 0,
+               dtype=None, window=None) -> Dict[str, Any]:
+    """Recurrent state: O(1) in sequence length (max_len/window unused)."""
+    del window
+    L, D = cfg.num_layers, cfg.d_model
+    H, N = rwkv_dims(cfg)
+    dt = dtype or compute_dtype(cfg)
+    return {
+        "tm_shift": jnp.zeros((L, batch, D), dt),
+        "cm_shift": jnp.zeros((L, batch, D), dt),
+        "wkv": jnp.zeros((L, batch, H, N, N), jnp.float32),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, state=None,
+            lengths=None, remat: bool = False,
+            return_state: bool = False):
+    """tokens (B,S) -> logits. Optionally carries/returns recurrent state.
+    ``lengths`` (B,) marks right-padded rows for exact ragged prefill."""
+    B, S = tokens.shape
+    if state is None:
+        state = init_state(cfg, B)
+    mask = None
+    if lengths is not None:
+        mask = (jnp.arange(S)[None, :] < lengths[:, None])
+    x = apply_norm(params["ln_in"], params["embed"][tokens], cfg)
+    x = shard(x, "batch", None, None)
+
+    def step(x, xs):
+        lp, tm_s, cm_s, wkv_s = xs
+        x, tm2, cm2, wkv2 = _layer_full(cfg, x, lp, tm_s, cm_s, wkv_s,
+                                        mask=mask, lengths=lengths)
+        return x, (tm2, cm2, wkv2)
+
+    if remat:
+        step = jax.checkpoint(step, prevent_cse=False)
+    x, (tm, cm, wkv) = jax.lax.scan(
+        step, x, (params["layers"], state["tm_shift"], state["cm_shift"],
+                  state["wkv"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = h @ params["head"]
+    logits = shard(logits, "batch", None, "vocab")
+    if return_state:
+        new_state = {"tm_shift": tm, "cm_shift": cm, "wkv": wkv,
+                     "length": state["length"] + S}
+        return logits, new_state
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, _ = forward(params, batch["tokens"], cfg, remat=remat)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "loss": loss}
+
+
+def prefill(params, tokens, state, cfg: ModelConfig, *, lengths=None,
+            window=None):
+    B, S = tokens.shape
+    logits, new_state = forward(params, tokens, cfg, state=state,
+                                lengths=lengths, return_state=True)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    rows = jnp.arange(B)
+    new_state["length"] = lengths
+    return logits[rows, lengths - 1], new_state
+
+
+def decode_step(params, token, state, cfg: ModelConfig, *, window=None):
+    """token (B,) -> (logits (B,V), new state). O(1) per step."""
+    x = apply_norm(params["ln_in"], params["embed"][token][:, None], cfg)
+
+    def step(x, xs):
+        lp, tm_s, cm_s, wkv_s = xs
+        h = apply_norm(lp["ln1"], x, cfg)
+        tm_out, tm2, wkv2 = time_mix_step(lp, cfg, h, tm_s, wkv_s)
+        x = x + tm_out
+        h2 = apply_norm(lp["ln2"], x, cfg)
+        x = x + channel_mix(lp, h2, cm_s[:, None])
+        return x, (tm2, h2[:, 0], wkv2)
+
+    x, (tm, cm, wkv) = jax.lax.scan(
+        step, x, (params["layers"], state["tm_shift"], state["cm_shift"],
+                  state["wkv"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = (h @ params["head"])[:, 0]
+    return logits, {"tm_shift": tm, "cm_shift": cm, "wkv": wkv,
+                    "length": state["length"] + 1}

@@ -1,0 +1,265 @@
+"""Llama-3.2-Vision style VLM backbone: a dense GQA decoder with gated
+cross-attention blocks interleaved every (period) layers.
+
+The ViT + projector frontend is a STUB per the assignment: ``image_embeds``
+(B, T_img, vision_dim) arrive precomputed.  Cross-attention K/V are computed
+once (at prefill) and are FIXED during decode.
+
+Structure: ngroups x [ (period-1) self-attn layers, 1 cross-attn block ].
+Self-attn layers reuse repro.models.transformer's layer; the cross block is
+a full transformer block (attn + MLP) with tanh gates on both residuals,
+as in the Llama-3.2 multimodal adapter.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import transformer as tfm
+from repro.models.layers import (
+    apply_mlp, apply_norm, compute_dtype, cross_entropy_loss, dense_init,
+    embed_init, init_mlp, init_norm, stack_init)
+from repro.sharding import shard
+
+
+def _layout(cfg: ModelConfig):
+    n_cross = len(cfg.vlm.cross_attn_layers)
+    assert cfg.num_layers % n_cross == 0
+    period = cfg.num_layers // n_cross          # e.g. 5 (4 self + 1 cross)
+    return n_cross, period - 1                  # groups, self-per-group
+
+
+def init_cross_block(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": init_norm(cfg),
+        "ln2": init_norm(cfg),
+        "attn": attn.init_attention(ks[0], cfg,
+                                    kv_input_dim=cfg.vlm.vision_dim),
+        "mlp": init_mlp(ks[1], cfg),
+        "gate_attn": jnp.zeros((), jnp.float32),
+        "gate_mlp": jnp.zeros((), jnp.float32),
+        "q_norm_scale": jnp.ones((cfg.head_dim,), jnp.float32),
+        "k_norm_scale": jnp.ones((cfg.head_dim,), jnp.float32),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> Dict[str, Any]:
+    ngroups, nself = _layout(cfg)
+    dt = compute_dtype(cfg)
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dt),
+        "head": dense_init(ks[1], (cfg.d_model, cfg.vocab_size), dt),
+        "final_norm": init_norm(cfg),
+        "layers": stack_init(ks[2], ngroups * nself, tfm.init_layer, cfg,
+                             moe=False),
+        "cross": stack_init(ks[3], ngroups, init_cross_block, cfg),
+    }
+    return params
+
+
+def _group_params(params, cfg):
+    ngroups, nself = _layout(cfg)
+    f = lambda t: t.reshape(ngroups, nself, *t.shape[1:])
+    return jax.tree_util.tree_map(f, params["layers"])
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention block
+# ---------------------------------------------------------------------------
+
+
+def _cross_kv(cp, image_embeds, cfg):
+    """(B,T,Dv) -> k,v (B,T,K,hd); no rope on image tokens."""
+    B, T, _ = image_embeds.shape
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    from repro.models.layers import rms_norm_simple
+    k = (image_embeds @ cp["attn"]["wk"]).reshape(B, T, K, hd)
+    v = (image_embeds @ cp["attn"]["wv"]).reshape(B, T, K, hd)
+    k = rms_norm_simple(k, cp["k_norm_scale"])
+    return k, v
+
+
+def cross_block_full(cp, cfg, x, k, v):
+    from repro.models.layers import rms_norm_simple
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    h = apply_norm(cp["ln1"], x, cfg)
+    q = (h @ cp["attn"]["wq"]).reshape(B, S, H, hd)
+    q = rms_norm_simple(q, cp["q_norm_scale"])
+    out = attn.gqa_attention(q, k, v, mask=None)
+    out = out.reshape(B, S, H * hd) @ cp["attn"]["wo"]
+    x = x + (jnp.tanh(cp["gate_attn"]) * out).astype(x.dtype)
+    h2 = apply_norm(cp["ln2"], x, cfg)
+    x = x + (jnp.tanh(cp["gate_mlp"])
+             * apply_mlp(cp["mlp"], h2, cfg)).astype(x.dtype)
+    return shard(x, "batch", None, None)
+
+
+def cross_block_step(cp, cfg, x1, k, v):
+    from repro.models.layers import rms_norm_simple
+    B = x1.shape[0]
+    H, hd = cfg.num_heads, cfg.head_dim
+    h = apply_norm(cp["ln1"], x1, cfg)
+    q = (h @ cp["attn"]["wq"]).reshape(B, 1, H, hd)
+    q = rms_norm_simple(q, cp["q_norm_scale"])
+    out = attn.decode_attention_ref(q[:, 0], k, v,
+                                    jnp.full((B,), k.shape[1]))
+    out = out.reshape(B, 1, H * hd) @ cp["attn"]["wo"]
+    x1 = x1 + (jnp.tanh(cp["gate_attn"]) * out).astype(x1.dtype)
+    h2 = apply_norm(cp["ln2"], x1, cfg)
+    return x1 + (jnp.tanh(cp["gate_mlp"])
+                 * apply_mlp(cp["mlp"], h2, cfg)).astype(x1.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def forward(params, tokens, image_embeds, cfg: ModelConfig, *,
+            window=None, remat: bool = False):
+    """tokens (B,S), image_embeds (B,Timg,Dv) -> logits (B,S,V)."""
+    B, S = tokens.shape
+    ngroups, nself = _layout(cfg)
+    x = params["embed"][tokens]
+    x = shard(x, "batch", None, None)
+    positions = jnp.arange(S)[None, :]
+    gp = _group_params(params, cfg)
+    window = window if window is not None else cfg.sliding_window
+
+    def group_step(x, xs):
+        sp, cp = xs
+        k, v = _cross_kv(cp, image_embeds, cfg)
+
+        def self_step(x, lp):
+            x, _ = tfm._layer_full(cfg, False, window, x, lp, positions, None)
+            return x, None
+
+        if remat:
+            self_step = jax.checkpoint(self_step, prevent_cse=False)
+        x, _ = jax.lax.scan(self_step, x, sp)
+        x = cross_block_full(cp, cfg, x, k, v)
+        return x, None
+
+    x, _ = jax.lax.scan(group_step, x, (gp, params["cross"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = h @ params["head"]
+    return shard(logits, "batch", None, "vocab"), jnp.zeros((), jnp.float32)
+
+
+def train_loss(params, batch, cfg: ModelConfig, *, remat: bool = True):
+    logits, _ = forward(params, batch["tokens"], batch["image_embeds"], cfg,
+                        remat=remat)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return loss, {"ce": loss, "loss": loss}
+
+
+def init_state(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, window=None) -> Dict[str, Any]:
+    from repro import opt
+    ngroups, nself = _layout(cfg)
+    dt = dtype or compute_dtype(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    window = window if window is not None else cfg.sliding_window
+    if window is not None and opt.enabled("ring_cache"):
+        max_len = min(max_len, window)
+    return {
+        "k": jnp.zeros((ngroups, nself, batch, max_len, K, hd), dt),
+        "v": jnp.zeros((ngroups, nself, batch, max_len, K, hd), dt),
+        "xk": jnp.zeros((ngroups, batch, cfg.vlm.image_tokens, K, hd), dt),
+        "xv": jnp.zeros((ngroups, batch, cfg.vlm.image_tokens, K, hd), dt),
+        "length": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def prefill(params, tokens, image_embeds, state, cfg: ModelConfig, *,
+            lengths=None, window=None):
+    B, S = tokens.shape
+    ngroups, nself = _layout(cfg)
+    if lengths is None:
+        lengths = jnp.full((B,), S, jnp.int32)
+    window = window if window is not None else cfg.sliding_window
+    x = params["embed"][tokens]
+    positions = jnp.arange(S)[None, :]
+    gp = _group_params(params, cfg)
+    Smax = state["k"].shape[3]
+
+    def group_step(x, xs):
+        sp, cp = xs
+        xk, xv = _cross_kv(cp, image_embeds, cfg)
+
+        def self_step(x, lp):
+            h = apply_norm(lp["ln1"], x, cfg)
+            q, k, v = attn.project_qkv(lp["attn"], h, cfg,
+                                       positions=positions)
+            mask = attn.make_mask(S, S, causal=True, window=window,
+                                  kv_lengths=lengths)
+            out = attn.gqa_attention(q, k, v, mask)
+            out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+            x = x + out @ lp["attn"]["wo"]
+            x = x + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg), cfg)
+            if Smax < S or (window is not None and Smax <= window):
+                return x, (attn.ring_fill(k, lengths, Smax),
+                           attn.ring_fill(v, lengths, Smax))
+            pad = [(0, 0), (0, Smax - S), (0, 0), (0, 0)]
+            return x, (jnp.pad(k, pad), jnp.pad(v, pad))
+
+        x, (ks_, vs_) = jax.lax.scan(self_step, x, sp)
+        x = cross_block_full(cp, cfg, x, xk, xv)
+        return x, (ks_, vs_, xk, xv)
+
+    x, (ks_, vs_, xks, xvs) = jax.lax.scan(group_step, x,
+                                           (gp, params["cross"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    rows = jnp.arange(B)
+    logits = h[rows, lengths - 1] @ params["head"]
+    dt = state["k"].dtype
+    new_state = {"k": ks_.astype(dt), "v": vs_.astype(dt),
+                 "xk": xks.astype(dt), "xv": xvs.astype(dt),
+                 "length": lengths}
+    return logits, new_state
+
+
+def decode_step(params, token, state, cfg: ModelConfig, *, window=None):
+    ngroups, nself = _layout(cfg)
+    window = window if window is not None else cfg.sliding_window
+    lengths = state["length"]
+    x = params["embed"][token][:, None]
+    gp = _group_params(params, cfg)
+
+    def group_step(x, xs):
+        sp, ck_g, cv_g, xk, xv = xs
+
+        def self_step(x, xs2):
+            lp, ck, cv = xs2
+            h = apply_norm(lp["ln1"], x, cfg)
+            out, ck, cv = attn.decode_attn_block(
+                lp["attn"], h, ck, cv, lengths, cfg, window=window)
+            x = x + out
+            x = x + apply_mlp(lp["mlp"], apply_norm(lp["ln2"], x, cfg), cfg)
+            return x, (ck, cv)
+
+        x, (nck, ncv) = jax.lax.scan(self_step, x, (sp, ck_g, cv_g))
+        return x, (nck, ncv)
+
+    # scan over groups; cross params indexed alongside
+    def outer(x, xs):
+        (sp, cp, ck_g, cv_g, xk, xv) = xs
+        x, (nck, ncv) = group_step(x, (sp, ck_g, cv_g, xk, xv))
+        x = cross_block_step(cp, cfg, x, xk, xv)
+        return x, (nck, ncv)
+
+    x, (nk, nv) = jax.lax.scan(
+        outer, x, (gp, params["cross"], state["k"], state["v"],
+                   state["xk"], state["xv"]))
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = (h @ params["head"])[:, 0]
+    new_state = dict(state, k=nk, v=nv, length=lengths + 1)
+    return logits, new_state

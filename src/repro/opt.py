@@ -1,0 +1,92 @@
+"""Beyond-paper optimization flags (§Perf hillclimbing).
+
+Every optimization is switchable so the paper-faithful BASELINE stays
+reproducible: ``dryrun --opts none`` lowers the baseline program,
+``--opts all`` (default for production) applies every accepted
+optimization, ``--opts attn_dtype,ring_cache`` picks a subset.
+
+Flags (see EXPERIMENTS.md §Perf for the hypothesis→measure log):
+  attn_dtype    — never materialize an f32 copy of K/V or caches; matmuls
+                  take bf16 operands with preferred_element_type=f32.
+                  (baseline casts the whole cache to f32 every decode step,
+                  which XLA hoists into a full-cache dtype round-trip.)
+  ring_cache    — sliding-window archs keep a ring KV cache of size
+                  window instead of seq_len (decode memory collapse).
+  opt_bf16_moments — AdamW first/second moments in bf16 (DeepSeek-V3's own
+                  recipe), 4x less optimizer HBM.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict
+
+_DEFAULTS: Dict[str, bool] = {
+    "attn_dtype": True,
+    "ring_cache": True,
+    "opt_bf16_moments": True,
+    "moe_ep": True,        # shard_map all-to-all expert parallelism
+    "kv_cache_f8": False,  # float8_e4m3 KV cache (2x decode memory; opt-in —
+                           # changes numerics, so not in the default set)
+    "pallas_attn": False,  # route full-seq attention through the Pallas
+                           # flash kernel (interpret=True on CPU; native on
+                           # TPU). Opt-in: the jnp path is the portable ref.
+    "seq_parallel": False, # Megatron-SP: residual stream (and remat carries)
+                           # sharded over `model` along seq between blocks
+    "chunked_ce": False,   # vocab-chunked cross-entropy: never materialize
+                           # (B,S,V) logits (train-memory lever, opt-in)
+    "serve_tp": False,     # serving-only: weights sharded over (pod, model)
+                           # and REPLICATED over data — no per-step HSDP
+                           # weight all-gather on the decode path (opt-in:
+                           # wrong for training, where FSDP is the point)
+}
+
+_state = threading.local()
+
+
+def _flags() -> Dict[str, bool]:
+    if not hasattr(_state, "flags"):
+        _state.flags = dict(_DEFAULTS)
+    return _state.flags
+
+
+def enabled(name: str) -> bool:
+    return _flags().get(name, False)
+
+
+def set_flags(**kw: bool) -> None:
+    for k, v in kw.items():
+        if k not in _DEFAULTS:
+            raise KeyError(f"unknown optimization flag {k!r}; "
+                           f"available: {sorted(_DEFAULTS)}")
+        _flags()[k] = bool(v)
+
+
+def parse(spec: str) -> Dict[str, bool]:
+    """'none' | 'all' | comma-list of flags ('all,extra_flag' works too)."""
+    if spec == "all":
+        return {k: True for k in _DEFAULTS}
+    if spec == "none":
+        return {k: False for k in _DEFAULTS}
+    chosen = {s.strip() for s in spec.split(",") if s.strip()}
+    base_all = "all" in chosen
+    chosen.discard("all")
+    unknown = chosen - set(_DEFAULTS)
+    if unknown:
+        raise KeyError(f"unknown optimization flags {sorted(unknown)}")
+    return {k: (base_all or k in chosen) for k in _DEFAULTS}
+
+
+@contextlib.contextmanager
+def flags(**kw: bool):
+    old = dict(_flags())
+    try:
+        set_flags(**kw)
+        yield
+    finally:
+        _state.flags = old
+
+
+def all_flags() -> Dict[str, bool]:
+    return dict(_flags())

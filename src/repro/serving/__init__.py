@@ -1,0 +1,4 @@
+from repro.serving.client import FlexServeClient
+from repro.serving.server import FlexServeApp, FlexServeServer
+
+__all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient"]

@@ -1,0 +1,81 @@
+"""REST API schema (kept byte-compatible with the paper's response format).
+
+POST /v1/infer     {"inputs": {"tokens": [[...], ...]}, "policy": "soft_vote"}
+    -> {"model_0": ["class_a", ...], "model_1": [...], "ensemble": [...],
+        "policy": "soft_vote"}                                  (paper §2.3)
+
+POST /v1/detect    {"inputs": {...}, "positive_class": 3, "policy": "or",
+                    "threshold": 0.5}
+    -> {"model_0": [true, false, ...], ..., "ensemble": [...]}   (paper §2.1)
+
+POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16}
+    -> {"outputs": [[...], ...], "steps": n}
+
+GET  /v1/models    -> {"models": [{name, arch, family, params, source}, ...]}
+GET  /health       -> {"status": "ok"}
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, Dict
+
+import numpy as np
+
+
+class ApiError(Exception):
+    def __init__(self, status: int, message: str):
+        super().__init__(message)
+        self.status = status
+        self.message = message
+
+
+def parse_request(body: bytes) -> Dict[str, Any]:
+    try:
+        obj = json.loads(body or b"{}")
+    except json.JSONDecodeError as e:
+        raise ApiError(400, f"invalid JSON: {e}") from None
+    if not isinstance(obj, dict):
+        raise ApiError(400, "request body must be a JSON object")
+    return obj
+
+
+def to_jsonable(obj):
+    if isinstance(obj, dict):
+        return {k: to_jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [to_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return to_jsonable(obj.tolist())
+    if isinstance(obj, (np.bool_,)):
+        return bool(obj)
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    if hasattr(obj, "tolist"):          # jax arrays
+        return to_jsonable(np.asarray(obj))
+    return obj
+
+
+def encode_response(obj: Dict[str, Any]) -> bytes:
+    return json.dumps(to_jsonable(obj)).encode()
+
+
+def inputs_to_batch(inputs: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    if not isinstance(inputs, dict) or not inputs:
+        raise ApiError(400, "'inputs' must be a non-empty object of arrays")
+    batch = {}
+    n = None
+    for k, v in inputs.items():
+        arr = np.asarray(v)
+        if arr.dtype == np.float64:
+            arr = arr.astype(np.float32)
+        if arr.dtype == np.int64:
+            arr = arr.astype(np.int32)
+        if n is None:
+            n = arr.shape[0]
+        elif arr.shape[0] != n:
+            raise ApiError(400, "all inputs must share the batch dimension")
+        batch[k] = arr
+    return batch

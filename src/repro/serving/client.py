@@ -1,0 +1,57 @@
+"""Minimal HTTP client for FlexServe endpoints (stdlib http.client)."""
+
+from __future__ import annotations
+
+import http.client
+import json
+from typing import Any, Dict, List, Optional, Sequence
+
+
+class FlexServeClient:
+    def __init__(self, host: str = "127.0.0.1", port: int = 8000,
+                 timeout: float = 60.0):
+        self.host, self.port, self.timeout = host, port, timeout
+
+    def _request(self, method: str, path: str,
+                 payload: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        conn = http.client.HTTPConnection(self.host, self.port,
+                                          timeout=self.timeout)
+        try:
+            body = json.dumps(payload).encode() if payload is not None else None
+            headers = {"Content-Type": "application/json"} if body else {}
+            conn.request(method, path, body=body, headers=headers)
+            resp = conn.getresponse()
+            data = json.loads(resp.read() or b"{}")
+            if resp.status != 200:
+                raise RuntimeError(
+                    f"{method} {path} -> {resp.status}: "
+                    f"{data.get('error', data)}")
+            return data
+        finally:
+            conn.close()
+
+    def health(self) -> Dict[str, Any]:
+        return self._request("GET", "/health")
+
+    def models(self) -> Dict[str, Any]:
+        return self._request("GET", "/v1/models")
+
+    def infer(self, inputs: Dict[str, Any],
+              policy: str = "soft_vote") -> Dict[str, Any]:
+        return self._request("POST", "/v1/infer",
+                             {"inputs": inputs, "policy": policy})
+
+    def detect(self, inputs: Dict[str, Any], positive_class: int,
+               policy: str = "or", threshold: float = 0.5) -> Dict[str, Any]:
+        return self._request("POST", "/v1/detect",
+                             {"inputs": inputs,
+                              "positive_class": positive_class,
+                              "policy": policy, "threshold": threshold})
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 16,
+                 eos_id: Optional[int] = None) -> Dict[str, Any]:
+        return self._request("POST", "/v1/generate",
+                             {"prompts": [list(p) for p in prompts],
+                              "max_new_tokens": max_new_tokens,
+                              "eos_id": eos_id})

@@ -1,0 +1,187 @@
+"""FlexServe REST server — stdlib ThreadingHTTPServer.
+
+The paper wraps its ensemble in Flask behind a Gunicorn WSGI server; Flask
+is not available in this offline container, so the same architecture is
+built on ``http.server``: a threaded front-end accepts concurrent client
+connections (the Gunicorn-worker analogue for IO), while a single device
+lock serializes accelerator work — on TPU one process owns the chips, so
+worker concurrency buys request pipelining, not parallel compute.
+
+Endpoints are defined in repro.serving.api.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+from repro.core.engine import InferenceEngine
+from repro.core.ensemble import Ensemble
+from repro.core.registry import ModelRegistry
+from repro.serving import api
+
+
+class FlexServeApp:
+    """Bundles a registry, an optional ensemble, and an optional engine."""
+
+    def __init__(self, registry: Optional[ModelRegistry] = None,
+                 ensemble: Optional[Ensemble] = None,
+                 engine: Optional[InferenceEngine] = None):
+        self.registry = registry or ModelRegistry()
+        self.ensemble = ensemble
+        self.engine = engine
+        self.device_lock = threading.Lock()
+        self.request_count = 0
+        self._t0 = time.time()
+        self._route_stats: Dict[str, Dict[str, float]] = {}
+        self._stats_lock = threading.Lock()
+
+    # --- route handlers ------------------------------------------------------
+
+    def handle(self, method: str, path: str,
+               body: bytes) -> Dict[str, Any]:
+        self.request_count += 1
+        t0 = time.perf_counter()
+        try:
+            return self._route(method, path, body)
+        finally:
+            dt = time.perf_counter() - t0
+            with self._stats_lock:
+                st = self._route_stats.setdefault(
+                    f"{method} {path}", {"count": 0, "total_s": 0.0,
+                                         "max_s": 0.0})
+                st["count"] += 1
+                st["total_s"] += dt
+                st["max_s"] = max(st["max_s"], dt)
+
+    def _route(self, method: str, path: str,
+               body: bytes) -> Dict[str, Any]:
+        if method == "GET" and path == "/health":
+            return {"status": "ok", "requests": self.request_count}
+        if method == "GET" and path == "/metrics":
+            with self._stats_lock:
+                routes = {
+                    k: {"count": v["count"],
+                        "mean_ms": 1e3 * v["total_s"] / max(v["count"], 1),
+                        "max_ms": 1e3 * v["max_s"]}
+                    for k, v in self._route_stats.items()}
+            return {"uptime_s": time.time() - self._t0,
+                    "requests": self.request_count, "routes": routes}
+        if method == "GET" and path == "/v1/models":
+            return {"models": self.registry.describe(),
+                    "ensemble_size": (len(self.ensemble.members)
+                                      if self.ensemble else 0)}
+        if method == "POST" and path == "/v1/infer":
+            return self._infer(api.parse_request(body))
+        if method == "POST" and path == "/v1/detect":
+            return self._detect(api.parse_request(body))
+        if method == "POST" and path == "/v1/generate":
+            return self._generate(api.parse_request(body))
+        raise api.ApiError(404, f"no route {method} {path}")
+
+    def _require_ensemble(self) -> Ensemble:
+        if self.ensemble is None:
+            raise api.ApiError(503, "no ensemble deployed on this endpoint")
+        return self.ensemble
+
+    def _infer(self, req) -> Dict[str, Any]:
+        ens = self._require_ensemble()
+        batch = api.inputs_to_batch(req.get("inputs", {}))
+        policy = req.get("policy", "soft_vote")
+        with self.device_lock:
+            try:
+                return ens.respond(batch, policy=policy)
+            except KeyError as e:
+                raise api.ApiError(400, str(e)) from None
+
+    def _detect(self, req) -> Dict[str, Any]:
+        ens = self._require_ensemble()
+        batch = api.inputs_to_batch(req.get("inputs", {}))
+        if "positive_class" not in req:
+            raise api.ApiError(400, "'positive_class' is required")
+        with self.device_lock:
+            out = ens.detect(batch,
+                             positive_class=int(req["positive_class"]),
+                             threshold=float(req.get("threshold", 0.5)),
+                             policy=req.get("policy", "or"))
+        resp = {f"model_{i}": out["members"][m.name]
+                for i, m in enumerate(ens.members)}
+        resp["ensemble"] = out["ensemble"]
+        resp["policy"] = req.get("policy", "or")
+        return resp
+
+    def _generate(self, req) -> Dict[str, Any]:
+        if self.engine is None:
+            raise api.ApiError(503, "no generation engine deployed")
+        prompts = req.get("prompts")
+        if not prompts or not isinstance(prompts, list):
+            raise api.ApiError(400, "'prompts' must be a list of token lists")
+        with self.device_lock:
+            res = self.engine.generate(
+                prompts,
+                max_new_tokens=int(req.get("max_new_tokens", 16)),
+                eos_id=req.get("eos_id"))
+        return {"outputs": res.tokens, "steps": res.steps,
+                "prompt_lengths": res.prompt_lengths}
+
+
+def make_handler(app: FlexServeApp):
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.1"
+
+        def log_message(self, fmt, *args):   # quiet
+            pass
+
+        def _respond(self, status: int, payload: Dict[str, Any]):
+            data = api.encode_response(payload)
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            self.end_headers()
+            self.wfile.write(data)
+
+        def _dispatch(self, method: str):
+            try:
+                length = int(self.headers.get("Content-Length") or 0)
+                body = self.rfile.read(length) if length else b""
+                self._respond(200, app.handle(method, self.path, body))
+            except api.ApiError as e:
+                self._respond(e.status, {"error": e.message})
+            except Exception as e:          # noqa: BLE001 — server boundary
+                self._respond(500, {"error": f"{type(e).__name__}: {e}"})
+
+        def do_GET(self):
+            self._dispatch("GET")
+
+        def do_POST(self):
+            self._dispatch("POST")
+
+    return Handler
+
+
+class FlexServeServer:
+    """Owns the listening socket; ``start()`` serves on a daemon thread."""
+
+    def __init__(self, app: FlexServeApp, host: str = "127.0.0.1",
+                 port: int = 0):
+        self.app = app
+        self.httpd = ThreadingHTTPServer((host, port), make_handler(app))
+        self.httpd.daemon_threads = True
+
+    @property
+    def address(self):
+        return self.httpd.server_address
+
+    def start(self) -> "FlexServeServer":
+        self._thread = threading.Thread(target=self.httpd.serve_forever,
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()

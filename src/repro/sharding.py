@@ -1,0 +1,223 @@
+"""Logical-axis sharding rules.
+
+Models annotate activations with *logical* axes ("batch", "seq", "heads",
+"ff", "embed", "vocab", "expert", "kv") and parameters are assigned specs by
+leaf name.  The translation to mesh axes adapts to whichever production mesh
+is active:
+
+  single-pod mesh (data=16, model=16):   batch->data, heads/ff/vocab->model
+  multi-pod mesh (pod=2, data=16, model=16): batch->(pod,data), rest as above
+
+The 2D weight sharding (d_model dim -> data, ff/head dim -> model) is
+HSDP-style: tensor parallelism over ``model`` with FSDP-style weight
+sharding over ``data`` so that >100B-param archs fit 16 GB/chip HBM.
+
+No jax device state is touched at import time.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Active-mesh context
+# ---------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+def get_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the active mesh for logical-axis translation.
+
+    Also enters the jax mesh context so ``with_sharding_constraint`` works.
+    """
+    prev = get_mesh()
+    _state.mesh = mesh
+    try:
+        if mesh is None:
+            yield
+        else:
+            with mesh:
+                yield
+    finally:
+        _state.mesh = prev
+
+
+# ---------------------------------------------------------------------------
+# Logical -> physical translation
+# ---------------------------------------------------------------------------
+
+# logical axis -> preferred mesh axis (by name)
+_LOGICAL = {
+    "batch": ("data",),
+    "expert": ("data",),       # expert parallelism rides the data axis
+    "heads": ("model",),
+    "kv": ("model",),
+    "ff": ("model",),
+    "vocab": ("model",),
+    "embed": ("data",),        # FSDP axis for the d_model dim of weights
+    "seq": (),                 # unsharded by default (overridden for 500k KV)
+    "seq_sp": (),              # residual-stream seq dim; ("model",) under
+                               # the seq_parallel optimization (see below)
+    "seq_shard": ("model",),   # KV seq sharded over model (decode, kv<16)
+    "seq_full": ("data", "model"),  # KV seq sharded over ALL chips (batch=1)
+    None: (),
+}
+
+
+def physical_axes(logical: Optional[str], mesh: Mesh):
+    """Mesh axes for one logical axis, given the active mesh's axis names."""
+    from repro import opt
+    if logical is None:
+        return None
+    if logical == "seq_sp":
+        return ("model" if (opt.enabled("seq_parallel")
+                            and "model" in mesh.axis_names) else None)
+    if logical == "embed" and opt.enabled("serve_tp"):
+        # serving TP: the d_model dim of weights shards over `pod` (when
+        # present) instead of `data`, so decode never re-gathers weights
+        # across the data axis; batch stays on `data`.
+        return "pod" if "pod" in mesh.axis_names else None
+    want = _LOGICAL[logical]
+    have = mesh.axis_names
+    out = []
+    for ax in want:
+        if ax in have:
+            out.append(ax)
+        # pod extends the data axis (training batch / serving replicas)
+        if ax == "data" and "pod" in have:
+            out.insert(0, "pod")
+    if not out:
+        return None
+    return tuple(out) if len(out) > 1 else out[0]
+
+
+def logical_to_spec(*logical_axes, mesh: Optional[Mesh] = None) -> P:
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        return P()
+    return P(*[physical_axes(a, mesh) for a in logical_axes])
+
+
+def shard(x, *logical_axes):
+    """Constrain an activation's sharding by logical axes. No-op w/o a mesh."""
+    mesh = get_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(*logical_axes, mesh=mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs by leaf name
+# ---------------------------------------------------------------------------
+
+# Leaf-name -> logical axes of the *trailing* dims (layer-stack dims handled
+# by rank padding below).  Names match the init functions in repro.models.
+_PARAM_RULES = {
+    # embeddings / head
+    "embed": ("vocab", "embed"),
+    "head": ("embed", "vocab"),
+    "pos_embed": (None, None),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv"),
+    "wv": ("embed", "kv"),
+    "wo": ("heads", "embed"),
+    "bq": ("heads",), "bk": ("kv",), "bv": ("kv",), "bo": (None,),
+    # MLA
+    "q_a": ("embed", None),
+    "q_b": (None, "heads"),
+    "kv_a": ("embed", None),
+    "kv_b": (None, "heads"),
+    # mlp
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    "b_gate": ("ff",), "b_up": ("ff",), "b_down": (None,),
+    # MoE (leading expert dim)
+    "we_gate": ("expert", None, "ff"),
+    "we_up": ("expert", None, "ff"),
+    "we_down": ("expert", "ff", None),
+    "router": ("embed", None),
+    # shared expert uses plain mlp names via ws_* aliases
+    "ws_gate": ("embed", "ff"),
+    "ws_up": ("embed", "ff"),
+    "ws_down": ("ff", "embed"),
+    # rwkv6 square mixes
+    "w_r": ("embed", "heads"), "w_k": ("embed", "heads"),
+    "w_v": ("embed", "heads"), "w_g": ("embed", "heads"),
+    "w_o": ("heads", "embed"),
+    # mamba2
+    "in_proj": ("embed", "ff"),
+    "out_proj": ("ff", "embed"),
+    "conv_w": (None, "ff"),
+    "conv_b": ("ff",),
+    # vlm / zamba2 adapters
+    "img_k": ("embed", "kv"), "img_v": ("embed", "kv"),
+    "concat_proj": (None, "embed"),
+    "lora_a": ("embed", None), "lora_b": (None, "heads"),
+}
+
+_REPLICATED_SUFFIXES = (
+    "scale", "bias", "mu", "decay", "first", "gate_scalar", "dt_bias",
+    "a_log", "d_skip", "norm", "qnorm", "knorm",
+)
+
+
+def spec_for_leaf(path: tuple, leaf) -> P:
+    """PartitionSpec for one param leaf, from its name + rank."""
+    name = None
+    for part in reversed(path):
+        key = getattr(part, "key", None) or getattr(part, "name", None)
+        if isinstance(key, str):
+            name = key
+            break
+    rank = len(leaf.shape)
+    if name is None:
+        return P()
+    base = _PARAM_RULES.get(name)
+    if base is None:
+        for suf in _REPLICATED_SUFFIXES:
+            if name.endswith(suf) or name.startswith(suf):
+                return P(*([None] * rank))
+        # unknown: replicate (safe default)
+        return P(*([None] * rank))
+    # pad leading layer-stack dims with None
+    pad = rank - len(base)
+    if pad < 0:  # leaf smaller than rule (e.g. smoke config folded dims)
+        base = base[-rank:]
+        pad = 0
+    return P(*([None] * pad), *base)
+
+
+def param_specs(params_tree, mesh: Optional[Mesh] = None):
+    """Pytree of PartitionSpec translated for ``mesh`` (or active mesh)."""
+    mesh = mesh or get_mesh()
+
+    def one(path, leaf):
+        logical = spec_for_leaf(path, leaf)
+        if mesh is None:
+            return P()
+        return P(*[physical_axes(a, mesh) if isinstance(a, str) else None
+                   for a in logical])
+
+    return jax.tree_util.tree_map_with_path(one, params_tree)
+
+
+def param_shardings(params_tree, mesh: Optional[Mesh] = None):
+    mesh = mesh or get_mesh()
+    if mesh is None:
+        raise ValueError("param_shardings requires an active mesh")
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_tree, mesh))

@@ -1,0 +1,10 @@
+from repro.training import checkpoint, data, optimizer
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import OptimizerConfig, OptState
+from repro.training.train_loop import Trainer, TrainerConfig, make_train_step
+
+__all__ = [
+    "checkpoint", "data", "optimizer", "DataConfig", "SyntheticLM",
+    "OptimizerConfig", "OptState", "Trainer", "TrainerConfig",
+    "make_train_step",
+]

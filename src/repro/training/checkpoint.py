@@ -1,0 +1,88 @@
+"""Checkpointing: msgpack + zstd of a flattened param/opt-state pytree.
+
+Layout: <dir>/step_<n>.ckpt — a zstd-compressed msgpack map
+{"meta": {...}, "leaves": {"/path/to/leaf": {dtype, shape, data}}}.
+Trees are restored onto the host then device_put by the caller (so the
+restore path composes with any sharding).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, *, step: int = 0,
+         meta: Optional[Dict[str, Any]] = None) -> str:
+    flat = _flatten(tree)
+    payload = {
+        "meta": dict(meta or {}, step=step),
+        "leaves": {
+            k: {"dtype": str(v.dtype), "shape": list(v.shape),
+                "data": v.tobytes()}
+            for k, v in flat.items()
+        },
+    }
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    raw = msgpack.packb(payload, use_bin_type=True)
+    with open(path, "wb") as f:
+        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+    return path
+
+
+def load(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
+    with open(path, "rb") as f:
+        raw = zstandard.ZstdDecompressor().decompress(f.read())
+    payload = msgpack.unpackb(raw, raw=False)
+    leaves = {
+        k: np.frombuffer(v["data"],
+                         dtype=np.dtype(v["dtype"])).reshape(v["shape"])
+        for k, v in payload["leaves"].items()
+    }
+    return leaves, payload["meta"]
+
+
+def restore(path: str, like_tree) -> Tuple[Any, Dict[str, Any]]:
+    """Restore into the structure of ``like_tree`` (shapes must match)."""
+    leaves, meta = load(path)
+    flat_like = jax.tree_util.tree_flatten_with_path(like_tree)
+    restored = []
+    for p, leaf in flat_like[0]:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = leaves[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        restored.append(jnp.asarray(arr, dtype=leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], restored)
+    return tree, meta
+
+
+def latest(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_step = None, -1
+    for name in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.ckpt", name)
+        if m and int(m.group(1)) > best_step:
+            best, best_step = os.path.join(ckpt_dir, name), int(m.group(1))
+    return best

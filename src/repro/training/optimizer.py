@@ -1,0 +1,107 @@
+"""AdamW + LR schedules in pure JAX (no optax in this container)."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    schedule: str = "cosine"          # cosine | linear | constant
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: Optional[str] = None   # 'bfloat16' = DeepSeek-V3 recipe
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def lr_at(step, cfg: OptimizerConfig):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+    elif cfg.schedule == "linear":
+        decay = 1 - (1 - cfg.min_lr_ratio) * frac
+    else:
+        decay = jnp.ones_like(frac)
+    return cfg.peak_lr * warm * decay
+
+
+def init(params, moment_dtype: Optional[str] = None) -> OptState:
+    dt = jnp.bfloat16 if moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, dt), params)
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros(), nu=zeros())
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _decayable(path) -> bool:
+    """No weight decay on norms/biases/1D params (standard practice)."""
+    name = ""
+    for part in reversed(path):
+        key = getattr(part, "key", None)
+        if isinstance(key, str):
+            name = key
+            break
+    return not any(s in name for s in ("scale", "bias", "nbias", "norm",
+                                       "mu", "w0", "first", "a_log",
+                                       "dt_bias", "d_skip", "gate"))
+
+
+def update(grads, state: OptState, params,
+           cfg: OptimizerConfig) -> Tuple[Any, OptState, Dict[str, Any]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = lr_at(step, cfg)
+    bc1 = 1 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    paths = [p for p, _ in
+             jax.tree_util.tree_flatten_with_path(grads)[0]]
+
+    def one(g, m, n, p, path):
+        g = g.astype(jnp.float32) * scale
+        m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        n2 = cfg.b2 * n.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g)
+        upd = (m2 / bc1) / (jnp.sqrt(n2 / bc2) + cfg.eps)
+        if _decayable(path):
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * upd
+        return p2.astype(p.dtype), m2.astype(m.dtype), n2.astype(n.dtype)
+
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_n = jax.tree_util.tree_leaves(state.nu)
+    flat_p = jax.tree_util.tree_leaves(params)
+    out = [one(g, m, n, p, path) for g, m, n, p, path in
+           zip(flat_g, flat_m, flat_n, flat_p, paths)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_n = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_p, OptState(step=step, mu=new_m, nu=new_n), metrics

@@ -1,0 +1,119 @@
+"""pjit training loop with gradient accumulation and checkpointing."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.build import Model
+from repro.training import checkpoint, optimizer
+from repro.training.optimizer import OptimizerConfig, OptState
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig,
+                    grad_accum: int = 1, remat: bool = True,
+                    accum_dtype=None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    With grad_accum > 1 the global batch is split into microbatches scanned
+    sequentially (activation memory / batch trade-off — a §Perf knob)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat=remat)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def accum_grads(params, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            return loss, metrics, grads
+
+        def micro(carry, mb):
+            acc, lsum = carry
+            (loss, _), grads = grad_fn(params, mb)
+            acc = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(a.dtype), acc, grads)
+            return (acc, lsum + loss), None
+
+        split = jax.tree_util.tree_map(
+            lambda t: t.reshape(grad_accum, t.shape[0] // grad_accum,
+                                *t.shape[1:]), batch)
+        adt = accum_dtype or jnp.float32
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, adt), params)
+        (grads, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), split)
+        grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+        loss = lsum / grad_accum
+        return loss, {"loss": loss}, grads
+
+    def train_step(params, opt_state: OptState, batch):
+        loss, metrics, grads = accum_grads(params, batch)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params, opt_cfg)
+        return params, opt_state, {**metrics, **opt_metrics, "loss": loss}
+
+    return train_step
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 0                  # 0 = only final
+    ckpt_dir: Optional[str] = None
+    grad_accum: int = 1
+    remat: bool = True
+
+
+class Trainer:
+    def __init__(self, model: Model, opt_cfg: OptimizerConfig,
+                 tcfg: TrainerConfig, params=None, rng=None):
+        self.model = model
+        self.tcfg = tcfg
+        self.params = params if params is not None else model.init(
+            rng if rng is not None else jax.random.PRNGKey(0))
+        self.opt_state = optimizer.init(self.params, opt_cfg.moment_dtype)
+        self._step_fn = jax.jit(make_train_step(
+            model, opt_cfg, grad_accum=tcfg.grad_accum, remat=tcfg.remat),
+            donate_argnums=(0, 1))
+        self.history: List[Dict[str, float]] = []
+
+    def fit(self, data_iter, steps: Optional[int] = None,
+            log: Callable[[str], None] = print) -> List[Dict[str, float]]:
+        steps = steps or self.tcfg.total_steps
+        t0 = time.perf_counter()
+        for step in range(1, steps + 1):
+            batch = next(data_iter)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch)
+            if step % self.tcfg.log_every == 0 or step == steps:
+                row = {k: float(v) for k, v in metrics.items()}
+                row["step"] = step
+                row["wall_s"] = time.perf_counter() - t0
+                self.history.append(row)
+                log(f"step {step:5d}  loss {row['loss']:.4f}  "
+                    f"lr {row.get('lr', 0):.2e}  "
+                    f"gnorm {row.get('grad_norm', 0):.2f}  "
+                    f"{row['wall_s']:.1f}s")
+            if (self.tcfg.ckpt_every and self.tcfg.ckpt_dir
+                    and step % self.tcfg.ckpt_every == 0):
+                self.save(step)
+        if self.tcfg.ckpt_dir:
+            self.save(steps)
+        return self.history
+
+    def save(self, step: int) -> str:
+        path = f"{self.tcfg.ckpt_dir}/step_{step}.ckpt"
+        return checkpoint.save(path, {"params": self.params}, step=step,
+                               meta={"arch": self.model.config.name})
+
+    def restore(self, path: str) -> None:
+        tree, _ = checkpoint.restore(path, {"params": self.params})
+        self.params = tree["params"]

@@ -1,0 +1,48 @@
+"""Shared fixtures.
+
+NOTE: no XLA_FLAGS here — tests run on the single real CPU device.  Only
+launch/dryrun.py (separate process) forces 512 host devices.
+"""
+
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
+from repro.models import build_model
+from repro.models.layers import compute_dtype
+
+
+@functools.cache
+def smoke_model(arch: str):
+    cfg = reduce_for_smoke(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def smoke_batch(cfg, B=2, S=16, seed=1, with_labels=True):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))}
+    if with_labels:
+        batch["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32))
+    dt = compute_dtype(cfg)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.vlm.image_tokens,
+                                cfg.vlm.vision_dim)), dt)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.encdec.encoder_frames,
+                                cfg.d_model)), dt)
+    return batch
+
+
+@pytest.fixture(params=list(ASSIGNED_ARCHS))
+def arch(request):
+    return request.param

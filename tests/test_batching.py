@@ -1,0 +1,56 @@
+"""Flexible batching (paper §2.3): bucketing semantics + bounded jit cache."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.batching import (BucketSpec, FlexibleBatcher, pad_batch,
+                                 pad_sequences)
+
+
+def test_bucket_pow2():
+    spec = BucketSpec.pow2(64)
+    assert spec.sizes == (1, 2, 4, 8, 16, 32, 64)
+    assert spec.bucket_for(1) == 1
+    assert spec.bucket_for(3) == 4
+    assert spec.bucket_for(64) == 64
+    with pytest.raises(ValueError):
+        spec.bucket_for(65)
+
+
+def test_pad_batch_masks_rows():
+    batch = {"x": np.arange(6).reshape(3, 2)}
+    padded, mask = pad_batch(batch, 4)
+    assert padded["x"].shape == (4, 2)
+    np.testing.assert_array_equal(mask, [True, True, True, False])
+    np.testing.assert_array_equal(padded["x"][3], [0, 0])
+
+
+def test_flexible_batcher_bounded_compiles():
+    """Any batch size 1..16 must be served by <= len(buckets) jit entries,
+    and results must be independent of padding."""
+    calls = {"n": 0}
+
+    def fn(batch):
+        calls["n"] += 1            # traced once per bucket
+        return batch["x"] * 2.0
+
+    fb = FlexibleBatcher(fn, BucketSpec.pow2(16))
+    for n in (1, 2, 3, 5, 7, 11, 13, 16, 3, 5):
+        x = np.random.default_rng(n).normal(size=(n, 4)).astype(np.float32)
+        out = fb({"x": x})
+        assert out.shape == (n, 4)
+        np.testing.assert_allclose(np.asarray(out), x * 2.0, rtol=1e-6)
+    assert calls["n"] <= len(fb.buckets.sizes)       # bounded tracing
+    assert fb.num_compilations <= len(fb.buckets.sizes)
+    assert fb.calls == 10
+
+
+def test_pad_sequences_roundtrip():
+    seqs = [[1, 2, 3], [4], [5, 6, 7, 8, 9]]
+    tokens, lengths = pad_sequences(seqs, BucketSpec.pow2(16))
+    assert tokens.shape[1] == 8                       # bucket for maxlen 5
+    for i, s in enumerate(seqs):
+        assert list(tokens[i, :len(s)]) == s
+        assert lengths[i] == len(s)
+        assert (tokens[i, len(s):] == 0).all()

@@ -1,0 +1,198 @@
+"""Per-kernel correctness: sweep shapes/dtypes, assert_allclose vs ref.py
+oracles (deliverable c). Kernels run in interpret mode on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from repro.kernels.decode_attention import (decode_attention,
+                                            decode_attention_oracle)
+from repro.kernels.flash_attention import (flash_attention,
+                                           flash_attention_ref)
+from repro.kernels.mamba2_ssd import ssd, ssd_ref
+from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(rtol=3e-2, atol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# --- flash attention ----------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,S,H,K,hd", [
+    (2, 128, 4, 2, 64), (1, 256, 8, 8, 128), (2, 96, 4, 1, 64),
+    (1, 130, 2, 2, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 48),
+                                           (False, None)])
+def test_flash_attention(B, S, H, K, hd, dtype, causal, window):
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, K, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          q_blk=64, kv_blk=64)
+    qt, kt, vt = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    ref = jnp.moveaxis(
+        flash_attention_ref(qt, kt, vt, causal=causal, window=window), 1, 2)
+    assert_allclose(np.asarray(out, np.float32),
+                    np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# --- decode attention -----------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,Smax,H,K,hd,window", [
+    (4, 256, 8, 2, 64, None), (2, 512, 8, 8, 128, None),
+    (3, 300, 4, 1, 64, 64), (2, 1024, 16, 2, 128, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention(B, Smax, H, K, hd, window, dtype):
+    ks = jax.random.split(RNG, 4)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd), dtype)
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, Smax)
+    out = decode_attention(q, ck, cv, lengths, window=window, kv_blk=128)
+    ref = decode_attention_oracle(q, ck, cv, lengths, window=window)
+    assert_allclose(np.asarray(out, np.float32),
+                    np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_decode_attention_empty_rows():
+    """length=1 rows attend only to their own token (no nan/inf)."""
+    B, Smax, H, K, hd = 2, 64, 4, 2, 32
+    ks = jax.random.split(RNG, 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd))
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd))
+    lengths = jnp.asarray([1, 2])
+    out = decode_attention(q, ck, cv, lengths, kv_blk=32)
+    assert bool(jnp.isfinite(out).all())
+    ref = decode_attention_oracle(q, ck, cv, lengths)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# --- rwkv6 wkv -------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 64, 4, 32, 16), (1, 128, 2, 64, 32), (2, 50, 3, 16, 32),
+    (1, 33, 2, 32, 16),
+])
+def test_wkv6(B, T, H, N, chunk):
+    ks = jax.random.split(RNG, 6)
+    r = jax.random.normal(ks[0], (B, T, H, N))
+    k = jax.random.normal(ks[1], (B, T, H, N))
+    v = jax.random.normal(ks[2], (B, T, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) - 1.0)
+    u = jax.random.normal(ks[4], (H, N)) * 0.5
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) * 0.3
+    y, sT = wkv6(r, k, v, logw, u, s0, chunk=chunk)
+    yr, sTr = wkv6_ref(*(jnp.moveaxis(t, 1, 2) for t in (r, k, v, logw)),
+                       u, s0)
+    assert_allclose(np.asarray(y), np.asarray(jnp.moveaxis(yr, 2, 1)),
+                    rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(sT), np.asarray(sTr), rtol=1e-4, atol=1e-4)
+
+
+def test_wkv6_extreme_decay_stability():
+    """Strong data-dependent decay must not overflow/underflow (the
+    division-form chunked WKV fails this; the log-space form must not)."""
+    B, T, H, N = 1, 64, 2, 32
+    ks = jax.random.split(RNG, 5)
+    r = jax.random.normal(ks[0], (B, T, H, N))
+    k = jax.random.normal(ks[1], (B, T, H, N))
+    v = jax.random.normal(ks[2], (B, T, H, N))
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, T, H, N)) + 2.0)  # huge decay
+    u = jnp.zeros((H, N))
+    s0 = jnp.zeros((B, H, N, N))
+    y, sT = wkv6(r, k, v, logw, u, s0, chunk=16)
+    yr, sTr = wkv6_ref(*(jnp.moveaxis(t, 1, 2) for t in (r, k, v, logw)),
+                       u, s0)
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(sT).all())
+    assert_allclose(np.asarray(y), np.asarray(jnp.moveaxis(yr, 2, 1)),
+                    rtol=1e-4, atol=1e-4)
+
+
+# --- mamba2 ssd ---------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,P,N,chunk", [
+    (2, 64, 4, 32, 16, 16), (1, 128, 2, 64, 64, 32), (2, 100, 3, 16, 32, 64),
+])
+def test_ssd(B, T, H, P, N, chunk):
+    ks = jax.random.split(RNG, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.3
+    y, hT = ssd(x, dt, A, Bm, Cm, h0, chunk=chunk)
+    yr, hTr = ssd_ref(x, dt, A, Bm, Cm, h0)
+    scale = float(jnp.abs(yr).max()) + 1.0
+    assert_allclose(np.asarray(y) / scale, np.asarray(yr) / scale,
+                    rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(hT), np.asarray(hTr), rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_state_continuation():
+    """Splitting a sequence across two kernel calls with carried state must
+    equal one full-length call (the continuous-batching invariant)."""
+    B, T, H, P, N = 1, 64, 2, 16, 16
+    ks = jax.random.split(RNG, 6)
+    x = jax.random.normal(ks[0], (B, T, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, T, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, T, N))
+    Cm = jax.random.normal(ks[4], (B, T, N))
+    h0 = jnp.zeros((B, H, P, N))
+    y_full, h_full = ssd(x, dt, A, Bm, Cm, h0, chunk=16)
+    y1, h1 = ssd(x[:, :32], dt[:, :32], A, Bm[:, :32], Cm[:, :32], h0,
+                 chunk=16)
+    y2, h2 = ssd(x[:, 32:], dt[:, 32:], A, Bm[:, 32:], Cm[:, 32:], h1,
+                 chunk=16)
+    assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                    np.asarray(y_full), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(h2), np.asarray(h_full), rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_ragged_lengths():
+    """Per-row kv lengths (continuous-batching prefill) in the kernel."""
+    ks = jax.random.split(RNG, 3)
+    B, S, H, K, hd = 3, 96, 4, 2, 64
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, K, hd))
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+    lengths = jnp.asarray([96, 40, 7], jnp.int32)
+    out = flash_attention(q, k, v, lengths=lengths, q_blk=32, kv_blk=32)
+    qt, kt, vt = (jnp.moveaxis(x, 2, 1) for x in (q, k, v))
+    ref = jnp.moveaxis(
+        flash_attention_ref(qt, kt, vt, lengths=lengths), 1, 2)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_kv_cache_f8_decode():
+    """float8 KV cache (opt kv_cache_f8): quantization error bounded."""
+    from repro import opt
+    from repro.models.attention import decode_attention_ref
+    ks = jax.random.split(RNG, 4)
+    B, Smax, H, K, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (B, H, hd), jnp.bfloat16)
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd), jnp.bfloat16)
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd), jnp.bfloat16)
+    lengths = jnp.asarray([100, 50])
+    exact = decode_attention_ref(q, ck, cv, lengths)
+    quant = decode_attention_ref(q, ck.astype(jnp.float8_e4m3fn),
+                                 cv.astype(jnp.float8_e4m3fn), lengths)
+    err = float(jnp.abs(exact.astype(jnp.float32)
+                        - quant.astype(jnp.float32)).max())
+    assert np.isfinite(err) and err < 0.2   # f8 noise, not garbage

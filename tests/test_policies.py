@@ -1,0 +1,60 @@
+"""Sensitivity-policy unit tests (paper §2.1 semantics)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import policies as pol
+
+
+def test_or_policy_is_max_sensitivity():
+    outputs = jnp.asarray([[0, 0, 1, 0], [0, 1, 0, 0], [0, 0, 0, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(pol.policy_or(outputs)), [False, True, True, False])
+
+
+def test_and_policy_is_max_specificity():
+    outputs = jnp.asarray([[1, 1, 1, 0], [1, 1, 0, 0], [1, 0, 1, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(pol.policy_and(outputs)), [True, False, False, False])
+
+
+def test_majority():
+    outputs = jnp.asarray([[1, 1, 0], [1, 0, 0], [0, 1, 0]])
+    np.testing.assert_array_equal(
+        np.asarray(pol.policy_majority(outputs)), [True, True, False])
+
+
+def test_weighted_reliability():
+    outputs = jnp.asarray([[1, 0], [0, 1]])
+    w_first = jnp.asarray([0.9, 0.1])
+    np.testing.assert_array_equal(
+        np.asarray(pol.policy_weighted(outputs, w_first)), [True, False])
+
+
+def test_soft_vote_averages():
+    probs = jnp.asarray([
+        [[0.9, 0.1], [0.2, 0.8]],
+        [[0.4, 0.6], [0.3, 0.7]],
+    ])
+    out = np.asarray(pol.policy_soft_vote(probs))
+    np.testing.assert_array_equal(out, [0, 1])
+
+
+def test_hard_vote_plurality():
+    probs = jnp.asarray([
+        [[0.6, 0.3, 0.1]], [[0.5, 0.4, 0.1]], [[0.1, 0.8, 0.1]],
+    ])
+    assert int(pol.policy_hard_vote(probs)[0]) == 0
+
+
+def test_max_confidence():
+    probs = jnp.asarray([
+        [[0.55, 0.45]], [[0.05, 0.95]],
+    ])
+    assert int(pol.policy_max_confidence(probs)[0]) == 1
+
+
+def test_get_policy_unknown():
+    with pytest.raises(KeyError):
+        pol.get_policy("nope")

@@ -1,0 +1,101 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import policies as pol
+from repro.core.batching import BucketSpec, pad_sequences
+from repro.models.moe import _positions_in_expert, capacity_for
+
+SETTINGS = settings(max_examples=60, deadline=None)
+
+
+# --- bucketing ---------------------------------------------------------------
+
+
+@SETTINGS
+@given(st.integers(1, 1024), st.integers(1, 10))
+def test_bucket_covers_and_is_minimal(n, log_max):
+    max_size = 2 ** log_max
+    if n > max_size:
+        return
+    spec = BucketSpec.pow2(max_size)
+    b = spec.bucket_for(n)
+    assert b >= n                               # covers the request
+    assert b in spec.sizes
+    smaller = [s for s in spec.sizes if s < b]
+    assert all(s < n for s in smaller)          # minimal bucket
+
+
+@SETTINGS
+@given(st.lists(st.lists(st.integers(1, 99), min_size=1, max_size=40),
+                min_size=1, max_size=8))
+def test_pad_sequences_preserves_content(seqs):
+    tokens, lengths = pad_sequences(seqs, BucketSpec.pow2(64))
+    for i, s in enumerate(seqs):
+        assert lengths[i] == len(s)
+        assert list(tokens[i, :len(s)]) == s
+
+
+# --- sensitivity policies -------------------------------------------------------
+
+
+@SETTINGS
+@given(st.integers(1, 7), st.integers(1, 16), st.integers(0, 2 ** 16))
+def test_policy_ordering(m, b, seed):
+    """AND ⊆ MAJORITY ⊆ OR: OR is the most sensitive policy (the paper's
+    'maximum sensitivity' claim, as a lattice property)."""
+    rng = np.random.default_rng(seed)
+    outputs = jnp.asarray(rng.integers(0, 2, size=(m, b)))
+    o_and = np.asarray(pol.policy_and(outputs))
+    o_maj = np.asarray(pol.policy_majority(outputs))
+    o_or = np.asarray(pol.policy_or(outputs))
+    assert (o_and <= o_maj).all()
+    assert (o_maj <= o_or).all()
+    # OR detects at least as much as every individual member
+    for i in range(m):
+        assert (np.asarray(outputs[i], bool) <= o_or).all()
+
+
+@SETTINGS
+@given(st.integers(2, 6), st.integers(1, 8), st.integers(0, 2 ** 16))
+def test_soft_vote_unanimous_agreement(m, b, seed):
+    """If all members argmax to the same class, soft vote returns it."""
+    rng = np.random.default_rng(seed)
+    c = 5
+    winner = rng.integers(0, c, size=b)
+    probs = rng.dirichlet(np.ones(c) * 0.5, size=(m, b)).astype(np.float32)
+    # force the winner to dominate each member's distribution
+    probs = probs * 0.2
+    for i in range(m):
+        probs[i, np.arange(b), winner] += 0.8
+    out = np.asarray(pol.policy_soft_vote(jnp.asarray(probs)))
+    np.testing.assert_array_equal(out, winner)
+
+
+# --- MoE dispatch ---------------------------------------------------------------
+
+
+@SETTINGS
+@given(st.integers(1, 2000), st.integers(1, 8), st.integers(1, 64))
+def test_capacity_bounds(T, k, E):
+    C = capacity_for(T, k, E)
+    assert C >= 1
+    if T <= 128:
+        assert C == T                           # dropless regime (decode)
+    else:
+        assert C % 8 == 0
+        assert C * E >= T * k                   # covers balanced routing
+
+
+@SETTINGS
+@given(st.integers(1, 300), st.integers(2, 16), st.integers(0, 2 ** 16))
+def test_positions_in_expert_are_unique_ranks(n, E, seed):
+    rng = np.random.default_rng(seed)
+    e = jnp.asarray(rng.integers(0, E, size=n))
+    pos = np.asarray(_positions_in_expert(e, E))
+    e = np.asarray(e)
+    for expert in range(E):
+        ranks = sorted(pos[e == expert])
+        assert ranks == list(range(len(ranks)))   # 0..count-1, no gaps/dups

@@ -1,0 +1,96 @@
+"""REST endpoint integration tests (paper's deployment shell)."""
+
+import concurrent.futures
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_model
+from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
+                        ModelRegistry)
+from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+
+
+@pytest.fixture(scope="module")
+def server():
+    cfg, model, params = smoke_model("yi-9b")
+    registry = ModelRegistry()
+    members = []
+    for i in range(2):
+        pp = model.init(jax.random.PRNGKey(i))
+        registry.register(f"yi#{i}", model, pp)
+
+        def apply(p, batch, _m=model):
+            return _m.forward(p, batch)[:, -1, :8]
+
+        members.append(EnsembleMember(f"yi#{i}", apply, pp, 8))
+    ensemble = Ensemble(members, max_batch=8)
+    engine = InferenceEngine(model, params, max_len=64, max_batch=4)
+    srv = FlexServeServer(FlexServeApp(registry, ensemble, engine)).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture(scope="module")
+def client(server):
+    host, port = server.address
+    return FlexServeClient(host, port)
+
+
+def test_health_and_models(client):
+    assert client.health()["status"] == "ok"
+    models = client.models()
+    assert len(models["models"]) == 2
+    assert models["ensemble_size"] == 2
+    assert models["models"][0]["arch"] == "yi-9b"
+
+
+def test_infer_paper_schema(client):
+    resp = client.infer({"tokens": [[1, 2, 3, 4], [5, 6, 7, 8]]})
+    assert set(resp) >= {"model_0", "model_1", "ensemble", "policy"}
+    assert len(resp["model_0"]) == 2
+    assert all(isinstance(c, str) for c in resp["model_0"])
+
+
+def test_infer_variable_batch_sizes(client):
+    """The paper's flexible-batch claim at the REST boundary."""
+    for n in (1, 3, 5):
+        resp = client.infer({"tokens": [[1, 2, 3, 4]] * n})
+        assert len(resp["model_0"]) == n
+        assert len(resp["ensemble"]) == n
+
+
+def test_detect_policies(client):
+    o = client.detect({"tokens": [[1, 2, 3, 4]]}, positive_class=1,
+                      policy="or", threshold=0.05)
+    a = client.detect({"tokens": [[1, 2, 3, 4]]}, positive_class=1,
+                      policy="and", threshold=0.05)
+    assert isinstance(o["ensemble"][0], bool)
+    assert (not a["ensemble"][0]) or o["ensemble"][0]   # and => or
+
+
+def test_generate(client):
+    resp = client.generate([[1, 2, 3], [9, 8]], max_new_tokens=4)
+    assert len(resp["outputs"]) == 2
+    assert all(len(o) == 4 for o in resp["outputs"])
+
+
+def test_error_handling(client):
+    with pytest.raises(RuntimeError, match="404"):
+        client._request("GET", "/nope")
+    with pytest.raises(RuntimeError, match="400"):
+        client._request("POST", "/v1/infer", {"inputs": {}})
+    with pytest.raises(RuntimeError, match="400"):
+        client._request("POST", "/v1/detect", {"inputs": {"tokens": [[1]]}})
+
+
+def test_concurrent_requests(client):
+    """Threaded front-end: concurrent clients all get correct answers."""
+    def call(n):
+        return client.infer({"tokens": [[n, n + 1, n + 2, n + 3]]})
+
+    with concurrent.futures.ThreadPoolExecutor(4) as ex:
+        results = list(ex.map(call, range(8)))
+    assert all(len(r["model_0"]) == 1 for r in results)

@@ -1,0 +1,88 @@
+"""Sharding rules: leaf-name spec assignment, divisibility sanitation,
+logical-axis translation for both production meshes (no devices needed —
+specs are pure data; jax.make_mesh with 512 devices only happens in the
+dry-run subprocess)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import _PARAM_RULES, spec_for_leaf
+from repro.core.memory import tree_bytes
+
+
+class _FakeMesh:
+    """Duck-typed mesh: .axis_names + .shape mapping (enough for specs)."""
+
+    def __init__(self, shape: dict):
+        self._shape = dict(shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+def _leaf(path_names, shape):
+    class K:
+        def __init__(self, key):
+            self.key = key
+    return tuple(K(n) for n in path_names), jax.ShapeDtypeStruct(
+        shape, jnp.bfloat16)
+
+
+def test_param_rules_2d_weights():
+    path, leaf = _leaf(("layers", "wq"), (48, 4096, 4096))
+    spec = spec_for_leaf(path, leaf)
+    assert spec == P(None, "embed", "heads")     # layer-stack padded
+
+
+def test_param_rules_experts():
+    path, leaf = _leaf(("layers", "we_gate"), (94, 128, 4096, 1536))
+    assert spec_for_leaf(path, leaf) == P(None, "expert", None, "ff")
+
+
+def test_param_rules_norms_replicated():
+    path, leaf = _leaf(("layers", "ln1", "scale"), (48, 4096))
+    assert spec_for_leaf(path, leaf) == P(None, None)
+
+
+def test_unknown_leaves_replicate():
+    path, leaf = _leaf(("layers", "mystery_param"), (3, 7))
+    assert spec_for_leaf(path, leaf) == P(None, None)
+
+
+def test_sanitize_drops_nondivisible():
+    from repro.launch.shardings import sanitize_spec
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    # whisper vocab 51865 is not divisible by 16 -> dropped
+    assert sanitize_spec(P("model", "data"), (51865, 512), mesh) \
+        == P(None, "data")
+    # divisible dims keep their axes
+    assert sanitize_spec(P("model", "data"), (64000, 4096), mesh) \
+        == P("model", "data")
+    # multi-axis entries check the product
+    assert sanitize_spec(P(("data", "model"), None), (512, 4), mesh) \
+        == P(("data", "model"), None)
+    assert sanitize_spec(P(("data", "model"), None), (100, 4), mesh) \
+        == P(None, None)
+
+
+def test_batch_spec_divisibility():
+    from repro.launch.shardings import batch_spec
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    assert batch_spec(mesh, 128, 2) == P("data", None)
+    assert batch_spec(mesh, 1, 2) == P(None, None)       # long_500k
+    mesh2 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec(mesh2, 256, 2) == P(("pod", "data"), None)
+
+
+def test_tree_bytes():
+    tree = {"a": jnp.zeros((4, 4), jnp.float32),
+            "b": jnp.zeros((8,), jnp.bfloat16)}
+    assert tree_bytes(tree) == 4 * 4 * 4 + 8 * 2

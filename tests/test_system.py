@@ -1,0 +1,91 @@
+"""End-to-end system behaviour: the paper's full deployment story in one
+test — N models loaded into one memory space, deployed behind one REST
+endpoint, serving flexible batch sizes with client-chosen sensitivity
+policies, alongside autoregressive generation with continuous batching.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_model
+from repro.core import (ContinuousBatchingScheduler, Ensemble,
+                        EnsembleMember, InferenceEngine, ModelRegistry)
+from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+
+
+@pytest.fixture(scope="module")
+def deployment():
+    """Heterogeneous 3-model ensemble: two dense archs + one SSM — the
+    paper's 'different inductive biases' scenario."""
+    registry = ModelRegistry()
+    members = []
+    engine = None
+    for i, arch in enumerate(["yi-9b", "h2o-danube-1.8b", "rwkv6-1.6b"]):
+        cfg, model, params = smoke_model(arch)
+
+        def apply(p, batch, _m=model):
+            return _m.forward(p, batch)[:, -1, :8]
+
+        registry.register(f"{arch}#{i}", model, params)
+        members.append(EnsembleMember(f"{arch}#{i}", apply, params, 8))
+        if engine is None:
+            engine = InferenceEngine(model, params, max_len=64, max_batch=4)
+    ensemble = Ensemble(members, max_batch=8)
+    app = FlexServeApp(registry, ensemble, engine)
+    srv = FlexServeServer(app).start()
+    host, port = srv.address
+    yield app, FlexServeClient(host, port)
+    srv.stop()
+
+
+def test_multi_model_single_endpoint(deployment):
+    """Paper claim C1: N heterogeneous models behind ONE endpoint."""
+    app, client = deployment
+    models = client.models()
+    assert len(models["models"]) == 3
+    families = {m["family"] for m in models["models"]}
+    assert families == {"dense", "ssm"}
+    resp = client.infer({"tokens": [[1, 2, 3, 4]]})
+    assert {"model_0", "model_1", "model_2", "ensemble"} <= set(resp)
+
+
+def test_shared_memory_space(deployment):
+    """Paper claim C2: all members accounted in one HBM pool."""
+    app, _ = deployment
+    ledger = app.ensemble.memory_ledger(n_chips=1)
+    assert len(ledger.entries) == 3
+    assert ledger.fits()
+
+
+def test_flexible_batching_through_rest(deployment):
+    """Paper claim C3: clients send ANY batch size to the same endpoint."""
+    _, client = deployment
+    sizes = [1, 4, 2, 7, 3]
+    for n in sizes:
+        resp = client.infer(
+            {"tokens": (np.ones((n, 6), np.int32) * 3).tolist()})
+        assert len(resp["ensemble"]) == n
+
+
+def test_sensitivity_policy_selection_per_request(deployment):
+    """Paper claim C1 policies: same inputs, different sensitivity."""
+    _, client = deployment
+    inputs = {"tokens": np.random.default_rng(1).integers(
+        0, 400, (5, 6)).astype(np.int32).tolist()}
+    por = client.detect(inputs, positive_class=2, policy="or",
+                        threshold=0.1)
+    pand = client.detect(inputs, positive_class=2, policy="and",
+                         threshold=0.1)
+    n_or = sum(por["ensemble"])
+    n_and = sum(pand["ensemble"])
+    assert n_and <= n_or                      # OR at least as sensitive
+
+
+def test_generation_with_continuous_batching(deployment):
+    app, _ = deployment
+    sched = ContinuousBatchingScheduler(app.engine, num_slots=2)
+    reqs = [sched.submit([i + 1, i + 2], max_new_tokens=3)
+            for i in range(4)]
+    sched.run()
+    assert all(r.done and len(r.output) == 3 for r in reqs)
