@@ -32,8 +32,13 @@ def main():
                                      "unknown"])
     print(ensemble.memory_ledger(n_chips=1).report())
 
-    # 2. Expose them behind a single REST endpoint (paper §1)
-    server = FlexServeServer(FlexServeApp(registry, ensemble)).start()
+    # 2. Expose them behind a single REST endpoint (paper §1).  Concurrent
+    #    /v1/infer and /v1/detect requests are coalesced server-side into
+    #    one bucketed forward: max_wait_ms bounds how long a request lingers
+    #    for batch-mates, max_coalesce_rows caps rows per forward.
+    app = FlexServeApp(registry, ensemble,
+                       coalesce=True, max_wait_ms=5.0)
+    server = FlexServeServer(app).start()
     host, port = server.address
     client = FlexServeClient(host, port)
     print("models:", [m["name"] for m in client.models()["models"]])
@@ -52,6 +57,14 @@ def main():
         out = client.detect(inputs, positive_class=1, policy=policy,
                             threshold=0.2)
         print(f"policy={policy:8s} ensemble={out['ensemble']}")
+
+    # 5. Observability: coalescing + bounded-jit-cache stats on /metrics
+    m = client.metrics()
+    co = m["coalesce"]
+    print(f"metrics: {m['requests']} requests, "
+          f"{co['batches_formed']} forwards, "
+          f"{co['mean_rows_per_batch']:.2f} rows/forward, "
+          f"compiles per bucket: {m['ensemble_compiles']}")
 
     server.stop()
     print("quickstart OK")

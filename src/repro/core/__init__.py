@@ -3,10 +3,12 @@ from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.memory import MemoryLedger, tree_bytes
 from repro.core.registry import ModelRegistry
-from repro.core.scheduler import ContinuousBatchingScheduler, Request
+from repro.core.scheduler import (ContinuousBatchingScheduler, Request,
+                                  SchedulerService)
 
 __all__ = [
     "BucketSpec", "FlexibleBatcher", "pad_sequences", "InferenceEngine",
     "Ensemble", "EnsembleMember", "MemoryLedger", "tree_bytes",
     "ModelRegistry", "ContinuousBatchingScheduler", "Request",
+    "SchedulerService",
 ]

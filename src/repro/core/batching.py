@@ -73,24 +73,36 @@ class FlexibleBatcher:
 
     def __init__(self, fn: Callable, buckets: BucketSpec,
                  donate: bool = False):
-        self._fn = jax.jit(fn)
+        self.donate = donate
+        self._fn = jax.jit(fn, donate_argnums=(0,) if donate else ())
         self.buckets = buckets
         self.calls = 0
         self.compiles: Dict[int, int] = {}
+
+    def _cache_size(self) -> Optional[int]:
+        probe = getattr(self._fn, "_cache_size", None)
+        return probe() if callable(probe) else None
 
     def __call__(self, batch: Dict[str, Any]):
         n = next(iter(batch.values())).shape[0]
         bucket = self.buckets.bucket_for(n)
         padded, _mask = pad_batch(batch, bucket)
-        if bucket not in self.compiles:
-            self.compiles[bucket] = 1
         self.calls += 1
+        before = self._cache_size()
         out = self._fn(padded)
+        after = self._cache_size()
+        if before is None or after is None:
+            # no cache introspection on this jax — fall back to first-call
+            self.compiles.setdefault(bucket, 1)
+        elif after > before:
+            # a real jit cache miss: this call traced + compiled
+            self.compiles[bucket] = self.compiles.get(bucket, 0) \
+                + (after - before)
         return jax.tree_util.tree_map(lambda t: t[:n], out)
 
     @property
     def num_compilations(self) -> int:
-        return len(self.compiles)
+        return sum(self.compiles.values())
 
 
 def pad_sequences(seqs: Sequence[Sequence[int]], bucket_spec: BucketSpec,

@@ -27,6 +27,13 @@ from repro.core.batching import BucketSpec, FlexibleBatcher
 from repro.core.memory import MemoryLedger
 
 
+def _np_softmax(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.float32)
+    x = x - x.max(axis=-1, keepdims=True)
+    e = np.exp(x)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
 @dataclass
 class EnsembleMember:
     """name + pure apply: (params, batch) -> class logits (B, C)."""
@@ -65,46 +72,79 @@ class Ensemble:
         """Per-member logits for a variable-size batch (bucketed jit)."""
         return self._batcher(batch)
 
-    def probs(self, batch) -> Dict[str, jnp.ndarray]:
-        return {k: jax.nn.softmax(v.astype(jnp.float32), -1)
-                for k, v in self.forward(batch).items()}
+    def probs_from_logits(self, logits: Dict[str, Any]) -> Dict[str, np.ndarray]:
+        """Per-member class probabilities, computed on the HOST in numpy.
 
-    def classify(self, batch, policy: str = "soft_vote",
-                 weights: Optional[np.ndarray] = None) -> Dict[str, Any]:
-        """Per-member argmax classes + policy-combined ensemble output."""
-        probs = self.probs(batch)
-        stacked = jnp.stack([probs[m.name] for m in self.members])  # (M,B,C)
-        per_member = {m.name: jnp.argmax(probs[m.name], -1)
+        Post-processing runs once per request (not per batch) on tiny
+        (B, C) arrays; numpy avoids jax dispatch, which contends badly when
+        many handler threads post-process concurrently."""
+        return {k: _np_softmax(np.asarray(v)) for k, v in logits.items()}
+
+    def probs(self, batch) -> Dict[str, np.ndarray]:
+        return self.probs_from_logits(self.forward(batch))
+
+    def classify_from_logits(self, logits: Dict[str, Any],
+                             policy: str = "soft_vote",
+                             weights: Optional[np.ndarray] = None
+                             ) -> Dict[str, Any]:
+        """Policy combination on precomputed per-member logits — the
+        post-processing half of a coalesced forward (per-request, cheap)."""
+        probs = self.probs_from_logits(logits)
+        stacked = np.stack([probs[m.name] for m in self.members])   # (M,B,C)
+        per_member = {m.name: np.argmax(probs[m.name], -1)
                       for m in self.members}
         fn = pol.get_policy(policy)
         if policy in pol.PROB_POLICIES:
             combined = fn(stacked, weights if weights is None
-                          else jnp.asarray(weights))
+                          else np.asarray(weights))
         else:
             raise ValueError(f"{policy!r} is a binary policy; use detect()")
         return {"members": per_member, "ensemble": combined}
+
+    def classify(self, batch, policy: str = "soft_vote",
+                 weights: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Per-member argmax classes + policy-combined ensemble output."""
+        return self.classify_from_logits(self.forward(batch), policy=policy,
+                                         weights=weights)
+
+    def detect_from_logits(self, logits: Dict[str, Any], positive_class: int,
+                           threshold: float = 0.5, policy: str = "or",
+                           weights: Optional[np.ndarray] = None
+                           ) -> Dict[str, Any]:
+        probs = self.probs_from_logits(logits)
+        binary = np.stack([probs[m.name][:, positive_class] > threshold
+                           for m in self.members])         # (M, B)
+        fn = pol.BINARY_POLICIES[policy]
+        combined = (fn(binary, np.asarray(weights))
+                    if policy == "weighted" else fn(binary))
+        return {"members": {m.name: binary[i]
+                            for i, m in enumerate(self.members)},
+                "ensemble": combined}
 
     def detect(self, batch, positive_class: int, threshold: float = 0.5,
                policy: str = "or",
                weights: Optional[np.ndarray] = None) -> Dict[str, Any]:
         """Binary target detection with a sensitivity policy (paper's use
         case: y' = y_1 | ... | y_n for maximum sensitivity)."""
-        probs = self.probs(batch)
-        binary = jnp.stack([probs[m.name][:, positive_class] > threshold
-                            for m in self.members])        # (M, B)
-        fn = pol.BINARY_POLICIES[policy]
-        combined = (fn(binary, jnp.asarray(weights))
-                    if policy == "weighted" else fn(binary))
-        return {"members": {m.name: binary[i]
-                            for i, m in enumerate(self.members)},
-                "ensemble": combined}
+        return self.detect_from_logits(self.forward(batch), positive_class,
+                                       threshold=threshold, policy=policy,
+                                       weights=weights)
 
     # --- paper-schema response ------------------------------------------------
 
+    def respond_from_logits(self, logits: Dict[str, Any],
+                            policy: str = "soft_vote") -> Dict[str, Any]:
+        """FlexServe JSON schema from precomputed logits (coalesced path)."""
+        out = self.classify_from_logits(logits, policy=policy)
+        return self._format_response(out, policy)
+
     def respond(self, batch, policy: str = "soft_vote") -> Dict[str, Any]:
         """FlexServe JSON schema: {'model_i': ['class', ...], ...}."""
-        out = self.classify(batch, policy=policy)
+        return self._format_response(self.classify(batch, policy=policy),
+                                     policy)
 
+    def _format_response(self, out: Dict[str, Any],
+                         policy: str) -> Dict[str, Any]:
         def names(ids):
             ids = np.asarray(ids)
             if self.class_names:
@@ -116,6 +156,15 @@ class Ensemble:
         resp["ensemble"] = names(out["ensemble"])
         resp["policy"] = policy
         return resp
+
+    @property
+    def batch_buckets(self) -> BucketSpec:
+        return self._batcher.buckets
+
+    @property
+    def compile_counts(self) -> Dict[int, int]:
+        """Per-bucket jit compilation counts (bounded-cache evidence)."""
+        return dict(self._batcher.compiles)
 
     # --- shared-memory accounting ----------------------------------------------
 

@@ -11,14 +11,24 @@ Two input kinds:
   binary  — member outputs (M, B) bool/int (presence of the target)
   probs   — member outputs (M, B, C) class probabilities
 
-All policies are pure jnp and jit-safe.
+All policies are array-agnostic: jax arrays in -> jax ops (jit-safe),
+numpy arrays in -> pure numpy.  The numpy path matters in the serving
+front-end, where per-request post-processing on tiny host arrays must not
+pay (or contend on) jax dispatch — see Ensemble.classify_from_logits.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Dict, Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def _xp(x):
+    """numpy for host arrays, jnp for jax arrays / tracers."""
+    return jnp if isinstance(x, (jax.Array, jax.core.Tracer)) else np
 
 
 # --- binary policies (M, B) -> (B,) -----------------------------------------
@@ -26,28 +36,32 @@ import jax.numpy as jnp
 
 def policy_or(outputs, weights=None):
     """Maximum sensitivity: positive if ANY member is positive."""
-    return jnp.any(outputs.astype(bool), axis=0)
+    return _xp(outputs).any(outputs.astype(bool), axis=0)
 
 
 def policy_and(outputs, weights=None):
     """Maximum specificity: positive only if ALL members agree."""
-    return jnp.all(outputs.astype(bool), axis=0)
+    return _xp(outputs).all(outputs.astype(bool), axis=0)
 
 
 def policy_majority(outputs, weights=None):
     """Positive if more than half the members are positive."""
+    xp = _xp(outputs)
     M = outputs.shape[0]
-    return jnp.sum(outputs.astype(jnp.int32), axis=0) * 2 > M
+    return xp.sum(outputs.astype(xp.int32), axis=0) * 2 > M
 
 
 def policy_weighted(outputs, weights):
     """Weighted vote with per-member reliabilities; threshold 0.5."""
-    w = weights / jnp.sum(weights)
-    return jnp.einsum("m,mb->b", w, outputs.astype(jnp.float32)) > 0.5
+    xp = _xp(outputs)
+    w = xp.asarray(weights)
+    w = w / xp.sum(w)
+    return xp.einsum("m,mb->b", w, outputs.astype(xp.float32)) > 0.5
 
 
 def policy_at_least_k(outputs, k: int):
-    return jnp.sum(outputs.astype(jnp.int32), axis=0) >= k
+    xp = _xp(outputs)
+    return xp.sum(outputs.astype(xp.int32), axis=0) >= k
 
 
 # --- probability policies (M, B, C) -> (B,) class ids ------------------------
@@ -55,27 +69,31 @@ def policy_at_least_k(outputs, k: int):
 
 def policy_soft_vote(probs, weights=None):
     """Average member distributions, then argmax."""
+    xp = _xp(probs)
     if weights is not None:
-        w = (weights / jnp.sum(weights))[:, None, None]
-        return jnp.argmax(jnp.sum(probs * w, axis=0), axis=-1)
-    return jnp.argmax(jnp.mean(probs, axis=0), axis=-1)
+        w = xp.asarray(weights)
+        w = (w / xp.sum(w))[:, None, None]
+        return xp.argmax(xp.sum(probs * w, axis=0), axis=-1)
+    return xp.argmax(xp.mean(probs, axis=0), axis=-1)
 
 
 def policy_hard_vote(probs, weights=None):
     """Each member votes its argmax; plurality wins (ties -> lowest id)."""
+    xp = _xp(probs)
     M, B, C = probs.shape
-    votes = jnp.argmax(probs, axis=-1)                     # (M, B)
-    counts = jnp.sum(votes[:, :, None] == jnp.arange(C)[None, None, :],
-                     axis=0)                               # (B, C)
-    return jnp.argmax(counts, axis=-1)
+    votes = xp.argmax(probs, axis=-1)                      # (M, B)
+    counts = xp.sum(votes[:, :, None] == xp.arange(C)[None, None, :],
+                    axis=0)                                # (B, C)
+    return xp.argmax(counts, axis=-1)
 
 
 def policy_max_confidence(probs, weights=None):
     """The single most confident member decides."""
-    conf = jnp.max(probs, axis=-1)                         # (M, B)
-    best = jnp.argmax(conf, axis=0)                        # (B,)
-    cls = jnp.argmax(probs, axis=-1)                       # (M, B)
-    return jnp.take_along_axis(cls, best[None], axis=0)[0]
+    xp = _xp(probs)
+    conf = xp.max(probs, axis=-1)                          # (M, B)
+    best = xp.argmax(conf, axis=0)                         # (B,)
+    cls = xp.argmax(probs, axis=-1)                        # (M, B)
+    return xp.take_along_axis(cls, best[None], axis=0)[0]
 
 
 BINARY_POLICIES: Dict[str, Callable] = {

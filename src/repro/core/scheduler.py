@@ -15,14 +15,15 @@ from __future__ import annotations
 
 import collections
 import itertools
+import threading
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence
+from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import InferenceEngine
+from repro.core.engine import GenerationResult, InferenceEngine
 
 
 @dataclass
@@ -151,3 +152,107 @@ class ContinuousBatchingScheduler:
             self.state = self._insert(self.state, slot_state, b)
             self.slots[b] = req
             self._last_token[b] = first
+
+
+class SchedulerService:
+    """Thread-safe front-end over ``ContinuousBatchingScheduler``.
+
+    The scheduler itself is single-threaded by design (it mutates pooled
+    device state); the REST server is not.  The service owns ONE driver
+    thread that ticks the scheduler whenever work is pending, while any
+    number of handler threads ``submit_and_wait`` prompts and block on a
+    per-request event.  Concurrent /v1/generate calls therefore share decode
+    steps through slot admission instead of serializing whole-batch
+    ``engine.generate`` calls behind a device lock.
+    """
+
+    def __init__(self, engine: InferenceEngine, num_slots: int = 4):
+        self.scheduler = ContinuousBatchingScheduler(engine, num_slots)
+        self._lock = threading.Lock()
+        self._work = threading.Condition(self._lock)
+        self._events: Dict[int, threading.Event] = {}
+        self._errors: Dict[int, BaseException] = {}
+        self._closed = False
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="flexserve-scheduler")
+        self._thread.start()
+
+    def submit_and_wait(self, prompts: Sequence[Sequence[int]], *,
+                        max_new_tokens: int = 32,
+                        eos_id: Optional[int] = None,
+                        timeout: Optional[float] = None) -> GenerationResult:
+        """Enqueue every prompt as its own slot-admissible request and block
+        until all of them finish; mirrors ``engine.generate``'s result.
+        ``steps`` counts scheduler ticks during this call's lifetime."""
+        for p in prompts:
+            # reject un-admittable prompts synchronously (a caller error
+            # must not reach — and kill — the driver thread)
+            self.scheduler.engine.seq_buckets.bucket_for(len(p))
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("scheduler service is closed")
+            steps0 = self.scheduler.steps
+            pairs: List[Tuple[Request, threading.Event]] = []
+            for p in prompts:
+                req = self.scheduler.submit(p, max_new_tokens=max_new_tokens,
+                                            eos_id=eos_id)
+                ev = threading.Event()
+                self._events[req.req_id] = ev
+                pairs.append((req, ev))
+            self._work.notify()
+        for req, ev in pairs:
+            if not ev.wait(timeout=timeout):
+                raise TimeoutError(f"request {req.req_id} did not finish")
+        with self._lock:
+            errs = [self._errors.pop(r.req_id) for r, _ in pairs
+                    if r.req_id in self._errors]
+            steps = self.scheduler.steps - steps0
+        if errs:
+            raise errs[0]
+        return GenerationResult(
+            tokens=[req.output for req, _ in pairs],
+            prompt_lengths=[len(req.prompt) for req, _ in pairs],
+            steps=steps)
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            s = self.scheduler
+            return {"steps": s.steps, "active_slots": s.active,
+                    "pending": s.pending, "num_slots": s.num_slots,
+                    "completed": len(s.completed)}
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._work.notify()
+        self._thread.join(timeout=5.0)
+
+    def _run(self) -> None:
+        while True:
+            with self._lock:
+                while not self._closed and self.scheduler.idle():
+                    self._work.wait(timeout=0.1)
+                if self._closed:
+                    err = RuntimeError(
+                        "scheduler service closed with requests in flight")
+                    for req_id, ev in self._events.items():
+                        self._errors[req_id] = err
+                        ev.set()
+                    self._events.clear()
+                    return
+                try:
+                    finished = self.scheduler.step()
+                    events = [self._events.pop(r.req_id) for r in finished
+                              if r.req_id in self._events]
+                except BaseException as err:  # noqa: BLE001 — keep driving
+                    # Fail every in-flight request but keep the driver
+                    # alive: a poisoned batch must not hang future ones.
+                    for req_id, ev in self._events.items():
+                        self._errors[req_id] = err
+                        ev.set()
+                    self._events.clear()
+                    self.scheduler.queue.clear()
+                    self.scheduler.slots = [None] * self.scheduler.num_slots
+                    continue
+            for ev in events:
+                ev.set()

@@ -1,4 +1,6 @@
 from repro.serving.client import FlexServeClient
+from repro.serving.coalesce import BatchCoalescer, CoalesceError
 from repro.serving.server import FlexServeApp, FlexServeServer
 
-__all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient"]
+__all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
+           "BatchCoalescer", "CoalesceError"]

@@ -13,6 +13,13 @@ POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16}
 
 GET  /v1/models    -> {"models": [{name, arch, family, params, source}, ...]}
 GET  /health       -> {"status": "ok"}
+GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
+                       "coalesce": {batches_formed, rows_total,
+                                    mean_rows_per_batch, max_rows_per_batch,
+                                    queue_wait_p50_ms, queue_wait_p95_ms},
+                       "ensemble_compiles": {"<bucket>": count, ...},
+                       "generate": {steps, active_slots, pending,
+                                    num_slots, completed}}
 """
 
 from __future__ import annotations
@@ -38,6 +45,16 @@ def parse_request(body: bytes) -> Dict[str, Any]:
     if not isinstance(obj, dict):
         raise ApiError(400, "request body must be a JSON object")
     return obj
+
+
+def opt_int(req: Dict[str, Any], key: str, default: int) -> int:
+    """Integer field with a 400 (not a 500) on malformed values."""
+    val = req.get(key, default)
+    try:
+        return int(val)
+    except (TypeError, ValueError):
+        raise ApiError(400, f"{key!r} must be an integer, "
+                            f"got {val!r}") from None
 
 
 def to_jsonable(obj):

@@ -1,37 +1,114 @@
-"""Minimal HTTP client for FlexServe endpoints (stdlib http.client)."""
+"""Minimal HTTP client for FlexServe endpoints (raw sockets).
+
+Connections are persistent (HTTP/1.1 keep-alive) and thread-local: each
+client thread reuses one TCP connection across requests, with TCP_NODELAY
+so small request/response bodies are never Nagle-stalled.  Requests go out
+as ONE send; responses are parsed with a minimal header scan (status +
+Content-Length) — the same leanness as the server side, so concurrent
+benchmarking measures the endpoint, not stdlib HTTP machinery.  A stale
+connection (server restart, timeout) is transparently re-opened once.
+"""
 
 from __future__ import annotations
 
-import http.client
 import json
-from typing import Any, Dict, List, Optional, Sequence
+import socket
+import threading
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+class _Connection:
+    """One persistent keep-alive connection."""
+
+    def __init__(self, host: str, port: int, timeout: float):
+        self.sock = socket.create_connection((host, port), timeout=timeout)
+        self.sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        self.rfile = self.sock.makefile("rb")
+
+    def close(self) -> None:
+        try:
+            self.rfile.close()
+            self.sock.close()
+        except OSError:
+            pass
+
+    def roundtrip(self, request: bytes) -> Tuple[int, bytes]:
+        self.sock.sendall(request)
+        status_line = self.rfile.readline(65537)
+        if not status_line:
+            raise ConnectionError("server closed the connection")
+        parts = status_line.split(None, 2)
+        if len(parts) < 2 or not parts[0].startswith(b"HTTP/"):
+            raise ConnectionError(f"malformed status line {status_line!r}")
+        status = int(parts[1])
+        length = 0
+        while True:
+            h = self.rfile.readline(65537)
+            if h in (b"\r\n", b"\n", b""):
+                break
+            key, _, val = h.partition(b":")
+            if key.strip().lower() == b"content-length":
+                length = int(val)
+        return status, self.rfile.read(length) if length else b""
 
 
 class FlexServeClient:
     def __init__(self, host: str = "127.0.0.1", port: int = 8000,
                  timeout: float = 60.0):
         self.host, self.port, self.timeout = host, port, timeout
+        self._local = threading.local()
+
+    def _conn(self) -> _Connection:
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = _Connection(self.host, self.port, self.timeout)
+            self._local.conn = conn
+        return conn
+
+    def close(self) -> None:
+        """Close this thread's persistent connection (if any)."""
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None
 
     def _request(self, method: str, path: str,
                  payload: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        conn = http.client.HTTPConnection(self.host, self.port,
-                                          timeout=self.timeout)
-        try:
-            body = json.dumps(payload).encode() if payload is not None else None
-            headers = {"Content-Type": "application/json"} if body else {}
-            conn.request(method, path, body=body, headers=headers)
-            resp = conn.getresponse()
-            data = json.loads(resp.read() or b"{}")
-            if resp.status != 200:
-                raise RuntimeError(
-                    f"{method} {path} -> {resp.status}: "
-                    f"{data.get('error', data)}")
-            return data
-        finally:
-            conn.close()
+        body = json.dumps(payload).encode() if payload is not None else b""
+        request = (f"{method} {path} HTTP/1.1\r\n"
+                   f"Host: {self.host}:{self.port}\r\n"
+                   f"Content-Type: application/json\r\n"
+                   f"Content-Length: {len(body)}\r\n"
+                   f"\r\n").encode("latin-1") + body
+        for attempt in (0, 1):
+            fresh = getattr(self._local, "conn", None) is None
+            try:
+                status, raw = self._conn().roundtrip(request)
+                break
+            except socket.timeout:
+                # The server may still be processing; resending would
+                # execute a non-idempotent POST twice.  Never retry.
+                self.close()
+                raise
+            except (ConnectionError, OSError):
+                self.close()
+                # A REUSED keep-alive connection dying on first read is the
+                # stale-connection case — safe to reconnect once.  A fresh
+                # connection failing is a real error.
+                if attempt or fresh:
+                    raise
+        data = json.loads(raw or b"{}")
+        if status != 200:
+            raise RuntimeError(
+                f"{method} {path} -> {status}: "
+                f"{data.get('error', data)}")
+        return data
 
     def health(self) -> Dict[str, Any]:
         return self._request("GET", "/health")
+
+    def metrics(self) -> Dict[str, Any]:
+        return self._request("GET", "/metrics")
 
     def models(self) -> Dict[str, Any]:
         return self._request("GET", "/v1/models")

@@ -1,0 +1,258 @@
+"""Cross-request batch coalescing (the server-side half of paper §2.3).
+
+The REST front-end is threaded, but the accelerator wants ONE large forward,
+not N concurrent small ones.  ``BatchCoalescer`` sits between the two: HTTP
+handler threads enqueue their input rows and block; a single dispatch thread
+gathers every compatible request that arrives within ``max_wait_ms`` (or
+until ``max_rows`` accumulate), concatenates the rows, runs ONE bucketed
+ensemble forward, and scatters per-request output slices back to the waiting
+threads.  This is the TF-Serving-style request coalescing that turns a model
+endpoint into a throughput device: rows-per-forward grows with concurrency
+while the jit cache stays bounded by the bucket spec.
+
+Only the *forward* is shared — per-request post-processing (vote policy,
+detection threshold) happens on each request's own logits slice, so requests
+with different policies still coalesce into the same device batch.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.batching import BucketSpec
+
+
+@dataclass
+class _Pending:
+    """One request's rows plus the rendezvous the handler thread waits on."""
+
+    batch: Dict[str, np.ndarray]
+    n: int
+    enqueued_at: float
+    event: threading.Event = field(default_factory=threading.Event)
+    result: Optional[Dict[str, np.ndarray]] = None
+    error: Optional[BaseException] = None
+    wait_s: float = 0.0
+
+    def signature(self):
+        """Requests coalesce only when every array agrees on key, trailing
+        shape, and dtype — the concat along axis 0 must be well-formed."""
+        return tuple(sorted((k, v.shape[1:], v.dtype.str)
+                            for k, v in self.batch.items()))
+
+
+class CoalesceError(RuntimeError):
+    pass
+
+
+class BatchCoalescer:
+    """Admission queue + single dispatch thread around a batch-polymorphic
+    ``forward_fn(batch_dict) -> pytree`` (normally ``Ensemble.forward``).
+
+    Parameters
+    ----------
+    forward_fn:   executed on the dispatch thread only — it needs no lock.
+    buckets:      the bucket spec the forward is jitted under; coalesced
+                  groups never exceed the largest bucket.
+    max_wait_ms:  how long the dispatcher lingers for more rows after the
+                  first request of a group arrives (the latency knob).
+    max_rows:     hard cap on rows per forward (default: largest bucket).
+    boundary_grace_ms:
+                  once accumulated rows exactly fill a bucket and the queue
+                  is empty, wait only this long for stragglers before
+                  flushing — long enough to absorb near-simultaneous
+                  arrivals, short enough that a lone request barely notices.
+    """
+
+    def __init__(self, forward_fn: Callable[[Dict[str, np.ndarray]], Any],
+                 buckets: BucketSpec, *, max_wait_ms: float = 5.0,
+                 max_rows: Optional[int] = None,
+                 boundary_grace_ms: float = 1.5):
+        self._forward = forward_fn
+        self.buckets = buckets
+        self.max_wait_s = max_wait_ms / 1e3
+        self.boundary_grace_s = min(boundary_grace_ms / 1e3, self.max_wait_s)
+        self.max_rows = min(max_rows or buckets.sizes[-1], buckets.sizes[-1])
+        self._queue: "queue.Queue[Optional[_Pending]]" = queue.Queue()
+        self._carry: Optional[_Pending] = None
+        self._closed = False
+        # Orders submit() against close(): any entry enqueued under this
+        # lock precedes the close sentinel in the FIFO, so it is always
+        # either executed or drained — never stranded.
+        self._submit_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._batches = 0
+        self._rows = 0
+        self._max_rows_seen = 0
+        self._waits: List[float] = []
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name="flexserve-coalescer")
+        self._thread.start()
+
+    # --- client side (HTTP handler threads) ----------------------------------
+
+    def submit(self, batch: Dict[str, np.ndarray]):
+        """Block until this request's rows have been through a forward;
+        returns the output pytree sliced back to this request's rows."""
+        n = next(iter(batch.values())).shape[0]
+        if n > self.buckets.sizes[-1]:
+            raise ValueError(f"batch of {n} exceeds max bucket "
+                             f"{self.buckets.sizes[-1]}")
+        entry = _Pending({k: np.asarray(v) for k, v in batch.items()},
+                         n, time.perf_counter())
+        with self._submit_lock:
+            if self._closed:
+                raise CoalesceError("coalescer is closed")
+            self._queue.put(entry)
+        entry.event.wait()
+        if entry.error is not None:
+            raise entry.error
+        return entry.result
+
+    def close(self) -> None:
+        with self._submit_lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(None)
+        self._thread.join(timeout=5.0)
+
+    # --- observability --------------------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._stats_lock:
+            waits = sorted(self._waits)
+            batches, rows = self._batches, self._rows
+
+            def pct(p):
+                if not waits:
+                    return 0.0
+                return 1e3 * waits[min(len(waits) - 1,
+                                       int(p * (len(waits) - 1)))]
+
+            return {
+                "batches_formed": batches,
+                "rows_total": rows,
+                "mean_rows_per_batch": rows / batches if batches else 0.0,
+                "max_rows_per_batch": self._max_rows_seen,
+                "queue_wait_p50_ms": pct(0.50),
+                "queue_wait_p95_ms": pct(0.95),
+            }
+
+    # --- dispatch thread ------------------------------------------------------
+
+    def _take(self, timeout: Optional[float]) -> Optional[_Pending]:
+        if self._carry is not None:
+            entry, self._carry = self._carry, None
+            return entry
+        try:
+            return self._queue.get(timeout=timeout)
+        except queue.Empty:
+            return None
+
+    def _run(self) -> None:
+        while True:
+            first = self._take(timeout=0.1)
+            if first is None:
+                if self._closed:
+                    break
+                continue
+            group = self._gather(first)
+            if group is None:          # sentinel mid-gather
+                break
+            self._execute(group)
+        self._drain_on_close()
+
+    def _gather(self, first) -> Optional[List[_Pending]]:
+        """Linger up to max_wait for compatible rows; stop early at a cap."""
+        if first is None:
+            return None
+        group, rows = [first], first.n
+        sig = first.signature()
+        deadline = time.perf_counter() + self.max_wait_s
+        while rows < self.max_rows:
+            remaining = deadline - time.perf_counter()
+            if remaining <= 0:
+                break
+            # Busy-batching: once the queue is drained AND rows exactly fill
+            # a bucket, lingering could only help by reaching the NEXT
+            # bucket (padding up to the current one is already free), so
+            # wait just a short grace for stragglers — near-simultaneous
+            # arrivals join, a lone request barely waits.  Below a boundary
+            # the full max_wait applies: flushing early would pay for
+            # padding rows that a moment of patience could fill.
+            at_boundary = (self._carry is None and self._queue.empty()
+                           and self.buckets.bucket_for(rows) == rows)
+            timeout = (min(remaining, self.boundary_grace_s)
+                       if at_boundary else remaining)
+            nxt = self._take(timeout=timeout)
+            if nxt is None:
+                if self._closed:
+                    self._execute(group)   # serve what we have, then exit
+                    return None
+                break   # grace expired on a boundary, or max_wait elapsed
+            if nxt.signature() != sig or rows + nxt.n > self.max_rows:
+                self._carry = nxt          # heads the next group
+                break
+            group.append(nxt)
+            rows += nxt.n
+        return group
+
+    def _execute(self, group: Sequence[_Pending]) -> None:
+        now = time.perf_counter()
+        rows = sum(e.n for e in group)
+        try:
+            merged = {k: np.concatenate([e.batch[k] for e in group])
+                      for k in group[0].batch}
+            out = self._forward(merged)
+            out_np = _tree_to_numpy(out)
+            off = 0
+            for e in group:
+                e.result = _tree_slice(out_np, off, off + e.n)
+                off += e.n
+        except BaseException as err:       # noqa: BLE001 — scattered to callers
+            for e in group:
+                e.error = err
+        finally:
+            with self._stats_lock:
+                self._batches += 1
+                self._rows += rows
+                self._max_rows_seen = max(self._max_rows_seen, rows)
+                for e in group:
+                    e.wait_s = now - e.enqueued_at
+                    self._waits.append(e.wait_s)
+                if len(self._waits) > 4096:
+                    del self._waits[:-2048]
+            for e in group:
+                e.event.set()
+
+    def _drain_on_close(self) -> None:
+        err = CoalesceError("coalescer closed with requests in flight")
+        while True:
+            entry = self._take(timeout=0)
+            if entry is None:
+                return
+            entry.error = err
+            entry.event.set()
+
+
+def _tree_to_numpy(tree):
+    if isinstance(tree, dict):
+        return {k: _tree_to_numpy(v) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_tree_to_numpy(v) for v in tree)
+    return np.asarray(tree)
+
+
+def _tree_slice(tree, lo: int, hi: int):
+    if isinstance(tree, dict):
+        return {k: _tree_slice(v, lo, hi) for k, v in tree.items()}
+    if isinstance(tree, (list, tuple)):
+        return type(tree)(_tree_slice(v, lo, hi) for v in tree)
+    return tree[lo:hi]

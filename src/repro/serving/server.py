@@ -1,20 +1,28 @@
-"""FlexServe REST server — stdlib ThreadingHTTPServer.
+"""FlexServe REST server — a lean thread-per-connection HTTP front-end.
 
 The paper wraps its ensemble in Flask behind a Gunicorn WSGI server; Flask
 is not available in this offline container, so the same architecture is
-built on ``http.server``: a threaded front-end accepts concurrent client
-connections (the Gunicorn-worker analogue for IO), while a single device
-lock serializes accelerator work — on TPU one process owns the chips, so
-worker concurrency buys request pipelining, not parallel compute.
+built on ``socketserver``: a threaded front-end accepts concurrent client
+connections (the Gunicorn-worker analogue for IO), with a hand-rolled
+keep-alive HTTP/1.1 handler whose per-request cost is a fraction of
+``http.server``'s.
+
+Accelerator work is NOT serialized per request.  Ensemble routes
+(/v1/infer, /v1/detect) funnel through a ``BatchCoalescer`` that merges
+concurrent requests' rows into one bucketed forward; /v1/generate goes
+through a ``SchedulerService`` that admits prompts into continuous-batching
+decode slots.  ``coalesce=False`` restores the legacy one-request-per-
+forward behavior behind a global device lock (kept as the benchmark
+baseline).
 
 Endpoints are defined in repro.serving.api.
 """
 
 from __future__ import annotations
 
+import socketserver
 import threading
 import time
-from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Any, Dict, Optional
 
 import numpy as np
@@ -22,15 +30,25 @@ import numpy as np
 from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
 from repro.core.registry import ModelRegistry
+from repro.core.scheduler import SchedulerService
 from repro.serving import api
+from repro.serving.coalesce import BatchCoalescer
 
 
 class FlexServeApp:
-    """Bundles a registry, an optional ensemble, and an optional engine."""
+    """Bundles a registry, an optional ensemble, and an optional engine.
+
+    ``max_wait_ms`` / ``max_coalesce_rows`` tune the coalescer (how long the
+    dispatcher lingers for more rows, and the rows-per-forward cap);
+    ``num_slots`` sizes the continuous-batching decode pool.
+    """
 
     def __init__(self, registry: Optional[ModelRegistry] = None,
                  ensemble: Optional[Ensemble] = None,
-                 engine: Optional[InferenceEngine] = None):
+                 engine: Optional[InferenceEngine] = None, *,
+                 coalesce: bool = True, max_wait_ms: float = 5.0,
+                 max_coalesce_rows: Optional[int] = None,
+                 num_slots: int = 4):
         self.registry = registry or ModelRegistry()
         self.ensemble = ensemble
         self.engine = engine
@@ -39,12 +57,30 @@ class FlexServeApp:
         self._t0 = time.time()
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
+        self.coalescer: Optional[BatchCoalescer] = None
+        self.generation: Optional[SchedulerService] = None
+        if coalesce and ensemble is not None:
+            self.coalescer = BatchCoalescer(
+                ensemble.forward, ensemble.batch_buckets,
+                max_wait_ms=max_wait_ms, max_rows=max_coalesce_rows)
+        if coalesce and engine is not None:
+            self.generation = SchedulerService(engine, num_slots=num_slots)
+
+    def close(self) -> None:
+        """Stop background dispatch threads (idempotent)."""
+        if self.coalescer is not None:
+            self.coalescer.close()
+            self.coalescer = None
+        if self.generation is not None:
+            self.generation.close()
+            self.generation = None
 
     # --- route handlers ------------------------------------------------------
 
     def handle(self, method: str, path: str,
                body: bytes) -> Dict[str, Any]:
-        self.request_count += 1
+        with self._stats_lock:
+            self.request_count += 1
         t0 = time.perf_counter()
         try:
             return self._route(method, path, body)
@@ -69,8 +105,18 @@ class FlexServeApp:
                         "mean_ms": 1e3 * v["total_s"] / max(v["count"], 1),
                         "max_ms": 1e3 * v["max_s"]}
                     for k, v in self._route_stats.items()}
-            return {"uptime_s": time.time() - self._t0,
-                    "requests": self.request_count, "routes": routes}
+                requests = self.request_count
+            out = {"uptime_s": time.time() - self._t0,
+                   "requests": requests, "routes": routes}
+            if self.coalescer is not None:
+                out["coalesce"] = self.coalescer.stats()
+            if self.ensemble is not None:
+                out["ensemble_compiles"] = {
+                    str(b): c
+                    for b, c in sorted(self.ensemble.compile_counts.items())}
+            if self.generation is not None:
+                out["generate"] = self.generation.stats()
+            return out
         if method == "GET" and path == "/v1/models":
             return {"models": self.registry.describe(),
                     "ensemble_size": (len(self.ensemble.members)
@@ -88,26 +134,40 @@ class FlexServeApp:
             raise api.ApiError(503, "no ensemble deployed on this endpoint")
         return self.ensemble
 
+    def _ensemble_logits(self, batch) -> Dict[str, np.ndarray]:
+        """One forward's worth of per-member logits for this request's rows —
+        coalesced with concurrent requests when the coalescer is on."""
+        ens = self._require_ensemble()
+        try:
+            if self.coalescer is not None:
+                return self.coalescer.submit(batch)
+            with self.device_lock:
+                return ens.forward(batch)
+        except KeyError as e:
+            raise api.ApiError(400, str(e)) from None
+        except ValueError as e:
+            raise api.ApiError(400, str(e)) from None
+
     def _infer(self, req) -> Dict[str, Any]:
         ens = self._require_ensemble()
         batch = api.inputs_to_batch(req.get("inputs", {}))
         policy = req.get("policy", "soft_vote")
-        with self.device_lock:
-            try:
-                return ens.respond(batch, policy=policy)
-            except KeyError as e:
-                raise api.ApiError(400, str(e)) from None
+        logits = self._ensemble_logits(batch)
+        try:
+            return ens.respond_from_logits(logits, policy=policy)
+        except (KeyError, ValueError) as e:
+            raise api.ApiError(400, str(e)) from None
 
     def _detect(self, req) -> Dict[str, Any]:
         ens = self._require_ensemble()
         batch = api.inputs_to_batch(req.get("inputs", {}))
         if "positive_class" not in req:
             raise api.ApiError(400, "'positive_class' is required")
-        with self.device_lock:
-            out = ens.detect(batch,
-                             positive_class=int(req["positive_class"]),
-                             threshold=float(req.get("threshold", 0.5)),
-                             policy=req.get("policy", "or"))
+        logits = self._ensemble_logits(batch)
+        out = ens.detect_from_logits(
+            logits, positive_class=int(req["positive_class"]),
+            threshold=float(req.get("threshold", 0.5)),
+            policy=req.get("policy", "or"))
         resp = {f"model_{i}": out["members"][m.name]
                 for i, m in enumerate(ens.members)}
         resp["ensemble"] = out["ensemble"]
@@ -120,47 +180,98 @@ class FlexServeApp:
         prompts = req.get("prompts")
         if not prompts or not isinstance(prompts, list):
             raise api.ApiError(400, "'prompts' must be a list of token lists")
-        with self.device_lock:
-            res = self.engine.generate(
-                prompts,
-                max_new_tokens=int(req.get("max_new_tokens", 16)),
-                eos_id=req.get("eos_id"))
+        max_new = api.opt_int(req, "max_new_tokens", 16)
+        eos_id = req.get("eos_id")
+        try:
+            if self.generation is not None:
+                res = self.generation.submit_and_wait(
+                    prompts, max_new_tokens=max_new, eos_id=eos_id)
+            else:
+                with self.device_lock:
+                    res = self.engine.generate(
+                        prompts, max_new_tokens=max_new, eos_id=eos_id)
+        except (ValueError, TypeError) as e:
+            raise api.ApiError(400, str(e)) from None
         return {"outputs": res.tokens, "steps": res.steps,
                 "prompt_lengths": res.prompt_lengths}
 
 
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            500: "Internal Server Error", 503: "Service Unavailable"}
+
+
 def make_handler(app: FlexServeApp):
-    class Handler(BaseHTTPRequestHandler):
-        protocol_version = "HTTP/1.1"
+    class Handler(socketserver.StreamRequestHandler):
+        """Lean HTTP/1.1 keep-alive handler.
 
-        def log_message(self, fmt, *args):   # quiet
-            pass
+        The stdlib BaseHTTPRequestHandler parses headers through
+        email.parser and writes responses in several syscalls — measurable
+        per-request cost once the device work is coalesced away.  Serving
+        needs exactly: request line, Content-Length, Connection; the
+        response goes out as ONE write (which also avoids Nagle/delayed-ACK
+        stalls when a coalesced batch releases many responses at once).
+        """
 
-        def _respond(self, status: int, payload: Dict[str, Any]):
-            data = api.encode_response(payload)
-            self.send_response(status)
-            self.send_header("Content-Type", "application/json")
-            self.send_header("Content-Length", str(len(data)))
-            self.end_headers()
-            self.wfile.write(data)
+        disable_nagle_algorithm = True
+        timeout = 120
 
-        def _dispatch(self, method: str):
+        def handle(self):
             try:
-                length = int(self.headers.get("Content-Length") or 0)
-                body = self.rfile.read(length) if length else b""
-                self._respond(200, app.handle(method, self.path, body))
+                while self._one_request():
+                    pass
+            except (ConnectionError, TimeoutError, OSError):
+                pass                          # client went away
+
+        def _one_request(self) -> bool:
+            line = self.rfile.readline(65537)
+            if not line or line in (b"\r\n", b"\n"):
+                return False
+            parts = line.split()
+            if len(parts) < 2:
+                return False
+            method, path = parts[0].decode("latin-1"), \
+                parts[1].decode("latin-1")
+            length, keep = 0, True
+            while True:
+                h = self.rfile.readline(65537)
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                key, _, val = h.partition(b":")
+                key = key.strip().lower()
+                if key == b"content-length":
+                    try:
+                        length = int(val)
+                    except ValueError:
+                        self._reply(400, b'{"error": "bad Content-Length"}',
+                                    False)
+                        return False
+                elif key == b"connection":
+                    keep = b"close" not in val.lower()
+            body = self.rfile.read(length) if length else b""
+            try:
+                status, payload = 200, app.handle(method, path, body)
             except api.ApiError as e:
-                self._respond(e.status, {"error": e.message})
+                status, payload = e.status, {"error": e.message}
             except Exception as e:          # noqa: BLE001 — server boundary
-                self._respond(500, {"error": f"{type(e).__name__}: {e}"})
+                status, payload = 500, {"error": f"{type(e).__name__}: {e}"}
+            data = api.encode_response(payload)
+            self._reply(status, data, keep)
+            return keep
 
-        def do_GET(self):
-            self._dispatch("GET")
-
-        def do_POST(self):
-            self._dispatch("POST")
+        def _reply(self, status: int, data: bytes, keep: bool) -> None:
+            head = (f"HTTP/1.1 {status} {_REASONS.get(status, '')}\r\n"
+                    f"Content-Type: application/json\r\n"
+                    f"Content-Length: {len(data)}\r\n"
+                    f"Connection: {'keep-alive' if keep else 'close'}\r\n"
+                    f"\r\n").encode("latin-1")
+            self.wfile.write(head + data)     # one syscall, one segment
 
     return Handler
+
+
+class _ThreadingServer(socketserver.ThreadingTCPServer):
+    daemon_threads = True
+    allow_reuse_address = True
 
 
 class FlexServeServer:
@@ -169,8 +280,7 @@ class FlexServeServer:
     def __init__(self, app: FlexServeApp, host: str = "127.0.0.1",
                  port: int = 0):
         self.app = app
-        self.httpd = ThreadingHTTPServer((host, port), make_handler(app))
-        self.httpd.daemon_threads = True
+        self.httpd = _ThreadingServer((host, port), make_handler(app))
 
     @property
     def address(self):
@@ -185,3 +295,4 @@ class FlexServeServer:
     def stop(self) -> None:
         self.httpd.shutdown()
         self.httpd.server_close()
+        self.app.close()

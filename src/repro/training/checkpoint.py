@@ -1,7 +1,9 @@
-"""Checkpointing: msgpack + zstd of a flattened param/opt-state pytree.
+"""Checkpointing: msgpack (+ optional zstd) of a flattened pytree.
 
-Layout: <dir>/step_<n>.ckpt — a zstd-compressed msgpack map
-{"meta": {...}, "leaves": {"/path/to/leaf": {dtype, shape, data}}}.
+Layout: <dir>/step_<n>.ckpt — a msgpack map
+{"meta": {...}, "leaves": {"/path/to/leaf": {dtype, shape, data}}},
+zstd-compressed when the ``zstandard`` package is present, raw otherwise
+(the loader sniffs the zstd frame magic, so both layouts interoperate).
 Trees are restored onto the host then device_put by the caller (so the
 restore path composes with any sharding).
 """
@@ -16,7 +18,13 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                    # optional dependency
+    import zstandard
+except ImportError:                     # pragma: no cover - env dependent
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -41,14 +49,22 @@ def save(path: str, tree, *, step: int = 0,
     }
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     raw = msgpack.packb(payload, use_bin_type=True)
+    if zstandard is not None:
+        raw = zstandard.ZstdCompressor(level=3).compress(raw)
     with open(path, "wb") as f:
-        f.write(zstandard.ZstdCompressor(level=3).compress(raw))
+        f.write(raw)
     return path
 
 
 def load(path: str) -> Tuple[Dict[str, np.ndarray], Dict[str, Any]]:
     with open(path, "rb") as f:
-        raw = zstandard.ZstdDecompressor().decompress(f.read())
+        raw = f.read()
+    if raw[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                f"{path} is zstd-compressed but the 'zstandard' package is "
+                "not installed; install it or re-save uncompressed")
+        raw = zstandard.ZstdDecompressor().decompress(raw)
     payload = msgpack.unpackb(raw, raw=False)
     leaves = {
         k: np.frombuffer(v["data"],

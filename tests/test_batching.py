@@ -54,3 +54,72 @@ def test_pad_sequences_roundtrip():
         assert list(tokens[i, :len(s)]) == s
         assert lengths[i] == len(s)
         assert (tokens[i, len(s):] == 0).all()
+
+
+# --- edge cases (deterministic versions of the hypothesis properties) --------
+
+
+def test_bucket_for_at_and_past_max():
+    spec = BucketSpec.pow2(24)                        # non-pow2 max size
+    assert spec.sizes[-1] == 24
+    assert spec.bucket_for(24) == 24                  # n == max: exact fit
+    with pytest.raises(ValueError, match="exceeds max bucket"):
+        spec.bucket_for(25)                           # n > max: rejected
+    assert spec.bucket_for(17) == 24                  # between pow2 and max
+
+
+def test_pad_batch_exact_bucket_is_identity():
+    """n == bucket: zero padding, all-true mask, data untouched."""
+    x = np.arange(8, dtype=np.float32).reshape(4, 2)
+    padded, mask = pad_batch({"x": x}, 4)
+    assert padded["x"].shape == (4, 2)
+    np.testing.assert_array_equal(padded["x"], x)
+    np.testing.assert_array_equal(mask, [True] * 4)
+
+
+def test_pad_batch_mask_marks_only_real_rows():
+    padded, mask = pad_batch({"x": np.ones((3, 2), np.float32),
+                              "y": np.ones((3,), np.int32)}, 8)
+    assert padded["x"].shape == (8, 2)
+    assert padded["y"].shape == (8,)
+    np.testing.assert_array_equal(mask, [True] * 3 + [False] * 5)
+    assert (padded["x"][3:] == 0).all()
+
+
+def test_pad_sequences_single_and_empty_prompt():
+    tokens, lengths = pad_sequences([[7]], BucketSpec.pow2(16))
+    assert tokens.shape == (1, 1)                     # min bucket
+    assert lengths[0] == 1 and tokens[0, 0] == 7
+    # an empty prompt still lands in the smallest bucket, fully padded
+    tokens, lengths = pad_sequences([[]], BucketSpec.pow2(16), pad_id=9)
+    assert tokens.shape == (1, 1)
+    assert lengths[0] == 0 and tokens[0, 0] == 9
+
+
+# --- FlexibleBatcher regression: donation + real compile accounting ----------
+
+
+def test_flexible_batcher_wires_donation():
+    """The donate flag must reach jax.jit (it was silently dropped)."""
+    fb = FlexibleBatcher(lambda b: {"y": b["x"] + 1.0}, BucketSpec.pow2(8),
+                         donate=True)
+    assert fb.donate is True
+    x = np.ones((3, 2), np.float32)
+    out = fb({"x": x})
+    np.testing.assert_allclose(np.asarray(out["y"]), x + 1.0)
+    # calling again with the same bucket must not re-donate stale buffers
+    out2 = fb({"x": x * 2})
+    np.testing.assert_allclose(np.asarray(out2["y"]), x * 2 + 1.0)
+
+
+def test_flexible_batcher_counts_real_compiles():
+    """compiles must track actual jit cache misses, not buckets seen: two
+    batch sizes in the SAME bucket share one compilation."""
+    fb = FlexibleBatcher(lambda b: b["x"] * 3.0, BucketSpec.pow2(8))
+    for n in (3, 4, 4, 3):                            # all land in bucket 4
+        fb({"x": np.ones((n, 2), np.float32)})
+    assert fb.compiles == {4: 1}
+    assert fb.num_compilations == 1
+    fb({"x": np.ones((8, 2), np.float32)})            # new bucket -> one more
+    assert fb.num_compilations == 2
+    assert fb.calls == 5

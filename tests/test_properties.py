@@ -1,8 +1,16 @@
-"""Property-based tests (hypothesis) on system invariants."""
+"""Property-based tests (hypothesis) on system invariants.
+
+Skipped wholesale when hypothesis is not installed (it is an optional dev
+extra, see requirements-dev.txt); deterministic fallbacks for the batching
+invariants live in tests/test_batching.py.
+"""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import policies as pol
 from repro.core.batching import BucketSpec, pad_sequences

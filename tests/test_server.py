@@ -94,3 +94,36 @@ def test_concurrent_requests(client):
     with concurrent.futures.ThreadPoolExecutor(4) as ex:
         results = list(ex.map(call, range(8)))
     assert all(len(r["model_0"]) == 1 for r in results)
+
+
+def test_metrics_exposes_coalescing_stats(client):
+    client.infer({"tokens": [[1, 2, 3, 4]]})
+    m = client.metrics()
+    assert m["requests"] > 0
+    assert "POST /v1/infer" in m["routes"]
+    co = m["coalesce"]
+    assert co["batches_formed"] >= 1
+    assert co["rows_total"] >= co["batches_formed"]
+    assert {"mean_rows_per_batch", "queue_wait_p50_ms",
+            "queue_wait_p95_ms"} <= set(co)
+    # bounded jit cache, reported per bucket
+    assert sum(m["ensemble_compiles"].values()) <= 8
+    assert "steps" in m["generate"]
+
+
+@pytest.mark.slow
+def test_request_count_is_exact_under_concurrency():
+    """request_count increments under the stats lock — a 16-thread /health
+    hammer must land on the exact total (regression: unsynchronized +=)."""
+    app = FlexServeApp()                      # no ensemble/engine needed
+    n_threads, per_thread = 16, 200
+
+    def hammer():
+        for _ in range(per_thread):
+            app.handle("GET", "/health", b"")
+
+    with concurrent.futures.ThreadPoolExecutor(n_threads) as ex:
+        for f in [ex.submit(hammer) for _ in range(n_threads)]:
+            f.result()
+    assert app.request_count == n_threads * per_thread
+    app.close()
