@@ -7,77 +7,94 @@ detectors with different inductive biases (two dense transformer readouts
 + one attention-free RWKV readout) votes under the OR policy so a single
 positive member flags the frame — the paper's y' = y_1 | y_2 | ... | y_n.
 
+The detectors are served FROM A MODEL STORE: each member is published as a
+versioned checkpoint with a provenance manifest (config, param hash,
+source, created-at) and loaded through the lifecycle manager — the same
+path a production endpoint uses for hot swaps and rollbacks.
+
 The modality frontend is stubbed per the assignment: "frames" arrive as
 token sequences from an upstream feature extractor.
 
     PYTHONPATH=src python examples/surveillance_ensemble.py
 """
 
+import tempfile
+
 import jax
 import numpy as np
 
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import Ensemble, EnsembleMember, ModelRegistry
 from repro.models import build_model
-from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           ModelManager, ModelStore)
 
 CLASSES = ["clear", "target"]
 
 
-def build_detectors():
-    registry = ModelRegistry()
-    members = []
+def publish_detectors(store: ModelStore):
+    """Publish one version of each detector to the store (provenance in)."""
     for i, arch in enumerate(["yi-9b", "h2o-danube-1.8b", "rwkv6-1.6b"]):
         cfg = reduce_for_smoke(get_config(arch))
         model = build_model(cfg)
         params = model.init(jax.random.PRNGKey(7 + i))
         name = f"{arch.split('-')[0]}_detector"
-        registry.register(name, model, params)
-
-        def apply(p, batch, _m=model):
-            return _m.forward(p, batch)[:, -1, :2]   # binary detector
-
-        members.append(EnsembleMember(name, apply, params, 2))
-    return registry, Ensemble(members, max_batch=16, class_names=CLASSES)
+        v = store.publish(name, params, config=arch, source=cfg.source,
+                          meta={"reduced": True, "num_classes": 2,
+                                "role": "surveillance-detector"})
+        manifest = store.manifest(name, v)
+        print(f"  published {name} v{v} "
+              f"(param_hash={manifest['param_hash'][:12]}…)")
 
 
 def main():
-    registry, ensemble = build_detectors()
-    server = FlexServeServer(FlexServeApp(registry, ensemble)).start()
-    client = FlexServeClient(*server.address)
+    with tempfile.TemporaryDirectory() as store_dir:
+        store = ModelStore(store_dir)
+        print("publishing detectors to the model store:")
+        publish_detectors(store)
 
-    rng = np.random.default_rng(42)
-    print("sensor streaming chronological batches (variable size):")
-    movement_log = []
-    for t, n_frames in enumerate([2, 5, 1, 3, 7]):      # frames per interval
-        frames = rng.integers(0, 400, (n_frames, 12)).astype(np.int32)
-        resp = client.detect({"tokens": frames.tolist()},
-                             positive_class=1, policy="or", threshold=0.4)
-        hits = resp["ensemble"]
-        movement_log.extend(hits)
-        print(f"  t={t}: {n_frames} frames -> detections={hits} "
-              f"(members: " + ", ".join(
-                  f"{k}={sum(v)}" for k, v in resp.items()
-                  if k.startswith("model_")) + ")")
+        manager = ModelManager(store, max_batch=16, class_names=CLASSES)
+        manager.bootstrap()          # latest version of every stored model
+        server = FlexServeServer(FlexServeApp(manager=manager)).start()
+        client = FlexServeClient(*server.address)
 
-    # crude movement inference from the chronological detection series
-    transitions = sum(1 for a, b in zip(movement_log, movement_log[1:])
-                      if a != b)
-    print(f"movement events inferred from detection series: {transitions}")
+        status = client.model_status("yi_detector")
+        print(f"serving yi_detector v{status['active']['stable']} "
+              f"(created {status['versions'][-1]['created_at']})")
 
-    # the same stream under AND (max specificity) must flag <= OR
-    rng = np.random.default_rng(42)
-    or_total = and_total = 0
-    for n_frames in [2, 5, 1, 3, 7]:
-        frames = rng.integers(0, 400, (n_frames, 12)).astype(np.int32)
-        or_total += sum(client.detect({"tokens": frames.tolist()}, 1,
-                                      "or", 0.4)["ensemble"])
-        and_total += sum(client.detect({"tokens": frames.tolist()}, 1,
-                                       "and", 0.4)["ensemble"])
-    print(f"sensitivity check: OR flagged {or_total}, AND flagged "
-          f"{and_total} (OR >= AND: {or_total >= and_total})")
-    server.stop()
-    print("surveillance example OK")
+        rng = np.random.default_rng(42)
+        print("sensor streaming chronological batches (variable size):")
+        movement_log = []
+        for t, n_frames in enumerate([2, 5, 1, 3, 7]):  # frames per interval
+            frames = rng.integers(0, 400, (n_frames, 12)).astype(np.int32)
+            resp = client.detect({"tokens": frames.tolist()},
+                                 positive_class=1, policy="or",
+                                 threshold=0.4)
+            hits = resp["ensemble"]
+            movement_log.extend(hits)
+            print(f"  t={t}: {n_frames} frames -> detections={hits} "
+                  f"(members: " + ", ".join(
+                      f"{k}={sum(v)}" for k, v in resp.items()
+                      if k.startswith("model_")) + ")")
+
+        # crude movement inference from the chronological detection series
+        transitions = sum(1 for a, b in zip(movement_log, movement_log[1:])
+                          if a != b)
+        print(f"movement events inferred from detection series: "
+              f"{transitions}")
+
+        # the same stream under AND (max specificity) must flag <= OR
+        rng = np.random.default_rng(42)
+        or_total = and_total = 0
+        for n_frames in [2, 5, 1, 3, 7]:
+            frames = rng.integers(0, 400, (n_frames, 12)).astype(np.int32)
+            or_total += sum(client.detect({"tokens": frames.tolist()}, 1,
+                                          "or", 0.4)["ensemble"])
+            and_total += sum(client.detect({"tokens": frames.tolist()}, 1,
+                                           "and", 0.4)["ensemble"])
+        print(f"sensitivity check: OR flagged {or_total}, AND flagged "
+              f"{and_total} (OR >= AND: {or_total >= and_total})")
+        server.stop()
+        print("surveillance example OK")
 
 
 if __name__ == "__main__":

@@ -11,10 +11,21 @@ and runs them in a SINGLE forward call.  The TPU-native realization:
     additional data transformation calls" claim, compiled);
   * outputs are combined under a client-chosen sensitivity policy and
     formatted as the paper's `{'model_i': [class, ...]}` JSON schema.
+
+Membership is SWAPPABLE under live traffic: the jitted forward, its
+param list, and the bucketed batcher live in an immutable
+``_EnsembleState``; ``set_members`` builds (and optionally pre-warms) a
+new state off the hot path, publishes it with one atomic reference
+assignment, then drains in-flight forwards on the old state before the
+caller retires the old params.  Post-processing reads member names from
+the logits dict itself, so a request whose forward ran on the old state
+formats correctly even after the swap.
 """
 
 from __future__ import annotations
 
+import threading
+import time
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
@@ -44,16 +55,20 @@ class EnsembleMember:
     num_classes: int
 
 
-class Ensemble:
-    """N models, one endpoint, one forward call, one memory space."""
+class _EnsembleState:
+    """One immutable membership snapshot: members, jitted forward, batcher.
 
-    def __init__(self, members: Sequence[EnsembleMember],
-                 max_batch: int = 64,
-                 class_names: Optional[List[str]] = None):
+    In-flight forwards are counted so a hot swap can drain the state
+    before the old params are released.
+    """
+
+    def __init__(self, members: Sequence[EnsembleMember], max_batch: int):
         if not members:
             raise ValueError("ensemble needs at least one member")
         self.members = list(members)
-        self.class_names = class_names
+        names = [m.name for m in self.members]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate member names: {names}")
         self._param_list = [m.params for m in self.members]
 
         def _forward_all(param_list, batch):
@@ -62,15 +77,90 @@ class Ensemble:
                     for m, p in zip(self.members, param_list)}
 
         self._forward = jax.jit(_forward_all)
-        self._batcher = FlexibleBatcher(
+        self.batcher = FlexibleBatcher(
             lambda batch: self._forward(self._param_list, batch),
             BucketSpec.pow2(max_batch))
+        self._inflight = 0
+        self._cv = threading.Condition()
+
+    def forward(self, batch: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
+        with self._cv:
+            self._inflight += 1
+        try:
+            return self.batcher(batch)
+        finally:
+            with self._cv:
+                self._inflight -= 1
+                self._cv.notify_all()
+
+    def warm(self, example_batch: Dict[str, Any]) -> float:
+        return self.batcher.warm(example_batch)
+
+    def drain(self, timeout: float) -> bool:
+        """Block until no forward is executing on this state (or timeout)."""
+        deadline = time.perf_counter() + timeout
+        with self._cv:
+            while self._inflight:
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    return False
+                self._cv.wait(remaining)
+        return True
+
+
+class Ensemble:
+    """N models, one endpoint, one forward call, one memory space."""
+
+    def __init__(self, members: Sequence[EnsembleMember],
+                 max_batch: int = 64,
+                 class_names: Optional[List[str]] = None):
+        self.class_names = class_names
+        self.max_batch = max_batch
+        self._state = _EnsembleState(members, max_batch)
+        self._swap_lock = threading.Lock()
+        self._retired_compiles: Dict[int, int] = {}
+
+    @property
+    def members(self) -> List[EnsembleMember]:
+        return self._state.members
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def set_members(self, members: Sequence[EnsembleMember], *,
+                    warm_batch: Optional[Dict[str, Any]] = None,
+                    drain_timeout: float = 30.0) -> Dict[str, Any]:
+        """Hot-swap membership under live traffic.
+
+        Builds the new jitted forward + batcher OFF the hot path, pre-compiles
+        its buckets against ``warm_batch`` when given, atomically publishes
+        the new state, then drains in-flight forwards on the old state so the
+        caller may safely retire the old params.  Requests that began on the
+        old state finish on it; requests that arrive after the publish see
+        only the new membership.
+        """
+        new = _EnsembleState(members, self.max_batch)
+        warm_s = new.warm(warm_batch) if warm_batch is not None else 0.0
+        with self._swap_lock:
+            old, self._state = self._state, new
+        drained = old.drain(drain_timeout)
+        with self._swap_lock:
+            # fold the retired state's compile counts so /metrics totals
+            # stay cumulative across swaps
+            for b, c in old.batcher.compiles.items():
+                self._retired_compiles[b] = \
+                    self._retired_compiles.get(b, 0) + c
+        return {"warm_s": warm_s, "drained": drained,
+                "members": [m.name for m in new.members]}
+
+    def warm(self, example_batch: Dict[str, Any]) -> float:
+        """Pre-compile the CURRENT state's buckets (startup warm-up)."""
+        return self._state.warm(example_batch)
 
     # --- inference ----------------------------------------------------------
 
     def forward(self, batch: Dict[str, Any]) -> Dict[str, jnp.ndarray]:
         """Per-member logits for a variable-size batch (bucketed jit)."""
-        return self._batcher(batch)
+        return self._state.forward(batch)
 
     def probs_from_logits(self, logits: Dict[str, Any]) -> Dict[str, np.ndarray]:
         """Per-member class probabilities, computed on the HOST in numpy.
@@ -88,11 +178,16 @@ class Ensemble:
                              weights: Optional[np.ndarray] = None
                              ) -> Dict[str, Any]:
         """Policy combination on precomputed per-member logits — the
-        post-processing half of a coalesced forward (per-request, cheap)."""
+        post-processing half of a coalesced forward (per-request, cheap).
+
+        Member identity comes from the logits dict (insertion-ordered by
+        the forward that produced it), NOT from current membership: the
+        membership may have been swapped while this request's rows were in
+        flight."""
         probs = self.probs_from_logits(logits)
-        stacked = np.stack([probs[m.name] for m in self.members])   # (M,B,C)
-        per_member = {m.name: np.argmax(probs[m.name], -1)
-                      for m in self.members}
+        names = list(probs)
+        stacked = np.stack([probs[n] for n in names])            # (M,B,C)
+        per_member = {n: np.argmax(probs[n], -1) for n in names}
         fn = pol.get_policy(policy)
         if policy in pol.PROB_POLICIES:
             combined = fn(stacked, weights if weights is None
@@ -112,13 +207,13 @@ class Ensemble:
                            weights: Optional[np.ndarray] = None
                            ) -> Dict[str, Any]:
         probs = self.probs_from_logits(logits)
-        binary = np.stack([probs[m.name][:, positive_class] > threshold
-                           for m in self.members])         # (M, B)
+        names = list(probs)
+        binary = np.stack([probs[n][:, positive_class] > threshold
+                           for n in names])                      # (M, B)
         fn = pol.BINARY_POLICIES[policy]
         combined = (fn(binary, np.asarray(weights))
                     if policy == "weighted" else fn(binary))
-        return {"members": {m.name: binary[i]
-                            for i, m in enumerate(self.members)},
+        return {"members": {n: binary[i] for i, n in enumerate(names)},
                 "ensemble": combined}
 
     def detect(self, batch, positive_class: int, threshold: float = 0.5,
@@ -151,20 +246,25 @@ class Ensemble:
                 return [self.class_names[int(i)] for i in ids]
             return [f"class_{int(i)}" for i in ids]
 
-        resp = {f"model_{i}": names(out["members"][m.name])
-                for i, m in enumerate(self.members)}
+        resp = {f"model_{i}": names(v)
+                for i, v in enumerate(out["members"].values())}
         resp["ensemble"] = names(out["ensemble"])
         resp["policy"] = policy
         return resp
 
     @property
     def batch_buckets(self) -> BucketSpec:
-        return self._batcher.buckets
+        return self._state.batcher.buckets
 
     @property
     def compile_counts(self) -> Dict[int, int]:
-        """Per-bucket jit compilation counts (bounded-cache evidence)."""
-        return dict(self._batcher.compiles)
+        """Per-bucket jit compilation counts, cumulative across swaps
+        (bounded-cache evidence)."""
+        with self._swap_lock:
+            out = dict(self._retired_compiles)
+            for b, c in self._state.batcher.compiles.items():
+                out[b] = out.get(b, 0) + c
+        return out
 
     # --- shared-memory accounting ----------------------------------------------
 
@@ -176,4 +276,4 @@ class Ensemble:
 
     @property
     def num_compilations(self) -> int:
-        return self._batcher.num_compilations
+        return sum(self.compile_counts.values())

@@ -5,6 +5,12 @@ deployment, runnable here); --full targets the production mesh on TPU.
 
   PYTHONPATH=src python -m repro.launch.serve \
       --ensemble yi-9b yi-9b h2o-danube-1.8b --port 8000
+
+With ``--model-store DIR`` the endpoint is store-backed: member params are
+published to (or loaded from) a versioned on-disk model store with
+provenance manifests, and the server exposes the lifecycle admin surface
+(GET /v1/models/{name}, POST .../load /unload /rollback) for hot swaps
+under traffic.
 """
 
 from __future__ import annotations
@@ -18,7 +24,22 @@ from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
 from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
                         ModelRegistry)
 from repro.models.build import build_model
-from repro.serving import FlexServeApp, FlexServeServer
+from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
+                           ModelStore)
+
+
+def _build_engine(arch_names, *, max_len: int, max_batch: int,
+                  full: bool, seed: int):
+    for i, name in enumerate(arch_names):
+        cfg = get_config(name)
+        if not full:
+            cfg = reduce_for_smoke(cfg)
+        if cfg.family in ("dense", "moe", "ssm", "hybrid"):
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed + i))
+            return InferenceEngine(model, params, max_len=max_len,
+                                   max_batch=max_batch)
+    return None
 
 
 def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
@@ -49,6 +70,35 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
     return FlexServeApp(registry, ensemble, engine)
 
 
+def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
+                    max_len: int = 256, max_batch: int = 8,
+                    full: bool = False, seed: int = 0) -> FlexServeApp:
+    """Store-backed startup: seed the store on first run, then serve the
+    LATEST published version of every member through a ModelManager."""
+    store = ModelStore(store_dir)
+    member_names = []
+    for i, name in enumerate(arch_names):
+        reg_name = f"{name}#{i}"
+        member_names.append(reg_name)
+        if store.latest_version(reg_name) is None:
+            cfg = get_config(name)
+            if not full:
+                cfg = reduce_for_smoke(cfg)
+            model = build_model(cfg)
+            params = model.init(jax.random.PRNGKey(seed + i))
+            v = store.publish(reg_name, params, config=name,
+                              source=cfg.source,
+                              meta={"reduced": not full,
+                                    "num_classes": num_classes,
+                                    "init_seed": seed + i})
+            print(f"[serve] published {reg_name} v{v} to {store_dir}")
+    manager = ModelManager(store, max_batch=max_batch)
+    manager.bootstrap(member_names)
+    engine = _build_engine(arch_names, max_len=max_len, max_batch=max_batch,
+                           full=full, seed=seed)
+    return FlexServeApp(engine=engine, manager=manager)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ensemble", nargs="+", default=["yi-9b"],
@@ -58,18 +108,26 @@ def main(argv=None) -> int:
     ap.add_argument("--num-classes", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--model-store", default=None, metavar="DIR",
+                    help="versioned model store directory; enables the "
+                         "lifecycle admin API and hot swaps")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
-    app = build_app(args.ensemble, num_classes=args.num_classes,
-                    max_len=args.max_len, max_batch=args.max_batch,
-                    full=args.full)
+    kw = dict(num_classes=args.num_classes, max_len=args.max_len,
+              max_batch=args.max_batch, full=args.full)
+    if args.model_store:
+        app = build_store_app(args.ensemble, args.model_store, **kw)
+    else:
+        app = build_app(args.ensemble, **kw)
     server = FlexServeServer(app, host=args.host, port=args.port)
     host, port = server.address
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "
           f"{len(app.registry)} model(s): {app.registry.names()}")
-    print("[serve] routes: GET /health /v1/models; "
-          "POST /v1/infer /v1/detect /v1/generate")
+    print("[serve] routes: GET /health /healthz /v1/models "
+          "/v1/models/{name}; POST /v1/infer /v1/detect /v1/generate"
+          + (" /v1/models/{name}/load|unload|rollback"
+             if app.manager else ""))
     try:
         server.httpd.serve_forever()
     except KeyboardInterrupt:

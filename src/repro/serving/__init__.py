@@ -1,6 +1,10 @@
 from repro.serving.client import FlexServeClient
 from repro.serving.coalesce import BatchCoalescer, CoalesceError
+from repro.serving.lifecycle import (LifecycleError, ModelManager,
+                                     default_factory)
+from repro.serving.modelstore import ModelStore, StoreError
 from repro.serving.server import FlexServeApp, FlexServeServer
 
 __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
-           "BatchCoalescer", "CoalesceError"]
+           "BatchCoalescer", "CoalesceError", "ModelStore", "StoreError",
+           "ModelManager", "LifecycleError", "default_factory"]

@@ -1,18 +1,39 @@
 """REST API schema (kept byte-compatible with the paper's response format).
 
-POST /v1/infer     {"inputs": {"tokens": [[...], ...]}, "policy": "soft_vote"}
+POST /v1/infer     {"inputs": {"tokens": [[...], ...]}, "policy": "soft_vote",
+                    "target": "canary"?}
     -> {"model_0": ["class_a", ...], "model_1": [...], "ensemble": [...],
         "policy": "soft_vote"}                                  (paper §2.3)
 
 POST /v1/detect    {"inputs": {...}, "positive_class": 3, "policy": "or",
-                    "threshold": 0.5}
+                    "threshold": 0.5, "target": "stable"?}
     -> {"model_0": [true, false, ...], ..., "ensemble": [...]}   (paper §2.1)
+
+``target`` (optional) names a version alias maintained by the lifecycle
+manager; requests without one hit the default ("stable") alias.
 
 POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16}
     -> {"outputs": [[...], ...], "steps": n}
 
-GET  /v1/models    -> {"models": [{name, arch, family, params, source}, ...]}
-GET  /health       -> {"status": "ok"}
+GET  /v1/models    -> {"models": [{name, version, arch, family, params,
+                                   source, param_hash?}, ...]}
+
+Lifecycle admin surface (when a ModelManager backs the endpoint):
+
+GET  /v1/models/{name}          -> {"versions": [manifest, ...],
+                                    "loaded_versions": [...],
+                                    "active": {alias: version},
+                                    "previous": {alias: version},
+                                    "traffic": {"name@vN": {batches, rows}}}
+POST /v1/models/{name}/load     {"version"?: n, "alias"?: "canary",
+                                 "warm"?: true}
+POST /v1/models/{name}/unload   {"version"?: n}   (omit -> whole member)
+POST /v1/models/{name}/rollback {"alias"?: "stable"}
+
+GET  /health       -> {"status": "ok"}            (liveness: process is up)
+GET  /healthz      -> 200 {"status": "ready"} | 503 {"error": ...}
+                      (readiness: >=1 loaded model, coalescer alive,
+                       not shutting down)
 GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                        "coalesce": {batches_formed, rows_total,
                                     mean_rows_per_batch, max_rows_per_batch,

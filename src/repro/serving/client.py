@@ -14,6 +14,7 @@ from __future__ import annotations
 import json
 import socket
 import threading
+import urllib.parse
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
@@ -107,23 +108,61 @@ class FlexServeClient:
     def health(self) -> Dict[str, Any]:
         return self._request("GET", "/health")
 
+    def healthz(self) -> Dict[str, Any]:
+        """Readiness probe — raises RuntimeError("... 503 ...") until the
+        endpoint has >=1 loaded model and a live coalescer."""
+        return self._request("GET", "/healthz")
+
     def metrics(self) -> Dict[str, Any]:
         return self._request("GET", "/metrics")
 
     def models(self) -> Dict[str, Any]:
         return self._request("GET", "/v1/models")
 
-    def infer(self, inputs: Dict[str, Any],
-              policy: str = "soft_vote") -> Dict[str, Any]:
-        return self._request("POST", "/v1/infer",
-                             {"inputs": inputs, "policy": policy})
+    def _model_path(self, name: str, action: str = "") -> str:
+        # member names may contain '#' (fragment delimiter): encode them
+        return (f"/v1/models/{urllib.parse.quote(name, safe='')}"
+                f"{'/' + action if action else ''}")
+
+    def model_status(self, name: str) -> Dict[str, Any]:
+        return self._request("GET", self._model_path(name))
+
+    def load_model(self, name: str, version: Optional[int] = None,
+                   alias: Optional[str] = None,
+                   warm: bool = True) -> Dict[str, Any]:
+        body: Dict[str, Any] = {"warm": warm}
+        if version is not None:
+            body["version"] = version
+        if alias is not None:
+            body["alias"] = alias
+        return self._request("POST", self._model_path(name, "load"), body)
+
+    def unload_model(self, name: str,
+                     version: Optional[int] = None) -> Dict[str, Any]:
+        body = {} if version is None else {"version": version}
+        return self._request("POST", self._model_path(name, "unload"), body)
+
+    def rollback_model(self, name: str,
+                       alias: Optional[str] = None) -> Dict[str, Any]:
+        body = {} if alias is None else {"alias": alias}
+        return self._request("POST", self._model_path(name, "rollback"), body)
+
+    def infer(self, inputs: Dict[str, Any], policy: str = "soft_vote",
+              target: Optional[str] = None) -> Dict[str, Any]:
+        body: Dict[str, Any] = {"inputs": inputs, "policy": policy}
+        if target is not None:
+            body["target"] = target
+        return self._request("POST", "/v1/infer", body)
 
     def detect(self, inputs: Dict[str, Any], positive_class: int,
-               policy: str = "or", threshold: float = 0.5) -> Dict[str, Any]:
-        return self._request("POST", "/v1/detect",
-                             {"inputs": inputs,
-                              "positive_class": positive_class,
-                              "policy": policy, "threshold": threshold})
+               policy: str = "or", threshold: float = 0.5,
+               target: Optional[str] = None) -> Dict[str, Any]:
+        body: Dict[str, Any] = {"inputs": inputs,
+                                "positive_class": positive_class,
+                                "policy": policy, "threshold": threshold}
+        if target is not None:
+            body["target"] = target
+        return self._request("POST", "/v1/detect", body)
 
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 16,

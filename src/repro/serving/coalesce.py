@@ -10,6 +10,12 @@ threads.  This is the TF-Serving-style request coalescing that turns a model
 endpoint into a throughput device: rows-per-forward grows with concurrency
 while the jit cache stays bounded by the bucket spec.
 
+Incompatible requests do NOT split an open group: the dispatcher keeps one
+sub-queue PER SIGNATURE (array keys/trailing shapes/dtypes, plus an
+optional routing ``tag``), so interleaved traffic with mixed shapes — or
+mixed version-alias targets — coalesces within each signature instead of
+flushing each other's half-filled groups.
+
 Only the *forward* is shared — per-request post-processing (vote policy,
 detection threshold) happens on each request's own logits slice, so requests
 with different policies still coalesce into the same device batch.
@@ -17,11 +23,12 @@ with different policies still coalesce into the same device batch.
 
 from __future__ import annotations
 
+import inspect
 import queue
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence
 
 import numpy as np
 
@@ -35,6 +42,7 @@ class _Pending:
     batch: Dict[str, np.ndarray]
     n: int
     enqueued_at: float
+    tag: Optional[Hashable] = None
     event: threading.Event = field(default_factory=threading.Event)
     result: Optional[Dict[str, np.ndarray]] = None
     error: Optional[BaseException] = None
@@ -42,9 +50,23 @@ class _Pending:
 
     def signature(self):
         """Requests coalesce only when every array agrees on key, trailing
-        shape, and dtype — the concat along axis 0 must be well-formed."""
-        return tuple(sorted((k, v.shape[1:], v.dtype.str)
-                            for k, v in self.batch.items()))
+        shape, and dtype — the concat along axis 0 must be well-formed —
+        AND they share the routing tag (e.g. a version alias)."""
+        return (self.tag,) + tuple(
+            sorted((k, v.shape[1:], v.dtype.str)
+                   for k, v in self.batch.items()))
+
+
+class _Group:
+    """An open per-signature sub-queue accumulating toward one forward."""
+
+    __slots__ = ("entries", "rows", "deadline", "grace_at")
+
+    def __init__(self, first: _Pending, deadline: float):
+        self.entries: List[_Pending] = [first]
+        self.rows = first.n
+        self.deadline = deadline
+        self.grace_at: Optional[float] = None
 
 
 class CoalesceError(RuntimeError):
@@ -54,6 +76,9 @@ class CoalesceError(RuntimeError):
 class BatchCoalescer:
     """Admission queue + single dispatch thread around a batch-polymorphic
     ``forward_fn(batch_dict) -> pytree`` (normally ``Ensemble.forward``).
+    A ``forward_fn(batch_dict, tag)`` is also accepted — the tag given to
+    ``submit`` is passed through, letting the server route each group
+    (e.g. to a version alias's ensemble).
 
     Parameters
     ----------
@@ -64,23 +89,26 @@ class BatchCoalescer:
                   first request of a group arrives (the latency knob).
     max_rows:     hard cap on rows per forward (default: largest bucket).
     boundary_grace_ms:
-                  once accumulated rows exactly fill a bucket and the queue
+                  once a group's rows exactly fill a bucket and the queue
                   is empty, wait only this long for stragglers before
                   flushing — long enough to absorb near-simultaneous
                   arrivals, short enough that a lone request barely notices.
     """
 
-    def __init__(self, forward_fn: Callable[[Dict[str, np.ndarray]], Any],
-                 buckets: BucketSpec, *, max_wait_ms: float = 5.0,
-                 max_rows: Optional[int] = None,
+    def __init__(self, forward_fn: Callable, buckets: BucketSpec, *,
+                 max_wait_ms: float = 5.0, max_rows: Optional[int] = None,
                  boundary_grace_ms: float = 1.5):
         self._forward = forward_fn
+        try:
+            self._fwd_takes_tag = len(
+                inspect.signature(forward_fn).parameters) >= 2
+        except (TypeError, ValueError):   # builtins, odd callables
+            self._fwd_takes_tag = False
         self.buckets = buckets
         self.max_wait_s = max_wait_ms / 1e3
         self.boundary_grace_s = min(boundary_grace_ms / 1e3, self.max_wait_s)
         self.max_rows = min(max_rows or buckets.sizes[-1], buckets.sizes[-1])
         self._queue: "queue.Queue[Optional[_Pending]]" = queue.Queue()
-        self._carry: Optional[_Pending] = None
         self._closed = False
         # Orders submit() against close(): any entry enqueued under this
         # lock precedes the close sentinel in the FIFO, so it is always
@@ -97,7 +125,8 @@ class BatchCoalescer:
 
     # --- client side (HTTP handler threads) ----------------------------------
 
-    def submit(self, batch: Dict[str, np.ndarray]):
+    def submit(self, batch: Dict[str, np.ndarray],
+               tag: Optional[Hashable] = None):
         """Block until this request's rows have been through a forward;
         returns the output pytree sliced back to this request's rows."""
         n = next(iter(batch.values())).shape[0]
@@ -105,7 +134,7 @@ class BatchCoalescer:
             raise ValueError(f"batch of {n} exceeds max bucket "
                              f"{self.buckets.sizes[-1]}")
         entry = _Pending({k: np.asarray(v) for k, v in batch.items()},
-                         n, time.perf_counter())
+                         n, time.perf_counter(), tag)
         with self._submit_lock:
             if self._closed:
                 raise CoalesceError("coalescer is closed")
@@ -122,6 +151,11 @@ class BatchCoalescer:
             self._closed = True
             self._queue.put(None)
         self._thread.join(timeout=5.0)
+
+    @property
+    def alive(self) -> bool:
+        """Dispatch thread running and accepting work (readiness signal)."""
+        return self._thread.is_alive() and not self._closed
 
     # --- observability --------------------------------------------------------
 
@@ -147,62 +181,58 @@ class BatchCoalescer:
 
     # --- dispatch thread ------------------------------------------------------
 
-    def _take(self, timeout: Optional[float]) -> Optional[_Pending]:
-        if self._carry is not None:
-            entry, self._carry = self._carry, None
-            return entry
-        try:
-            return self._queue.get(timeout=timeout)
-        except queue.Empty:
-            return None
+    def _effective_deadline(self, g: _Group, now: float) -> float:
+        # Busy-batching: once a group's rows exactly fill a bucket and no
+        # request is waiting, lingering could only help by reaching the
+        # NEXT bucket (padding up to the current one is already free), so
+        # keep only a short grace for stragglers — near-simultaneous
+        # arrivals join, a lone request barely waits.  Below a boundary the
+        # full max_wait applies: flushing early would pay for padding rows
+        # that a moment of patience could fill.
+        if self._queue.empty() and self.buckets.bucket_for(g.rows) == g.rows:
+            if g.grace_at is None:
+                g.grace_at = now
+            return min(g.deadline, g.grace_at + self.boundary_grace_s)
+        g.grace_at = None
+        return g.deadline
 
     def _run(self) -> None:
+        groups: Dict[Any, _Group] = {}
         while True:
-            first = self._take(timeout=0.1)
-            if first is None:
-                if self._closed:
+            now = time.perf_counter()
+            for sig in list(groups):           # flush expired sub-queues
+                if self._effective_deadline(groups[sig], now) <= now:
+                    self._execute(groups.pop(sig).entries)
+            if groups:
+                timeout = max(
+                    min(self._effective_deadline(g, now) - now
+                        for g in groups.values()), 0.0)
+            else:
+                timeout = 0.1                  # idle poll for the sentinel
+            try:
+                entry = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                if self._closed and not groups:
                     break
                 continue
-            group = self._gather(first)
-            if group is None:          # sentinel mid-gather
+            if entry is None:                  # close sentinel
+                for g in groups.values():      # serve what we have
+                    self._execute(g.entries)
                 break
-            self._execute(group)
+            now = time.perf_counter()          # get() may have blocked long
+            sig = entry.signature()
+            g = groups.get(sig)
+            if g is not None and g.rows + entry.n > self.max_rows:
+                self._execute(groups.pop(sig).entries)   # full: flush, restart
+                g = None
+            if g is None:
+                groups[sig] = g = _Group(entry, now + self.max_wait_s)
+            else:
+                g.entries.append(entry)
+                g.rows += entry.n
+            if g.rows >= self.max_rows:
+                self._execute(groups.pop(sig).entries)
         self._drain_on_close()
-
-    def _gather(self, first) -> Optional[List[_Pending]]:
-        """Linger up to max_wait for compatible rows; stop early at a cap."""
-        if first is None:
-            return None
-        group, rows = [first], first.n
-        sig = first.signature()
-        deadline = time.perf_counter() + self.max_wait_s
-        while rows < self.max_rows:
-            remaining = deadline - time.perf_counter()
-            if remaining <= 0:
-                break
-            # Busy-batching: once the queue is drained AND rows exactly fill
-            # a bucket, lingering could only help by reaching the NEXT
-            # bucket (padding up to the current one is already free), so
-            # wait just a short grace for stragglers — near-simultaneous
-            # arrivals join, a lone request barely waits.  Below a boundary
-            # the full max_wait applies: flushing early would pay for
-            # padding rows that a moment of patience could fill.
-            at_boundary = (self._carry is None and self._queue.empty()
-                           and self.buckets.bucket_for(rows) == rows)
-            timeout = (min(remaining, self.boundary_grace_s)
-                       if at_boundary else remaining)
-            nxt = self._take(timeout=timeout)
-            if nxt is None:
-                if self._closed:
-                    self._execute(group)   # serve what we have, then exit
-                    return None
-                break   # grace expired on a boundary, or max_wait elapsed
-            if nxt.signature() != sig or rows + nxt.n > self.max_rows:
-                self._carry = nxt          # heads the next group
-                break
-            group.append(nxt)
-            rows += nxt.n
-        return group
 
     def _execute(self, group: Sequence[_Pending]) -> None:
         now = time.perf_counter()
@@ -210,7 +240,8 @@ class BatchCoalescer:
         try:
             merged = {k: np.concatenate([e.batch[k] for e in group])
                       for k in group[0].batch}
-            out = self._forward(merged)
+            out = (self._forward(merged, group[0].tag)
+                   if self._fwd_takes_tag else self._forward(merged))
             out_np = _tree_to_numpy(out)
             off = 0
             for e in group:
@@ -235,9 +266,12 @@ class BatchCoalescer:
     def _drain_on_close(self) -> None:
         err = CoalesceError("coalescer closed with requests in flight")
         while True:
-            entry = self._take(timeout=0)
-            if entry is None:
+            try:
+                entry = self._queue.get_nowait()
+            except queue.Empty:
                 return
+            if entry is None:
+                continue
             entry.error = err
             entry.event.set()
 

@@ -1,0 +1,326 @@
+"""Model lifecycle manager: hot load/unload/swap of versioned models.
+
+The TF-Serving-shaped piece FlexServe was missing: the registry used to be
+a process-lifetime dict, so changing the ensemble meant restarting the
+endpoint.  ``ModelManager`` sits between the ``ModelStore`` (durable,
+versioned, provenance-manifested checkpoints) and the live serving stack
+(``ModelRegistry`` + per-alias ``Ensemble``s) and performs membership
+changes WITHOUT dropping traffic:
+
+  load:   restore + hash-verify the version off the hot path, register it,
+          build the new ensemble state, pre-compile its batch buckets
+          against a captured example batch (warm), then atomically publish
+          the state and drain in-flight coalesced batches on the old one.
+  unload: retire a version (refused while any alias still serves it) or a
+          whole member.
+  rollback: swap an alias back to the previously active version.
+
+Version ALIASES ("stable", "canary", ...) each own a membership map and an
+ensemble; ``/v1/infer``/``/v1/detect`` target one per request, so a canary
+version takes real traffic next to stable — sharing the param arrays of
+every member the two aliases have in common.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.ensemble import Ensemble, EnsembleMember
+from repro.core.registry import ModelRegistry
+from repro.serving.modelstore import ModelStore
+
+
+class LifecycleError(RuntimeError):
+    """Admin-plane failure (unknown version, conflict, empty ensemble)."""
+
+
+def default_factory(manifest: Dict[str, Any]):
+    """manifest -> (Model, apply_fn, num_classes) via repro.configs.
+
+    The manifest's ``config`` names the arch; ``reduced`` (default True)
+    selects the smoke-size variant; ``num_classes`` sizes the
+    classification readout (last-position logits), matching launch/serve.
+    """
+    from repro.configs import get_config, reduce_for_smoke
+    from repro.models.build import build_model
+
+    cfg = get_config(manifest["config"])
+    if manifest.get("reduced", True):
+        cfg = reduce_for_smoke(cfg)
+    model = build_model(cfg)
+    num_classes = int(manifest.get("num_classes", 16))
+
+    def apply(p, batch, _m=model, _c=num_classes):
+        return _m.forward(p, batch)[:, -1, :_c]
+
+    return model, apply, num_classes
+
+
+class ModelManager:
+    """Coordinates store <-> registry <-> per-alias ensembles.
+
+    Admin operations (load/unload/rollback) serialize on one lock and do
+    all expensive work (restore, hash verify, jit warm) before the atomic
+    ensemble swap, so the hot path never waits on the admin plane.
+    """
+
+    def __init__(self, store: ModelStore,
+                 registry: Optional[ModelRegistry] = None, *,
+                 factory: Callable[[Dict[str, Any]], Tuple[Any, Any, int]]
+                 = default_factory,
+                 max_batch: int = 8,
+                 class_names: Optional[List[str]] = None,
+                 default_alias: str = "stable",
+                 drain_timeout_s: float = 30.0):
+        self.store = store
+        self.registry = registry or ModelRegistry()
+        self.max_batch = max_batch
+        self.class_names = class_names
+        self.default_alias = default_alias
+        self.drain_timeout_s = drain_timeout_s
+        self._factory = factory
+        self._admin_lock = threading.RLock()
+        # alias -> {member name -> active version}; maps are replaced
+        # wholesale under the admin lock, so hot-path readers always see a
+        # consistent snapshot without locking.
+        self._active: Dict[str, Dict[str, int]] = {}
+        self._ensembles: Dict[str, Ensemble] = {}
+        self._previous: Dict[Tuple[str, str], int] = {}
+        self._warm_example: Optional[Dict[str, np.ndarray]] = None
+        self._stats_lock = threading.Lock()
+        self._counters = {"loads": 0, "unloads": 0, "swaps": 0,
+                          "rollbacks": 0}
+        self._warm_total_s = 0.0
+        self._last_warm_s = 0.0
+        self._version_traffic: Dict[str, Dict[str, int]] = {}
+
+    # --- hot path -------------------------------------------------------------
+
+    @property
+    def ready(self) -> bool:
+        return self.default_alias in self._ensembles
+
+    def aliases(self) -> List[str]:
+        return sorted(self._ensembles)
+
+    def ensemble_for(self, alias: Optional[Hashable] = None) -> Ensemble:
+        alias = alias or self.default_alias
+        try:
+            return self._ensembles[alias]
+        except KeyError:
+            raise LifecycleError(
+                f"no alias {alias!r}; available: {self.aliases()}") from None
+
+    def forward(self, batch: Dict[str, np.ndarray],
+                alias: Optional[Hashable] = None):
+        """Route one (possibly coalesced) batch to an alias's ensemble."""
+        alias = alias or self.default_alias
+        ens = self.ensemble_for(alias)
+        if self._warm_example is None:
+            # remember a one-row example of real traffic: future loads
+            # pre-compile their buckets against this shape
+            self._warm_example = {k: np.asarray(v)[:1].copy()
+                                  for k, v in batch.items()}
+        active = self._active.get(alias, {})
+        rows = next(iter(batch.values())).shape[0]
+        with self._stats_lock:
+            for name, version in active.items():
+                t = self._version_traffic.setdefault(
+                    f"{name}@v{version}", {"batches": 0, "rows": 0})
+                t["batches"] += 1
+                t["rows"] += rows
+        return ens.forward(batch)
+
+    # --- admin plane ----------------------------------------------------------
+
+    def load(self, name: str, version: Optional[int] = None, *,
+             alias: Optional[str] = None, warm: bool = True,
+             warm_example: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Load a store version and hot-swap it into an alias's ensemble."""
+        alias = alias or self.default_alias
+        with self._admin_lock:
+            if version is None:
+                version = self.store.latest_version(name)
+                if version is None:
+                    raise LifecycleError(
+                        f"store has no published versions of {name!r}")
+            manifest = self.store.manifest(name, version)   # raises StoreError
+            rm = self._materialize(name, version, manifest)
+            base = self._active.get(alias,
+                                    self._active.get(self.default_alias, {}))
+            old_version = self._active.get(alias, {}).get(name)
+            new_map = dict(base)
+            new_map[name] = version
+            swap = self._apply_membership(
+                alias, new_map, warm=warm, warm_example=warm_example)
+            if old_version is not None and old_version != version:
+                self._previous[(alias, name)] = old_version
+            with self._stats_lock:
+                self._counters["loads"] += 1
+            return {"name": name, "version": version, "alias": alias,
+                    "previous_version": old_version,
+                    "manifest": manifest, **swap}
+
+    def unload(self, name: str, version: Optional[int] = None) -> Dict[str, Any]:
+        """Retire a loaded version, or the whole member when version is None.
+
+        A version still active in any alias is refused (conflict) — swap or
+        roll the alias first.  Removing the last member of an ensemble is
+        refused for the same reason: the endpoint must keep serving.
+        """
+        with self._admin_lock:
+            if version is not None:
+                holders = [a for a, m in self._active.items()
+                           if m.get(name) == version]
+                if holders:
+                    raise LifecycleError(
+                        f"{name} v{version} is active in alias(es) "
+                        f"{holders}; load another version or unload the "
+                        f"member")
+                self.registry.unregister(name, version)   # KeyError if absent
+                with self._stats_lock:
+                    self._counters["unloads"] += 1
+                return {"name": name, "version": version, "unloaded": True}
+            # whole-member retirement, every alias — validate every alias
+            # BEFORE mutating any, so a refused unload changes nothing
+            if not any(name in m for m in self._active.values()):
+                raise LifecycleError(f"{name!r} is not an ensemble member")
+            new_maps = {}
+            for a, members in self._active.items():
+                if name not in members:
+                    continue
+                new_map = {k: v for k, v in members.items() if k != name}
+                if not new_map:
+                    raise LifecycleError(
+                        f"unloading {name!r} would empty alias {a!r}")
+                new_maps[a] = new_map
+            swaps = {a: self._apply_membership(a, new_map, warm=False)
+                     for a, new_map in new_maps.items()}
+            self.registry.unregister(name)
+            self._previous = {k: v for k, v in self._previous.items()
+                              if k[1] != name}
+            with self._stats_lock:
+                self._counters["unloads"] += 1
+            return {"name": name, "unloaded": True, "aliases": swaps}
+
+    def rollback(self, name: str, *,
+                 alias: Optional[str] = None, warm: bool = True) -> Dict[str, Any]:
+        """Swap an alias back to the member's previously active version."""
+        alias = alias or self.default_alias
+        with self._admin_lock:
+            prev = self._previous.get((alias, name))
+            if prev is None:
+                raise LifecycleError(
+                    f"no previous version of {name!r} recorded for alias "
+                    f"{alias!r}")
+            result = self.load(name, prev, alias=alias, warm=warm)
+            with self._stats_lock:
+                self._counters["rollbacks"] += 1
+                self._counters["loads"] -= 1    # it was a rollback, not a load
+            result["rolled_back_to"] = prev
+            return result
+
+    def bootstrap(self, names: Optional[List[str]] = None, *,
+                  warm_example: Optional[Dict[str, Any]] = None) -> "ModelManager":
+        """Load the latest store version of every named model (default: all
+        models in the store) into the default alias — endpoint startup."""
+        names = names if names is not None else self.store.names()
+        if not names:
+            raise LifecycleError("model store is empty; publish versions "
+                                 "before serving from it")
+        for name in names:
+            self.load(name, alias=self.default_alias,
+                      warm=warm_example is not None,
+                      warm_example=warm_example)
+        return self
+
+    # --- internals ------------------------------------------------------------
+
+    def _materialize(self, name: str, version: int,
+                     manifest: Dict[str, Any]):
+        """Restore+verify a version into the registry (idempotent)."""
+        try:
+            return self.registry.get(name, version)
+        except KeyError:
+            pass
+        model, apply_fn, num_classes = self._factory(manifest)
+        like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params, manifest = self.store.load(name, version, like)
+        return self.registry.register(
+            name, model, params, version=version,
+            param_hash=manifest["param_hash"], apply=apply_fn,
+            num_classes=num_classes)
+
+    def _members_for(self, membership: Dict[str, int]) -> List[EnsembleMember]:
+        members = []
+        for name in sorted(membership):
+            rm = self.registry.get(name, membership[name])
+            members.append(EnsembleMember(
+                name, rm.meta["apply"], rm.params,
+                rm.meta.get("num_classes", 0)))
+        return members
+
+    def _apply_membership(self, alias: str, membership: Dict[str, int], *,
+                          warm: bool,
+                          warm_example: Optional[Dict[str, Any]] = None
+                          ) -> Dict[str, Any]:
+        members = self._members_for(membership)
+        example = warm_example if warm_example is not None \
+            else self._warm_example
+        warm_batch = example if (warm and example is not None) else None
+        ens = self._ensembles.get(alias)
+        if ens is None:
+            ens = Ensemble(members, max_batch=self.max_batch,
+                           class_names=self.class_names)
+            warm_s = ens.warm(warm_batch) if warm_batch is not None else 0.0
+            swap = {"warm_s": warm_s, "drained": True,
+                    "members": [m.name for m in members]}
+            self._ensembles[alias] = ens
+        else:
+            swap = ens.set_members(members, warm_batch=warm_batch,
+                                   drain_timeout=self.drain_timeout_s)
+        self._active[alias] = membership
+        with self._stats_lock:
+            self._counters["swaps"] += 1
+            self._warm_total_s += swap["warm_s"]
+            self._last_warm_s = swap["warm_s"]
+        return {"alias": alias, "warmed": warm_batch is not None,
+                "warm_ms": 1e3 * swap["warm_s"], "drained": swap["drained"]}
+
+    # --- introspection --------------------------------------------------------
+
+    def status(self, name: str) -> Dict[str, Any]:
+        """Store versions + manifests, loaded versions, and per-alias
+        activity for one model — the GET /v1/models/{name} payload."""
+        store_versions = self.store.versions(name)
+        loaded = self.registry.versions(name)
+        if not store_versions and not loaded:
+            raise LifecycleError(f"unknown model {name!r}")
+        active = {a: m[name] for a, m in self._active.items() if name in m}
+        with self._stats_lock:
+            traffic = {k: dict(v) for k, v in self._version_traffic.items()
+                       if k.startswith(f"{name}@v")}
+        return {
+            "name": name,
+            "versions": [self.store.manifest(name, v)
+                         for v in store_versions],
+            "loaded_versions": loaded,
+            "active": active,
+            "previous": {a: v for (a, n), v in self._previous.items()
+                         if n == name},
+            "traffic": traffic,
+        }
+
+    def stats(self) -> Dict[str, Any]:
+        with self._stats_lock:
+            out: Dict[str, Any] = dict(self._counters)
+            out["last_warm_ms"] = 1e3 * self._last_warm_s
+            out["warm_total_ms"] = 1e3 * self._warm_total_s
+            out["per_version"] = {k: dict(v)
+                                  for k, v in self._version_traffic.items()}
+        out["aliases"] = {a: dict(m) for a, m in self._active.items()}
+        return out

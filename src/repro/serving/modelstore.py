@@ -1,0 +1,146 @@
+"""Versioned on-disk model store with provenance manifests.
+
+FlexServe's raison d'être (paper §1) is keeping model provenance and model
+evolution under the operator's control in strict environments.  The store
+is the durable half of that: every published version of a model lives in
+its own directory with the checkpoint AND a manifest recording exactly
+what it is and where it came from —
+
+    <root>/<model_name>/
+        v0001/
+            step_0.ckpt       # msgpack(+zstd) checkpoint (training.checkpoint)
+            manifest.json     # {name, version, config, param_hash, source,
+                              #  created_at, ...}
+        v0002/
+            ...
+
+Versions are immutable once published; ``publish`` allocates the next
+number atomically via exclusive directory creation, and manifests are
+written write-then-rename so concurrent readers never see a torn file.
+``load`` re-hashes the restored leaves against the manifest so a corrupt
+or swapped checkpoint is rejected before it can reach an endpoint.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import time
+from datetime import datetime, timezone
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.training import checkpoint
+
+_VDIR = re.compile(r"v(\d{4,})")
+CKPT_FILE = "step_0.ckpt"
+MANIFEST_FILE = "manifest.json"
+
+
+class StoreError(RuntimeError):
+    pass
+
+
+class ModelStore:
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    # --- layout ---------------------------------------------------------------
+
+    def model_dir(self, name: str) -> str:
+        if not re.fullmatch(r"[A-Za-z0-9._#-]+", name):
+            raise StoreError(f"invalid model name {name!r}")
+        return os.path.join(self.root, name)
+
+    def version_dir(self, name: str, version: int) -> str:
+        return os.path.join(self.model_dir(name), f"v{version:04d}")
+
+    def names(self) -> List[str]:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(d for d in os.listdir(self.root)
+                      if os.path.isdir(os.path.join(self.root, d)))
+
+    def versions(self, name: str) -> List[int]:
+        mdir = self.model_dir(name)
+        if not os.path.isdir(mdir):
+            return []
+        out = []
+        for d in os.listdir(mdir):
+            m = _VDIR.fullmatch(d)
+            # only versions whose manifest landed count as published
+            if m and os.path.exists(os.path.join(mdir, d, MANIFEST_FILE)):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_version(self, name: str) -> Optional[int]:
+        versions = self.versions(name)
+        return versions[-1] if versions else None
+
+    # --- publish / read -------------------------------------------------------
+
+    def publish(self, name: str, params, *, config: str, source: str = "",
+                meta: Optional[Dict[str, Any]] = None) -> int:
+        """Write ``params`` as the next version of ``name``; returns it.
+
+        The version directory is claimed with an exclusive mkdir, so two
+        concurrent publishers can never collide on a number; the manifest
+        is written LAST, making it the commit record — a crashed publish
+        leaves an unlisted directory, not a half-readable version.
+        """
+        os.makedirs(self.model_dir(name), exist_ok=True)
+        version = (self.latest_version(name) or 0) + 1
+        for _ in range(100):
+            vdir = self.version_dir(name, version)
+            try:
+                os.mkdir(vdir)
+                break
+            except FileExistsError:
+                version += 1
+        else:
+            raise StoreError(f"cannot allocate a version for {name!r}")
+        checkpoint.save(os.path.join(vdir, CKPT_FILE), params)
+        manifest = {
+            "name": name,
+            "version": version,
+            "config": config,
+            "param_hash": checkpoint.param_hash(params),
+            "source": source,
+            "created_at": datetime.now(timezone.utc).isoformat(),
+            "created_at_unix": time.time(),
+            **(meta or {}),
+        }
+        checkpoint.write_manifest(os.path.join(vdir, MANIFEST_FILE),
+                                  manifest)
+        return version
+
+    def manifest(self, name: str, version: int) -> Dict[str, Any]:
+        path = os.path.join(self.version_dir(name, version), MANIFEST_FILE)
+        if not os.path.exists(path):
+            raise StoreError(
+                f"no published version {version} of {name!r}; "
+                f"available: {self.versions(name)}")
+        return checkpoint.read_manifest(path)
+
+    def manifests(self, name: str) -> List[Dict[str, Any]]:
+        return [self.manifest(name, v) for v in self.versions(name)]
+
+    def load(self, name: str, version: int, like_tree, *,
+             verify: bool = True) -> Tuple[Any, Dict[str, Any]]:
+        """Restore a version's params into ``like_tree``'s structure.
+
+        With ``verify`` (default), the restored leaves are re-hashed and
+        checked against the manifest's ``param_hash`` — provenance is only
+        as good as the bytes actually served.
+        """
+        manifest = self.manifest(name, version)
+        path = os.path.join(self.version_dir(name, version), CKPT_FILE)
+        tree, _meta = checkpoint.restore(path, like_tree)
+        if verify:
+            got = checkpoint.param_hash(tree)
+            if got != manifest["param_hash"]:
+                raise StoreError(
+                    f"{name} v{version}: param hash mismatch "
+                    f"(manifest {manifest['param_hash'][:12]}…, "
+                    f"checkpoint {got[:12]}…) — refusing to serve")
+        return tree, manifest

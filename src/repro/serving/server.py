@@ -15,6 +15,11 @@ decode slots.  ``coalesce=False`` restores the legacy one-request-per-
 forward behavior behind a global device lock (kept as the benchmark
 baseline).
 
+With a ``ModelManager`` attached, the endpoint gains a lifecycle admin
+surface (GET /v1/models/{name}, POST .../load /unload /rollback) and
+per-request version-alias targeting on the inference routes — hot swaps
+happen under live traffic with zero dropped requests.
+
 Endpoints are defined in repro.serving.api.
 """
 
@@ -23,57 +28,103 @@ from __future__ import annotations
 import socketserver
 import threading
 import time
+import urllib.parse
 from typing import Any, Dict, Optional
 
 import numpy as np
 
+from repro.core.batching import BucketSpec
 from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
 from repro.core.registry import ModelRegistry
 from repro.core.scheduler import SchedulerService
 from repro.serving import api
 from repro.serving.coalesce import BatchCoalescer
+from repro.serving.lifecycle import LifecycleError, ModelManager
+from repro.serving.modelstore import StoreError
 
 
 class FlexServeApp:
-    """Bundles a registry, an optional ensemble, and an optional engine.
+    """Bundles a registry, an optional ensemble/manager, and an engine.
 
     ``max_wait_ms`` / ``max_coalesce_rows`` tune the coalescer (how long the
     dispatcher lingers for more rows, and the rows-per-forward cap);
-    ``num_slots`` sizes the continuous-batching decode pool.
+    ``num_slots`` sizes the continuous-batching decode pool.  Pass a
+    ``manager`` instead of a static ``ensemble`` to serve store-backed,
+    hot-swappable models.
     """
 
     def __init__(self, registry: Optional[ModelRegistry] = None,
                  ensemble: Optional[Ensemble] = None,
                  engine: Optional[InferenceEngine] = None, *,
+                 manager: Optional[ModelManager] = None,
                  coalesce: bool = True, max_wait_ms: float = 5.0,
                  max_coalesce_rows: Optional[int] = None,
                  num_slots: int = 4):
-        self.registry = registry or ModelRegistry()
-        self.ensemble = ensemble
+        if manager is not None and ensemble is not None:
+            raise ValueError("pass either a static ensemble or a manager")
+        self.manager = manager
+        self.registry = (manager.registry if manager is not None
+                         else registry or ModelRegistry())
+        self._ensemble = ensemble
         self.engine = engine
         self.device_lock = threading.Lock()
         self.request_count = 0
         self._t0 = time.time()
+        self._closing = False
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
         self.coalescer: Optional[BatchCoalescer] = None
         self.generation: Optional[SchedulerService] = None
-        if coalesce and ensemble is not None:
+        if coalesce and (ensemble is not None or manager is not None):
+            buckets = (ensemble.batch_buckets if ensemble is not None
+                       else BucketSpec.pow2(manager.max_batch))
             self.coalescer = BatchCoalescer(
-                ensemble.forward, ensemble.batch_buckets,
+                self._coalesced_forward, buckets,
                 max_wait_ms=max_wait_ms, max_rows=max_coalesce_rows)
         if coalesce and engine is not None:
             self.generation = SchedulerService(engine, num_slots=num_slots)
 
+    @property
+    def ensemble(self) -> Optional[Ensemble]:
+        """The default-alias ensemble (manager-backed or static)."""
+        if self.manager is not None:
+            return (self.manager.ensemble_for() if self.manager.ready
+                    else None)
+        return self._ensemble
+
+    def _coalesced_forward(self, batch, alias):
+        """Coalescer's forward: route one merged group to its target."""
+        if self.manager is not None:
+            return self.manager.forward(batch, alias)
+        return self._ensemble.forward(batch)
+
     def close(self) -> None:
         """Stop background dispatch threads (idempotent)."""
+        self._closing = True
         if self.coalescer is not None:
             self.coalescer.close()
             self.coalescer = None
         if self.generation is not None:
             self.generation.close()
             self.generation = None
+
+    # --- readiness ------------------------------------------------------------
+
+    def ready(self) -> Dict[str, Any]:
+        """Readiness probe payload; raises 503 while not servable."""
+        if self._closing:
+            raise api.ApiError(503, "shutting down")
+        if self.coalescer is not None and not self.coalescer.alive:
+            raise api.ApiError(503, "coalescer dispatch thread not alive")
+        if self.manager is not None:
+            if not self.manager.ready:
+                raise api.ApiError(503, "no models loaded yet")
+        elif (self._ensemble is None and self.engine is None
+              and len(self.registry) == 0):
+            raise api.ApiError(503, "no models loaded yet")
+        return {"status": "ready", "models": len(self.registry),
+                "coalescing": self.coalescer is not None}
 
     # --- route handlers ------------------------------------------------------
 
@@ -98,29 +149,17 @@ class FlexServeApp:
                body: bytes) -> Dict[str, Any]:
         if method == "GET" and path == "/health":
             return {"status": "ok", "requests": self.request_count}
+        if method == "GET" and path == "/healthz":
+            return self.ready()
         if method == "GET" and path == "/metrics":
-            with self._stats_lock:
-                routes = {
-                    k: {"count": v["count"],
-                        "mean_ms": 1e3 * v["total_s"] / max(v["count"], 1),
-                        "max_ms": 1e3 * v["max_s"]}
-                    for k, v in self._route_stats.items()}
-                requests = self.request_count
-            out = {"uptime_s": time.time() - self._t0,
-                   "requests": requests, "routes": routes}
-            if self.coalescer is not None:
-                out["coalesce"] = self.coalescer.stats()
-            if self.ensemble is not None:
-                out["ensemble_compiles"] = {
-                    str(b): c
-                    for b, c in sorted(self.ensemble.compile_counts.items())}
-            if self.generation is not None:
-                out["generate"] = self.generation.stats()
-            return out
+            return self._metrics()
         if method == "GET" and path == "/v1/models":
             return {"models": self.registry.describe(),
                     "ensemble_size": (len(self.ensemble.members)
                                       if self.ensemble else 0)}
+        if path.startswith("/v1/models/"):
+            return self._model_admin(method, path[len("/v1/models/"):],
+                                     body)
         if method == "POST" and path == "/v1/infer":
             return self._infer(api.parse_request(body))
         if method == "POST" and path == "/v1/detect":
@@ -129,47 +168,144 @@ class FlexServeApp:
             return self._generate(api.parse_request(body))
         raise api.ApiError(404, f"no route {method} {path}")
 
-    def _require_ensemble(self) -> Ensemble:
-        if self.ensemble is None:
-            raise api.ApiError(503, "no ensemble deployed on this endpoint")
-        return self.ensemble
+    def _metrics(self) -> Dict[str, Any]:
+        with self._stats_lock:
+            routes = {
+                k: {"count": v["count"],
+                    "mean_ms": 1e3 * v["total_s"] / max(v["count"], 1),
+                    "max_ms": 1e3 * v["max_s"]}
+                for k, v in self._route_stats.items()}
+            requests = self.request_count
+        out = {"uptime_s": time.time() - self._t0,
+               "requests": requests, "routes": routes}
+        if self.coalescer is not None:
+            out["coalesce"] = self.coalescer.stats()
+        if self.ensemble is not None:
+            out["ensemble_compiles"] = {
+                str(b): c
+                for b, c in sorted(self.ensemble.compile_counts.items())}
+        if self.manager is not None:
+            out["lifecycle"] = self.manager.stats()
+        if self.generation is not None:
+            out["generate"] = self.generation.stats()
+        return out
 
-    def _ensemble_logits(self, batch) -> Dict[str, np.ndarray]:
+    # --- lifecycle admin surface ---------------------------------------------
+
+    def _model_admin(self, method: str, rest: str,
+                     body: bytes) -> Dict[str, Any]:
+        name, _, action = rest.partition("/")
+        # member names may contain '#' (e.g. "yi-9b#0"), which clients must
+        # percent-encode — decode the path segment here
+        name = urllib.parse.unquote(name)
+        if not name:
+            raise api.ApiError(404, "missing model name")
+        if method == "GET" and not action:
+            return self._model_status(name)
+        if method != "POST" or action not in ("load", "unload", "rollback"):
+            raise api.ApiError(404,
+                               f"no route {method} /v1/models/{rest}")
+        mgr = self._require_manager()
+        req = api.parse_request(body)
+        version = api.opt_int(req, "version", 0) or None
+        alias = req.get("alias")
+        try:
+            if action == "load":
+                return mgr.load(name, version, alias=alias,
+                                warm=bool(req.get("warm", True)))
+            if action == "unload":
+                return mgr.unload(name, version)
+            return mgr.rollback(name, alias=alias,
+                                warm=bool(req.get("warm", True)))
+        except StoreError as e:
+            raise api.ApiError(404, str(e)) from None
+        except KeyError as e:
+            raise api.ApiError(404, str(e)) from None
+        except LifecycleError as e:
+            raise api.ApiError(409, str(e)) from None
+
+    def _model_status(self, name: str) -> Dict[str, Any]:
+        if self.manager is not None:
+            try:
+                return self.manager.status(name)
+            except (LifecycleError, StoreError) as e:
+                raise api.ApiError(404, str(e)) from None
+        try:
+            rm = self.registry.get(name)
+        except KeyError as e:
+            raise api.ApiError(404, str(e)) from None
+        return {"name": name, "versions": [],
+                "loaded_versions": self.registry.versions(name),
+                "active": {}, "meta": {k: v for k, v in rm.meta.items()
+                                       if isinstance(v, (str, int, float))}}
+
+    def _require_manager(self) -> ModelManager:
+        if self.manager is None:
+            raise api.ApiError(
+                503, "no lifecycle manager on this endpoint; start it with "
+                     "a model store to enable load/unload/rollback")
+        return self.manager
+
+    # --- inference routes ----------------------------------------------------
+
+    def _require_ensemble(self, alias: Optional[str] = None) -> Ensemble:
+        if self.manager is not None:
+            try:
+                return self.manager.ensemble_for(alias)
+            except LifecycleError as e:
+                raise api.ApiError(404, str(e)) from None
+        if alias is not None:
+            raise api.ApiError(
+                400, "per-request 'target' aliases need a lifecycle "
+                     "manager on this endpoint")
+        if self._ensemble is None:
+            raise api.ApiError(503, "no ensemble deployed on this endpoint")
+        return self._ensemble
+
+    def _ensemble_logits(self, batch,
+                         alias: Optional[str]) -> Dict[str, np.ndarray]:
         """One forward's worth of per-member logits for this request's rows —
-        coalesced with concurrent requests when the coalescer is on."""
-        ens = self._require_ensemble()
+        coalesced with concurrent requests (of the same signature AND the
+        same alias target) when the coalescer is on."""
+        ens = self._require_ensemble(alias)
         try:
             if self.coalescer is not None:
-                return self.coalescer.submit(batch)
+                return self.coalescer.submit(batch, tag=alias)
             with self.device_lock:
+                if self.manager is not None:
+                    return self.manager.forward(batch, alias)
                 return ens.forward(batch)
+        except LifecycleError as e:
+            raise api.ApiError(404, str(e)) from None
         except KeyError as e:
             raise api.ApiError(400, str(e)) from None
         except ValueError as e:
             raise api.ApiError(400, str(e)) from None
 
     def _infer(self, req) -> Dict[str, Any]:
-        ens = self._require_ensemble()
+        alias = req.get("target")
+        ens = self._require_ensemble(alias)
         batch = api.inputs_to_batch(req.get("inputs", {}))
         policy = req.get("policy", "soft_vote")
-        logits = self._ensemble_logits(batch)
+        logits = self._ensemble_logits(batch, alias)
         try:
             return ens.respond_from_logits(logits, policy=policy)
         except (KeyError, ValueError) as e:
             raise api.ApiError(400, str(e)) from None
 
     def _detect(self, req) -> Dict[str, Any]:
-        ens = self._require_ensemble()
+        alias = req.get("target")
+        ens = self._require_ensemble(alias)
         batch = api.inputs_to_batch(req.get("inputs", {}))
         if "positive_class" not in req:
             raise api.ApiError(400, "'positive_class' is required")
-        logits = self._ensemble_logits(batch)
+        logits = self._ensemble_logits(batch, alias)
         out = ens.detect_from_logits(
             logits, positive_class=int(req["positive_class"]),
             threshold=float(req.get("threshold", 0.5)),
             policy=req.get("policy", "or"))
-        resp = {f"model_{i}": out["members"][m.name]
-                for i, m in enumerate(ens.members)}
+        resp = {f"model_{i}": v
+                for i, v in enumerate(out["members"].values())}
         resp["ensemble"] = out["ensemble"]
         resp["policy"] = req.get("policy", "or")
         return resp
@@ -197,7 +333,8 @@ class FlexServeApp:
 
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            500: "Internal Server Error", 503: "Service Unavailable"}
+            409: "Conflict", 500: "Internal Server Error",
+            503: "Service Unavailable"}
 
 
 def make_handler(app: FlexServeApp):
@@ -286,13 +423,36 @@ class FlexServeServer:
     def address(self):
         return self.httpd.server_address
 
-    def start(self) -> "FlexServeServer":
+    def start(self, wait_ready: bool = True,
+              timeout: float = 10.0) -> "FlexServeServer":
         self._thread = threading.Thread(target=self.httpd.serve_forever,
                                         daemon=True)
         self._thread.start()
+        if wait_ready:
+            self.wait_ready(timeout)
         return self
 
+    def wait_ready(self, timeout: float = 10.0) -> bool:
+        """Poll GET /healthz over real HTTP until the endpoint reports
+        ready (the same probe an orchestrator would use); returns whether
+        readiness was observed within the timeout."""
+        from repro.serving.client import FlexServeClient
+        host, port = self.address
+        client = FlexServeClient(host, port, timeout=max(timeout, 1.0))
+        deadline = time.time() + timeout
+        try:
+            while time.time() < deadline:
+                try:
+                    client.healthz()
+                    return True
+                except (RuntimeError, OSError):
+                    time.sleep(0.02)
+        finally:
+            client.close()
+        return False
+
     def stop(self) -> None:
+        self.app._closing = True
         self.httpd.shutdown()
         self.httpd.server_close()
         self.app.close()

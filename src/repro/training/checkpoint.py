@@ -10,6 +10,8 @@ restore path composes with any sharding).
 
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import re
 from typing import Any, Dict, Optional, Tuple
@@ -91,6 +93,43 @@ def restore(path: str, like_tree) -> Tuple[Any, Dict[str, Any]]:
         restored.append(jnp.asarray(arr, dtype=leaf.dtype))
     tree = jax.tree_util.tree_unflatten(flat_like[1], restored)
     return tree, meta
+
+
+def param_hash(tree) -> str:
+    """Content hash of a pytree's leaves (order-independent provenance id).
+
+    Hashes every leaf's path, dtype, shape, and raw bytes under a stable
+    (sorted-path) order, so the same params always produce the same digest
+    regardless of container insertion order or host.
+    """
+    h = hashlib.sha256()
+    flat = _flatten(tree)
+    for key in sorted(flat):
+        v = flat[key]
+        h.update(key.encode())
+        h.update(str(v.dtype).encode())
+        h.update(str(tuple(v.shape)).encode())
+        h.update(np.ascontiguousarray(v).tobytes())
+    return h.hexdigest()
+
+
+def write_manifest(path: str, manifest: Dict[str, Any]) -> str:
+    """Atomically write a provenance manifest (JSON) next to a checkpoint.
+
+    Write-then-rename so a reader never observes a torn manifest — admin
+    threads read manifests while loads are in progress.
+    """
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    os.replace(tmp, path)
+    return path
+
+
+def read_manifest(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)
 
 
 def latest(ckpt_dir: str) -> Optional[str]:

@@ -107,6 +107,74 @@ def test_incompatible_shapes_split_groups():
         co.close()
 
 
+class ShapeRecordingForward:
+    """fn(batch) -> {"y": x * 2}; records every merged batch's shape."""
+
+    def __init__(self):
+        self.shapes = []
+        self._lock = threading.Lock()
+
+    def __call__(self, batch):
+        with self._lock:
+            self.shapes.append(batch["x"].shape)
+        return {"y": batch["x"] * 2.0}
+
+
+@pytest.mark.slow
+def test_per_signature_sub_queues_coalesce_independently():
+    """An incompatible request STARTS/JOINS ITS OWN sub-queue instead of
+    splitting the open group: interleaved wide/narrow submissions end up in
+    exactly one forward per signature."""
+    fwd = ShapeRecordingForward()
+    co = BatchCoalescer(fwd, BucketSpec.pow2(16), max_wait_ms=400.0,
+                        boundary_grace_ms=400.0)
+    try:
+        wide = [{"x": np.full((1, 8), i, np.float32)} for i in range(4)]
+        narrow = [{"x": np.full((1, 4), 10 + i, np.float32)}
+                  for i in range(4)]
+        interleaved = [b for pair in zip(wide, narrow) for b in pair]
+        outs = _submit_many(co, interleaved, workers=8)
+        for batch, out in zip(interleaved, outs):
+            np.testing.assert_array_equal(out["y"], batch["x"] * 2.0)
+        # one forward per signature — the interleaving split nothing
+        assert sorted(fwd.shapes) == [(4, 4), (4, 8)]
+    finally:
+        co.close()
+
+
+class TagRecordingForward:
+    """Two-arg forward: the coalescer hands each group's routing tag on."""
+
+    def __init__(self):
+        self.calls = []
+        self._lock = threading.Lock()
+
+    def __call__(self, batch, tag):
+        with self._lock:
+            self.calls.append((batch["x"].shape[0], tag))
+        return {"y": batch["x"] * 2.0}
+
+
+@pytest.mark.slow
+def test_tagged_submissions_group_by_tag():
+    """Same array signature, different tags (version aliases): each tag is
+    its own sub-queue and the tag reaches the forward fn."""
+    fwd = TagRecordingForward()
+    co = BatchCoalescer(fwd, BucketSpec.pow2(16), max_wait_ms=400.0,
+                        boundary_grace_ms=400.0)
+    try:
+        batches = [({"x": np.full((1, 2), i, np.float32)},
+                    "canary" if i % 2 else "stable") for i in range(6)]
+        with concurrent.futures.ThreadPoolExecutor(6) as ex:
+            outs = list(ex.map(lambda bt: co.submit(bt[0], tag=bt[1]),
+                               batches))
+        for (batch, _), out in zip(batches, outs):
+            np.testing.assert_array_equal(out["y"], batch["x"] * 2.0)
+        assert sorted(fwd.calls) == [(3, "canary"), (3, "stable")]
+    finally:
+        co.close()
+
+
 def test_oversize_request_rejected():
     fwd = CountingForward()
     co = BatchCoalescer(fwd, BucketSpec.pow2(4), max_wait_ms=1.0)

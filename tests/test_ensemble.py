@@ -70,7 +70,7 @@ def test_variable_batch_sizes_one_compile_per_bucket(ensemble):
         out = ensemble.forward(batch)
         assert next(iter(out.values())).shape[0] == n
     assert ensemble.num_compilations <= len(
-        ensemble._batcher.buckets.sizes)
+        ensemble.batch_buckets.sizes)
 
 
 def test_memory_ledger_counts_all_members(ensemble):

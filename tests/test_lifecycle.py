@@ -1,0 +1,415 @@
+"""Model lifecycle subsystem: versioned store, hot load/unload/swap under
+traffic, and the provenance-aware admin API.
+
+The headline scenario (acceptance): an open-loop client hammers /v1/infer
+while the admin API loads a new version, warms it, swaps it in, and
+retires the old one — with ZERO failed requests and the active version's
+manifest visible at GET /v1/models/{name} before and after.
+"""
+
+import concurrent.futures
+import os
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import smoke_model
+from repro.core import Ensemble, EnsembleMember, ModelRegistry
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           LifecycleError, ModelManager, ModelStore,
+                           StoreError)
+from repro.training import checkpoint
+
+ARCH = "yi-9b"
+
+
+def _publish_versions(store, name, n, num_classes=8):
+    cfg, model, _ = smoke_model(ARCH)
+    for seed in range(n):
+        params = model.init(jax.random.PRNGKey(seed))
+        store.publish(name, params, config=ARCH, source=cfg.source,
+                      meta={"reduced": True, "num_classes": num_classes})
+    return model
+
+
+# --- ModelStore --------------------------------------------------------------
+
+
+def test_store_publish_and_manifest(tmp_path):
+    store = ModelStore(str(tmp_path))
+    model = _publish_versions(store, "det", 2)
+    assert store.versions("det") == [1, 2]
+    assert store.latest_version("det") == 2
+    m = store.manifest("det", 1)
+    assert m["name"] == "det" and m["version"] == 1
+    assert m["config"] == ARCH
+    assert len(m["param_hash"]) == 64          # sha256 hex
+    assert m["source"] and m["created_at"]
+    # distinct params -> distinct provenance
+    assert m["param_hash"] != store.manifest("det", 2)["param_hash"]
+    with pytest.raises(StoreError, match="no published version"):
+        store.manifest("det", 9)
+
+
+def test_store_load_verifies_param_hash(tmp_path):
+    store = ModelStore(str(tmp_path))
+    model = _publish_versions(store, "det", 1)
+    like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    tree, manifest = store.load("det", 1, like)
+    assert manifest["param_hash"] == checkpoint.param_hash(tree)
+    # corrupt the checkpoint: provenance verification must refuse it
+    other = model.init(jax.random.PRNGKey(99))
+    checkpoint.save(os.path.join(store.version_dir("det", 1), "step_0.ckpt"),
+                    other)
+    with pytest.raises(StoreError, match="param hash mismatch"):
+        store.load("det", 1, like)
+
+
+def test_store_versions_are_append_only(tmp_path):
+    store = ModelStore(str(tmp_path))
+    _publish_versions(store, "det", 1)
+    cfg, model, params = smoke_model(ARCH)
+    v = store.publish("det", model.init(jax.random.PRNGKey(5)),
+                      config=ARCH)
+    assert v == 2
+    assert store.names() == ["det"]
+
+
+# --- version-aware ModelRegistry ---------------------------------------------
+
+
+def test_registry_versions_and_latest():
+    cfg, model, params = smoke_model(ARCH)
+    reg = ModelRegistry()
+    reg.register("m", model, params, version=1)
+    reg.register("m", model, params, version=3)
+    assert reg.versions("m") == [1, 3]
+    assert reg.get("m").version == 3               # latest wins
+    assert reg.get("m", 1).version == 1
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("m", model, params, version=3)
+    with pytest.raises(KeyError, match="no version 2"):
+        reg.get("m", 2)
+    rows = reg.describe()
+    assert [r["version"] for r in rows] == [1, 3]
+
+
+def test_registry_unregister_raises_on_unknown():
+    cfg, model, params = smoke_model(ARCH)
+    reg = ModelRegistry()
+    with pytest.raises(KeyError, match="not registered"):
+        reg.unregister("ghost")
+    reg.register("m", model, params, version=1)
+    with pytest.raises(KeyError, match="no version 7"):
+        reg.unregister("m", 7)
+    reg.unregister("m", 1)
+    assert len(reg) == 0
+    with pytest.raises(KeyError):
+        reg.unregister("m", 1)                     # double-unload surfaces
+
+
+@pytest.mark.slow
+def test_registry_reads_race_free_under_churn():
+    """get()/describe() snapshot under the lock while another thread
+    registers/unregisters — no RuntimeError (dict changed size) and no
+    torn reads (regression: unlocked _models reads)."""
+    cfg, model, params = smoke_model(ARCH)
+    reg = ModelRegistry()
+    reg.register("keep", model, params)
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            reg.register(f"m{i % 8}", model, params, version=i)
+            i += 1
+            if i % 8 == 0:
+                for j in range(8):
+                    reg.unregister(f"m{j}")
+
+    def read():
+        try:
+            while not stop.is_set():
+                reg.describe()
+                reg.get("keep")
+                reg.names()
+        except BaseException as e:                 # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=churn)] + \
+              [threading.Thread(target=read) for _ in range(3)]
+    for t in threads:
+        t.start()
+    time.sleep(0.5)
+    stop.set()
+    for t in threads:
+        t.join(timeout=5)
+    assert not errors
+
+
+# --- ModelManager -------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def store_with_versions(tmp_path_factory):
+    root = tmp_path_factory.mktemp("modelstore")
+    store = ModelStore(str(root))
+    _publish_versions(store, "det", 2)
+    return store
+
+
+def _manager(store):
+    return ModelManager(store, max_batch=4).bootstrap(["det"])
+
+
+def test_manager_bootstrap_serves_latest(store_with_versions):
+    mgr = _manager(store_with_versions)
+    assert mgr.ready
+    assert mgr.stats()["aliases"] == {"stable": {"det": 2}}
+    out = mgr.forward({"tokens": np.ones((1, 8), np.int32)})
+    assert set(out) == {"det"}
+
+
+def test_manager_swap_changes_served_params(store_with_versions):
+    mgr = _manager(store_with_versions)
+    batch = {"tokens": np.arange(8, dtype=np.int32).reshape(1, 8)}
+    before = np.asarray(mgr.forward(batch)["det"])
+    res = mgr.load("det", 1)
+    assert res["previous_version"] == 2 and res["drained"]
+    after = np.asarray(mgr.forward(batch)["det"])
+    assert not np.allclose(before, after)      # different version, different logits
+    # rollback restores v2's outputs exactly
+    res = mgr.rollback("det")
+    assert res["rolled_back_to"] == 2
+    again = np.asarray(mgr.forward(batch)["det"])
+    np.testing.assert_allclose(again, before)
+
+
+def test_manager_unload_refuses_active_version(store_with_versions):
+    mgr = _manager(store_with_versions)
+    with pytest.raises(LifecycleError, match="active in alias"):
+        mgr.unload("det", 2)
+    mgr.load("det", 1)
+    mgr.unload("det", 2)                       # now inactive: fine
+    assert mgr.registry.versions("det") == [1]
+    with pytest.raises(LifecycleError, match="would empty"):
+        mgr.unload("det")                      # last member must keep serving
+
+
+def test_manager_alias_canary(store_with_versions):
+    mgr = _manager(store_with_versions)
+    mgr.load("det", 1, alias="canary")
+    assert mgr.aliases() == ["canary", "stable"]
+    batch = {"tokens": np.ones((1, 8), np.int32)}
+    stable = np.asarray(mgr.forward(batch)["det"])
+    canary = np.asarray(mgr.forward(batch, "canary")["det"])
+    assert not np.allclose(stable, canary)
+    with pytest.raises(LifecycleError, match="no alias"):
+        mgr.forward(batch, "ghost")
+    traffic = mgr.stats()["per_version"]
+    assert traffic["det@v2"]["rows"] >= 1
+    assert traffic["det@v1"]["rows"] >= 1
+
+
+def test_manager_member_unload_is_atomic(tmp_path):
+    """A refused whole-member unload must change NOTHING: validation of
+    every alias happens before any membership swap (regression: stable
+    lost the member while canary's emptiness check raised)."""
+    store = ModelStore(str(tmp_path))
+    _publish_versions(store, "det", 1)
+    _publish_versions(store, "aux", 1)
+    mgr = ModelManager(store, max_batch=4).bootstrap(["det", "aux"])
+    # canary serves ONLY det; stable serves {det, aux}
+    mgr._apply_membership("canary", {"det": 1}, warm=False)
+    before = {a: dict(m) for a, m in mgr._active.items()}
+    with pytest.raises(LifecycleError, match="would empty"):
+        mgr.unload("det")                  # canary would empty -> refuse
+    assert {a: dict(m) for a, m in mgr._active.items()} == before
+    assert mgr.registry.versions("det") == [1]   # nothing unregistered
+    out = mgr.forward({"tokens": np.ones((1, 8), np.int32)})
+    assert set(out) == {"aux", "det"}      # stable still serves both
+
+
+def test_manager_warm_precompiles_buckets(store_with_versions):
+    mgr = ModelManager(store_with_versions, max_batch=4)
+    example = {"tokens": np.ones((1, 8), np.int32)}
+    mgr.bootstrap(["det"], warm_example=example)
+    ens = mgr.ensemble_for()
+    # every bucket compiled during warm; live traffic compiles nothing new
+    buckets = ens.batch_buckets.sizes
+    assert set(ens.compile_counts) == set(buckets)
+    n_before = ens.num_compilations
+    for n in (1, 2, 3, 4):
+        mgr.forward({"tokens": np.ones((n, 8), np.int32)})
+    assert ens.num_compilations == n_before
+
+
+# --- admin API over HTTP ------------------------------------------------------
+
+
+@pytest.fixture()
+def lifecycle_server(tmp_path):
+    store = ModelStore(str(tmp_path / "store"))
+    _publish_versions(store, "det", 2)
+    mgr = ModelManager(store, max_batch=4)
+    mgr.bootstrap(["det"],
+                  warm_example={"tokens": np.ones((1, 8), np.int32)})
+    srv = FlexServeServer(FlexServeApp(manager=mgr,
+                                       max_wait_ms=5.0)).start()
+    yield srv
+    srv.stop()
+
+
+def test_admin_routes(lifecycle_server):
+    client = FlexServeClient(*lifecycle_server.address)
+    st = client.model_status("det")
+    assert st["active"] == {"stable": 2}
+    assert [m["version"] for m in st["versions"]] == [1, 2]
+    assert all(len(m["param_hash"]) == 64 for m in st["versions"])
+    res = client.load_model("det", 1)
+    assert res["version"] == 1 and res["previous_version"] == 2
+    assert client.model_status("det")["active"] == {"stable": 1}
+    res = client.rollback_model("det")
+    assert res["rolled_back_to"] == 2
+    with pytest.raises(RuntimeError, match="409"):
+        client.unload_model("det", 2)          # active -> conflict
+    res = client.unload_model("det", 1)
+    assert res["unloaded"]
+    with pytest.raises(RuntimeError, match="404"):
+        client.model_status("ghost")
+    with pytest.raises(RuntimeError, match="404"):
+        client.load_model("det", 42)
+    # registry view carries versions
+    models = client.models()["models"]
+    assert {(m["name"], m["version"]) for m in models} == {("det", 2)}
+
+
+def test_admin_requires_manager():
+    cfg, model, params = smoke_model(ARCH)
+    members = [EnsembleMember(
+        "m", lambda p, b, _m=model: _m.forward(p, b)[:, -1, :8], params, 8)]
+    app = FlexServeApp(ModelRegistry(), Ensemble(members, max_batch=4))
+    srv = FlexServeServer(app).start()
+    try:
+        client = FlexServeClient(*srv.address)
+        with pytest.raises(RuntimeError, match="503"):
+            client.load_model("m", 1)
+        with pytest.raises(RuntimeError, match="400"):
+            client.infer({"tokens": [[1, 2, 3, 4]]}, target="canary")
+    finally:
+        srv.stop()
+
+
+def test_per_request_alias_targeting(lifecycle_server):
+    client = FlexServeClient(*lifecycle_server.address)
+    client.load_model("det", 1, alias="canary")
+    tokens = [[3, 1, 4, 1, 5, 9, 2, 6]]
+    stable = client.infer({"tokens": tokens})
+    canary = client.infer({"tokens": tokens}, target="canary")
+    # different versions may classify differently; both must answer
+    assert stable["policy"] == canary["policy"] == "soft_vote"
+    with pytest.raises(RuntimeError, match="404"):
+        client.infer({"tokens": tokens}, target="ghost")
+    st = client.model_status("det")
+    assert st["active"] == {"stable": 2, "canary": 1}
+
+
+# --- healthz readiness --------------------------------------------------------
+
+
+def test_healthz_readiness_transitions():
+    app = FlexServeApp()                       # nothing deployed
+    srv = FlexServeServer(app)
+    srv.start(wait_ready=False)
+    try:
+        client = FlexServeClient(*srv.address)
+        with pytest.raises(RuntimeError, match="503"):
+            client.healthz()
+        assert client.health()["status"] == "ok"   # liveness stays green
+        cfg, model, params = smoke_model(ARCH)
+        app.registry.register("m", model, params)
+        assert client.healthz()["status"] == "ready"
+        app._closing = True
+        with pytest.raises(RuntimeError, match="503"):
+            client.healthz()
+    finally:
+        srv.stop()
+
+
+def test_server_start_waits_for_readiness(lifecycle_server):
+    """start() (used by every fixture here) returns only once /healthz is
+    200 — probe it straight away."""
+    client = FlexServeClient(*lifecycle_server.address)
+    assert client.healthz()["status"] == "ready"
+    assert client.healthz()["coalescing"]
+
+
+# --- THE scenario: hot swap under open-loop traffic ---------------------------
+
+
+@pytest.mark.slow
+def test_hot_swap_under_open_loop_traffic(lifecycle_server):
+    """Load new version -> warm -> swap -> retire old, while an open-loop
+    client fires /v1/infer on a fixed cadence.  Zero failed requests; the
+    active manifest is visible before and after the swap."""
+    host, port = lifecycle_server.address
+    client = FlexServeClient(host, port)
+
+    st = client.model_status("det")
+    assert st["active"]["stable"] == 2
+    hash_before = st["versions"][1]["param_hash"]
+
+    results = {"ok": [], "failed": []}
+    stop = threading.Event()
+    pool = concurrent.futures.ThreadPoolExecutor(8)
+    rng = np.random.default_rng(0)
+    payloads = [rng.integers(1, 100, (1, 8)).tolist() for _ in range(16)]
+
+    def one_request(i):
+        try:
+            resp = FlexServeClient(host, port).infer(
+                {"tokens": payloads[i % len(payloads)]})
+            assert len(resp["ensemble"]) == 1
+            results["ok"].append(i)            # list append: thread-safe
+        except Exception as e:                 # noqa: BLE001 — we count them
+            results["failed"].append(repr(e))
+
+    def open_loop():
+        """Fixed arrival cadence, independent of completions (open loop)."""
+        i = 0
+        while not stop.is_set():
+            pool.submit(one_request, i)
+            i += 1
+            time.sleep(0.02)
+
+    driver = threading.Thread(target=open_loop)
+    driver.start()
+    try:
+        time.sleep(0.3)                        # traffic flowing on v2
+        res = client.load_model("det", 1, warm=True)   # load+warm+swap
+        assert res["drained"], "old state must drain before retirement"
+        assert client.model_status("det")["active"]["stable"] == 1
+        res = client.unload_model("det", 2)    # retire the old version
+        assert res["unloaded"]
+        time.sleep(0.3)                        # traffic flowing on v1
+    finally:
+        stop.set()
+        driver.join(timeout=5)
+        pool.shutdown(wait=True)
+
+    assert results["failed"] == []             # ZERO failed requests
+    assert len(results["ok"]) >= 20            # the loop really ran
+    st = client.model_status("det")
+    assert st["active"]["stable"] == 1
+    hash_after = next(m["param_hash"] for m in st["versions"]
+                      if m["version"] == 1)
+    assert hash_after != hash_before           # provenance moved with swap
+    assert st["traffic"]["det@v1"]["rows"] >= 1
+    assert st["traffic"]["det@v2"]["rows"] >= 1
+    m = client.metrics()["lifecycle"]
+    assert m["loads"] >= 1 and m["unloads"] >= 1 and m["swaps"] >= 1
+    assert m["last_warm_ms"] >= 0.0

@@ -70,6 +70,65 @@ def test_checkpoint_latest():
         assert checkpoint.latest(d).endswith("step_10.ckpt")
 
 
+def test_checkpoint_save_latest_restore_with_metadata():
+    """The full save -> latest() -> restore cycle carries user metadata."""
+    cfg, model, params = smoke_model("h2o-danube-1.8b")
+    with tempfile.TemporaryDirectory() as d:
+        for s in (1, 4, 2):
+            checkpoint.save(os.path.join(d, f"step_{s}.ckpt"),
+                            {"params": params}, step=s,
+                            meta={"arch": cfg.name, "loss": 1.0 / s})
+        path = checkpoint.latest(d)
+        assert path.endswith("step_4.ckpt")
+        tree, meta = checkpoint.restore(path, {"params": params})
+        assert meta["step"] == 4
+        assert meta["arch"] == cfg.name
+        assert meta["loss"] == 0.25
+        for a, b in zip(jax.tree_util.tree_leaves(params),
+                        jax.tree_util.tree_leaves(tree["params"])):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+
+def test_checkpoint_uncompressed_fallback(monkeypatch):
+    """With zstandard absent, save writes raw msgpack and load sniffs it —
+    both layouts interoperate."""
+    tree = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.zeros(3)}
+    with tempfile.TemporaryDirectory() as d:
+        monkeypatch.setattr(checkpoint, "zstandard", None)
+        path = checkpoint.save(os.path.join(d, "step_0.ckpt"), tree,
+                               meta={"compressed": False})
+        with open(path, "rb") as f:
+            assert f.read(4) != checkpoint._ZSTD_MAGIC   # really raw
+        restored, meta = checkpoint.restore(path, tree)
+        assert meta["compressed"] is False
+        monkeypatch.undo()
+        # a loader WITH zstandard available reads the raw file too
+        restored2, _ = checkpoint.restore(path, tree)
+        for k in tree:
+            np.testing.assert_array_equal(np.asarray(restored[k]),
+                                          np.asarray(tree[k]))
+            np.testing.assert_array_equal(np.asarray(restored2[k]),
+                                          np.asarray(tree[k]))
+
+
+def test_param_hash_stable_and_content_sensitive():
+    a = {"w": jnp.arange(4.0), "b": jnp.ones(2)}
+    b = {"b": jnp.ones(2), "w": jnp.arange(4.0)}    # insertion order differs
+    assert checkpoint.param_hash(a) == checkpoint.param_hash(b)
+    c = {"w": jnp.arange(4.0), "b": jnp.ones(2) * 2}
+    assert checkpoint.param_hash(a) != checkpoint.param_hash(c)
+
+
+def test_manifest_write_read_atomic():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "manifest.json")
+        manifest = {"name": "det", "version": 3, "param_hash": "ab" * 32}
+        checkpoint.write_manifest(path, manifest)
+        assert checkpoint.read_manifest(path) == manifest
+        assert not os.path.exists(path + ".tmp")    # rename committed
+
+
 def test_data_pipeline_deterministic_and_seekable():
     dc = DataConfig(vocab_size=100, seq_len=16, global_batch=4)
     a = SyntheticLM(dc).batch_at(7)
