@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows (deliverable d):
   C1/C2  bench_ensemble   — fused multi-model forward + shared-memory ledger
   C3     bench_flexbatch  — variable batch sizes, bounded jit cache
   REST   bench_server     — endpoint throughput under concurrent clients
+  +      bench_generate   — open-loop streaming generation (TTFT / ITL)
   +      bench_scheduler  — continuous vs static batching
   +      bench_kernels    — kernel oracles (perf is roofline-structural;
                             this container is CPU-only)
@@ -16,12 +17,12 @@ import traceback
 
 
 def main() -> int:
-    from benchmarks import (bench_ensemble, bench_flexbatch, bench_kernels,
-                            bench_scheduler, bench_server)
+    from benchmarks import (bench_ensemble, bench_flexbatch, bench_generate,
+                            bench_kernels, bench_scheduler, bench_server)
     print("name,us_per_call,derived")
     failures = 0
     for mod in (bench_ensemble, bench_flexbatch, bench_server,
-                bench_scheduler, bench_kernels):
+                bench_generate, bench_scheduler, bench_kernels):
         try:
             mod.run()
         except Exception:

@@ -40,6 +40,17 @@ def main():
     for p, o in zip(prompts, resp["outputs"]):
         print(f"  prompt={p} -> {o}")
 
+    # --- streaming: tokens arrive as they decode ----------------------------
+    print("streamed generate (temperature=0.8, seed=7): ", end="",
+          flush=True)
+    for ev in client.generate_stream(prompts[0], max_new_tokens=8,
+                                     temperature=0.8, seed=7):
+        if ev["event"] == "token":
+            print(ev["token"], end=" ", flush=True)
+        elif ev["event"] == "done":
+            print(f"| {ev['finish_reason']} ttft={ev['ttft_ms']:.1f}ms "
+                  f"total={ev['total_ms']:.1f}ms")
+
     # --- continuous batching: requests arrive while others decode -----------
     sched = ContinuousBatchingScheduler(engine, num_slots=4)
     arrivals = [(0, 12), (0, 4), (1, 9), (2, 3), (2, 15), (4, 6)]

@@ -3,6 +3,8 @@ from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.memory import MemoryLedger, tree_bytes
 from repro.core.registry import ModelRegistry
+from repro.core.sampling import (SamplingError, SamplingParams, TokenSampler,
+                                 samplers_for)
 from repro.core.scheduler import (ContinuousBatchingScheduler, Request,
                                   SchedulerService)
 
@@ -10,5 +12,6 @@ __all__ = [
     "BucketSpec", "FlexibleBatcher", "pad_sequences", "InferenceEngine",
     "Ensemble", "EnsembleMember", "MemoryLedger", "tree_bytes",
     "ModelRegistry", "ContinuousBatchingScheduler", "Request",
-    "SchedulerService",
+    "SchedulerService", "SamplingError", "SamplingParams", "TokenSampler",
+    "samplers_for",
 ]

@@ -10,7 +10,7 @@ XLA terms).
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import BucketSpec, pad_sequences
+from repro.core.sampling import SamplingParams, samplers_for
 from repro.models.build import Model
 
 
@@ -26,6 +27,7 @@ class GenerationResult:
     tokens: List[List[int]]            # new tokens per row
     prompt_lengths: List[int]
     steps: int
+    finish_reasons: Optional[List[Optional[str]]] = None
 
 
 class InferenceEngine:
@@ -61,10 +63,17 @@ class InferenceEngine:
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
                  max_new_tokens: int = 32, eos_id: Optional[int] = None,
-                 extras: Optional[Dict[str, Any]] = None) -> GenerationResult:
-        """Greedy generation for a variable-size batch of variable-length
-        prompts. Batch and prompt length are bucketed; rows beyond the real
-        batch are masked out of the result."""
+                 extras: Optional[Dict[str, Any]] = None,
+                 sampling: Optional[SamplingParams] = None
+                 ) -> GenerationResult:
+        """Generation for a variable-size batch of variable-length prompts
+        (greedy by default; ``sampling`` selects per-row temperature /
+        top-k / top-p decoding, each row sampling from its own rng).
+        Batch and prompt length are bucketed; rows beyond the real batch
+        are masked out of the result."""
+        if sampling is None:
+            sampling = SamplingParams(max_new_tokens=max_new_tokens,
+                                      eos_id=eos_id)
         n = len(prompts)
         B = self.batch_buckets.bucket_for(n)
         tokens, lengths = pad_sequences(prompts, self.seq_buckets)
@@ -77,24 +86,40 @@ class InferenceEngine:
             batch.update({k: _pad_rows(v, B) for k, v in extras.items()})
         logits, state = self.prefill(batch, state)
 
+        samplers = samplers_for(sampling, n)
         out: List[List[int]] = [[] for _ in range(n)]
+        reasons: List[Optional[str]] = [None] * n
         done = np.zeros((n,), bool)
         steps = 0
-        for _ in range(max_new_tokens):
-            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B,)
-            host = np.asarray(next_tok)
+        next_host = np.zeros((B,), np.int32)
+        for _ in range(sampling.max_new_tokens):
+            if sampling.greedy:
+                # argmax on device: only B ints cross to host per step
+                host_logits = None
+                greedy = np.asarray(jnp.argmax(logits, -1), np.int32)
+            else:
+                host_logits = np.asarray(logits)               # (B, V)
             for i in range(n):
-                if not done[i]:
-                    out[i].append(int(host[i]))
-                    if eos_id is not None and host[i] == eos_id:
-                        done[i] = True
+                if done[i]:
+                    continue
+                t = (int(greedy[i]) if host_logits is None
+                     else samplers[i].sample(host_logits[i]))
+                out[i].append(t)
+                next_host[i] = t
+                if samplers[i].is_stop(t):
+                    done[i] = True
+                    reasons[i] = ("eos" if sampling.eos_id is not None
+                                  and t == sampling.eos_id else "stop")
+                elif len(out[i]) >= sampling.max_new_tokens:
+                    done[i] = True
+                    reasons[i] = "length"
             steps += 1
             if done.all():
                 break
-            logits, state = self.decode(next_tok, state)
+            logits, state = self.decode(jnp.asarray(next_host), state)
         return GenerationResult(tokens=out,
                                 prompt_lengths=[len(p) for p in prompts],
-                                steps=steps)
+                                steps=steps, finish_reasons=reasons)
 
 
 def pad_batch_rows(arr: np.ndarray, n: int, fill=0) -> np.ndarray:

@@ -1,0 +1,177 @@
+"""Per-request token sampling: temperature / top-k / top-p with seeds.
+
+FlexServe's generate route used to be globally greedy — every caller got
+argmax decoding with no knobs.  ``SamplingParams`` is the per-request
+contract (validated at the API boundary, threaded through the scheduler
+into each decode slot) and ``TokenSampler`` is its per-slot state: one
+numpy ``Generator`` per request, so two requests sharing a coalesced
+decode batch sample independently and a seeded request is reproducible
+regardless of which slot it lands in or what rides next to it.
+
+Sampling happens on the HOST on the logits row the device already
+computed (numpy, float64 accumulation): the decode step stays one jitted
+device program per token for the whole batch, and per-request divergence
+(different temperatures, different rngs) never causes a recompile.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+class SamplingError(ValueError):
+    """Malformed sampling parameters (client error, maps to HTTP 400)."""
+
+
+@dataclass(frozen=True)
+class SamplingParams:
+    """One request's decode configuration.
+
+    temperature == 0 selects greedy decoding (the previous global
+    behavior, and still the default); ``top_k``/``top_p`` restrict the
+    candidate set before renormalizing; ``seed`` makes a stochastic
+    request reproducible; ``stop`` is a set of extra stop-token ids that
+    end generation like ``eos_id`` does (the stop token is kept in the
+    output, mirroring eos handling).
+    """
+
+    temperature: float = 0.0
+    top_k: int = 0                      # 0 disables the top-k filter
+    top_p: float = 1.0                  # 1.0 disables the nucleus filter
+    seed: Optional[int] = None
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    stop: Tuple[int, ...] = ()
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+    def validate(self) -> "SamplingParams":
+        if not np.isfinite(self.temperature) or self.temperature < 0:
+            raise SamplingError(
+                f"'temperature' must be a finite float >= 0, "
+                f"got {self.temperature!r}")
+        if self.top_k < 0:
+            raise SamplingError(f"'top_k' must be >= 0, got {self.top_k!r}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise SamplingError(
+                f"'top_p' must be in (0, 1], got {self.top_p!r}")
+        if self.max_new_tokens < 1:
+            raise SamplingError(
+                f"'max_new_tokens' must be >= 1, got {self.max_new_tokens!r}")
+        return self
+
+    @classmethod
+    def from_request(cls, req: Dict[str, Any], *,
+                     default_max_new_tokens: int = 16) -> "SamplingParams":
+        """Build + validate from a JSON request body (raises SamplingError
+        with a client-readable message on malformed fields)."""
+        def _num(key, default, cast):
+            val = req.get(key, default)
+            if val is None:
+                return default
+            try:
+                return cast(val)
+            except (TypeError, ValueError):
+                raise SamplingError(
+                    f"{key!r} must be a {cast.__name__}, "
+                    f"got {val!r}") from None
+
+        stop = req.get("stop", ())
+        if stop is None:
+            stop = ()
+        if not isinstance(stop, (list, tuple)) or \
+                not all(isinstance(t, int) for t in stop):
+            raise SamplingError("'stop' must be a list of token ids")
+        seed = req.get("seed")
+        if seed is not None and not isinstance(seed, int):
+            raise SamplingError(f"'seed' must be an integer, got {seed!r}")
+        eos = req.get("eos_id")
+        if eos is not None and not isinstance(eos, int):
+            raise SamplingError(f"'eos_id' must be an integer, got {eos!r}")
+        return cls(
+            temperature=_num("temperature", 0.0, float),
+            top_k=_num("top_k", 0, int),
+            top_p=_num("top_p", 1.0, float),
+            seed=seed,
+            max_new_tokens=_num("max_new_tokens",
+                                default_max_new_tokens, int),
+            eos_id=eos,
+            stop=tuple(stop),
+        ).validate()
+
+    def for_row(self, row: int) -> "SamplingParams":
+        """Derive the row-th prompt's params in a multi-prompt request:
+        seeded requests give each row an independent, reproducible
+        stream (seed + row) instead of sharing one rng."""
+        if self.seed is None or row == 0:
+            return self
+        return replace(self, seed=self.seed + row)
+
+    def sampler(self) -> "TokenSampler":
+        return TokenSampler(self)
+
+    def describe(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"temperature": self.temperature,
+                               "max_new_tokens": self.max_new_tokens}
+        if self.top_k:
+            out["top_k"] = self.top_k
+        if self.top_p < 1.0:
+            out["top_p"] = self.top_p
+        if self.seed is not None:
+            out["seed"] = self.seed
+        if self.eos_id is not None:
+            out["eos_id"] = self.eos_id
+        if self.stop:
+            out["stop"] = list(self.stop)
+        return out
+
+
+@dataclass
+class TokenSampler:
+    """Per-slot sampling state: params + this request's own rng."""
+
+    params: SamplingParams
+    rng: np.random.Generator = field(init=False)
+
+    def __post_init__(self):
+        self.rng = np.random.default_rng(self.params.seed)
+
+    def sample(self, logits_row: np.ndarray) -> int:
+        """Next token id from one row of decode logits (host numpy)."""
+        p = self.params
+        row = np.asarray(logits_row, np.float64).reshape(-1)
+        if p.greedy:
+            return int(row.argmax())
+        row = row / p.temperature
+        if p.top_k and p.top_k < row.size:
+            kth = np.partition(row, -p.top_k)[-p.top_k]
+            row = np.where(row < kth, -np.inf, row)
+        # stable softmax over the surviving candidates
+        row = row - row.max()
+        probs = np.exp(row)
+        probs /= probs.sum()
+        if p.top_p < 1.0:
+            order = np.argsort(probs)[::-1]
+            csum = np.cumsum(probs[order])
+            # smallest prefix whose mass reaches top_p (>= keeps >=1 token)
+            cut = int(np.searchsorted(csum, p.top_p)) + 1
+            keep = order[:cut]
+            mask = np.zeros_like(probs)
+            mask[keep] = probs[keep]
+            probs = mask / mask.sum()
+        return int(self.rng.choice(probs.size, p=probs))
+
+    def is_stop(self, token: int) -> bool:
+        p = self.params
+        return ((p.eos_id is not None and token == p.eos_id)
+                or token in p.stop)
+
+
+def samplers_for(params: SamplingParams, n: int) -> List[TokenSampler]:
+    """One independent sampler per row of an n-prompt request."""
+    return [params.for_row(i).sampler() for i in range(n)]

@@ -4,8 +4,19 @@ FlexServe's flexible batching, applied to autoregressive decode).
 A fixed pool of ``num_slots`` decode slots shares one batched KV cache.
 Requests are admitted into free slots as they arrive (single-row prefill +
 in-place insertion into the batched state), decoded together one token per
-step, and evicted individually on EOS / token budget — so the decode batch
-composition changes every step, exactly like vLLM-style serving.
+step, and evicted individually on EOS / stop token / token budget /
+cancellation — so the decode batch composition changes every step, exactly
+like vLLM-style serving.
+
+Each request carries its OWN sampling state (``SamplingParams`` +
+per-request rng): the device computes one batched decode step, then every
+occupied slot samples its next token from its own logits row on the host.
+Two requests sharing a decode batch therefore decode with different
+temperatures/seeds without recompiles or cross-talk, and a seeded request
+reproduces exactly regardless of what rides next to it.
+
+Requests may attach a ``sink`` — called once per generated token from the
+driver — which is what the streaming front-end builds on.
 
 Slot insertion is family-agnostic: for each state leaf, the batch axis is
 located by comparing the slot-state shape against the pool-state shape.
@@ -16,14 +27,21 @@ from __future__ import annotations
 import collections
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Deque, Dict, List, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import GenerationResult, InferenceEngine
+from repro.core.sampling import SamplingParams, TokenSampler
+
+# sink(request, token, done): token is None only for a terminal
+# notification that produced no token (cancellation, driver error)
+TokenSink = Callable[["Request", Optional[int], bool], None]
 
 
 @dataclass
@@ -33,8 +51,38 @@ class Request:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     extras: Optional[Dict[str, Any]] = None
+    sampling: Optional[SamplingParams] = None
+    sink: Optional[TokenSink] = None
     output: List[int] = field(default_factory=list)
     done: bool = False
+    cancelled: bool = False
+    finish_reason: Optional[str] = None
+    error: Optional[BaseException] = None
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    last_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    sampler: Optional[TokenSampler] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_at is None:
+            return None
+        return self.first_token_at - self.submitted_at
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
+
+
+def pctl(sorted_vals: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sample (0 if empty)."""
+    if not sorted_vals:
+        return 0.0
+    return sorted_vals[min(len(sorted_vals) - 1,
+                           int(p * (len(sorted_vals) - 1)))]
 
 
 def _find_batch_axis(pool_shape, slot_shape) -> int:
@@ -59,6 +107,9 @@ def insert_slot(pool_state, slot_state, slot: int):
     return jax.tree_util.tree_map(one, pool_state, slot_state)
 
 
+_WINDOW = 4096                  # bounded stat windows (trimmed to half)
+
+
 class ContinuousBatchingScheduler:
     def __init__(self, engine: InferenceEngine, num_slots: int = 4):
         self.engine = engine
@@ -69,18 +120,52 @@ class ContinuousBatchingScheduler:
         self._next_id = itertools.count()
         self._last_token = np.zeros((num_slots,), np.int32)
         self._insert = jax.jit(insert_slot, static_argnums=(2,))
+        # recent finished requests (bounded — see _finish); completed_total
+        # is the lifetime counter
         self.completed: List[Request] = []
+        self.completed_total = 0
         self.steps = 0
+        self.cancelled_total = 0
+        # ascending-insert stat windows, mutated only by the driving thread
+        self.latency_window: List[float] = []
+        self.ttft_window: List[float] = []
+        self.itl_window: List[float] = []    # inter-token gaps, seconds
 
     # --- client API ------------------------------------------------------------
 
     def submit(self, prompt: Sequence[int], max_new_tokens: int = 32,
                eos_id: Optional[int] = None,
-               extras: Optional[Dict[str, Any]] = None) -> Request:
-        req = Request(next(self._next_id), list(prompt), max_new_tokens,
-                      eos_id, extras)
+               extras: Optional[Dict[str, Any]] = None,
+               sampling: Optional[SamplingParams] = None,
+               sink: Optional[TokenSink] = None) -> Request:
+        """Enqueue one prompt.  ``sampling`` (when given) carries the
+        decode config — its max_new_tokens/eos_id override the legacy
+        positional knobs — and every request gets its own sampler."""
+        if sampling is None:
+            sampling = SamplingParams(max_new_tokens=max_new_tokens,
+                                      eos_id=eos_id)
+        req = Request(next(self._next_id), list(prompt),
+                      sampling.max_new_tokens, sampling.eos_id,
+                      extras, sampling, sink)
+        req.sampler = sampling.sampler()
+        req.submitted_at = time.perf_counter()
         self.queue.append(req)
         return req
+
+    def cancel(self, req: Request) -> bool:
+        """Abandon a request: a queued one is finalized immediately, an
+        active one is evicted (slot freed) at the next scheduler tick.
+        Returns whether there was anything left to cancel."""
+        if req.done:
+            return False
+        req.cancelled = True
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            return True                    # active in a slot: reaped in step()
+        self._finish(req, "cancelled", time.perf_counter())
+        self._notify(req, None)
+        return True
 
     @property
     def active(self) -> int:
@@ -96,28 +181,40 @@ class ContinuousBatchingScheduler:
     # --- one scheduler tick ------------------------------------------------------
 
     def step(self) -> List[Request]:
-        """Admit-from-queue + one decode step. Returns newly finished."""
-        self._admit()
-        finished: List[Request] = []
+        """Reap cancellations + admit-from-queue + one decode step.
+        Returns every request that finished during this tick."""
+        finished = self._reap_cancelled()
+        self._admit(finished)
         if self.active == 0:
             return finished
         token = jnp.asarray(self._last_token)
         logits, self.state = self.engine.decode(token, self.state)
-        next_tok = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        # greedy-only ticks argmax on device and ship num_slots ints; the
+        # full (num_slots, V) logits cross to host only when a stochastic
+        # sampler occupies a slot
+        if all(req is None or req.sampler.params.greedy
+               for req in self.slots):
+            host = None
+            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        else:
+            host = np.asarray(logits)                # (num_slots, V)
+            greedy = None
         self.steps += 1
+        now = time.perf_counter()
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            t = int(next_tok[b])
-            req.output.append(t)
-            if ((req.eos_id is not None and t == req.eos_id)
-                    or len(req.output) >= req.max_new_tokens):
-                req.done = True
+            t = (int(greedy[b]) if host is None
+                 else req.sampler.sample(host[b]))
+            self._record_token(req, t, now)
+            reason = self._finish_reason(req, t)
+            if reason is not None:
+                self._finish(req, reason, now)
                 finished.append(req)
-                self.completed.append(req)
                 self.slots[b] = None
             else:
                 self._last_token[b] = t
+            self._notify(req, t)
         return finished
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -129,7 +226,7 @@ class ContinuousBatchingScheduler:
 
     # --- admission -----------------------------------------------------------------
 
-    def _admit(self) -> None:
+    def _admit(self, finished: List[Request]) -> None:
         for b in range(self.num_slots):
             if self.slots[b] is not None or not self.queue:
                 continue
@@ -147,11 +244,71 @@ class ContinuousBatchingScheduler:
                 batch.update({k: jnp.asarray(np.asarray(v)[None])
                               for k, v in req.extras.items()})
             logits, slot_state = self.engine.prefill(batch, slot_state)
-            first = int(np.asarray(jnp.argmax(logits, -1))[0])  # (1, V)
-            req.output.append(first)
-            self.state = self._insert(self.state, slot_state, b)
-            self.slots[b] = req
-            self._last_token[b] = first
+            now = time.perf_counter()
+            first = req.sampler.sample(np.asarray(logits)[0])     # (1, V)
+            self._record_token(req, first, now)
+            reason = self._finish_reason(req, first)
+            if reason is not None:       # stop/budget hit on the very first
+                self._finish(req, reason, now)
+                finished.append(req)
+            else:
+                self.state = self._insert(self.state, slot_state, b)
+                self.slots[b] = req
+                self._last_token[b] = first
+            self._notify(req, first)
+
+    # --- internals -------------------------------------------------------------
+
+    def _reap_cancelled(self) -> List[Request]:
+        reaped = []
+        now = time.perf_counter()
+        for b, req in enumerate(self.slots):
+            if req is not None and req.cancelled:
+                self.slots[b] = None
+                self._finish(req, "cancelled", now)
+                self._notify(req, None)
+                reaped.append(req)
+        return reaped
+
+    def _finish_reason(self, req: Request, token: int) -> Optional[str]:
+        if req.sampler.is_stop(token):
+            return "stop" if (req.eos_id is None
+                              or token != req.eos_id) else "eos"
+        if len(req.output) >= req.max_new_tokens:
+            return "length"
+        return None
+
+    def _record_token(self, req: Request, token: int, now: float) -> None:
+        req.output.append(token)
+        if req.first_token_at is None:
+            req.first_token_at = now
+            self._push(self.ttft_window, now - req.submitted_at)
+        else:
+            self._push(self.itl_window, now - req.last_token_at)
+        req.last_token_at = now
+
+    def _finish(self, req: Request, reason: str, now: float) -> None:
+        req.done = True
+        req.finish_reason = reason
+        req.finished_at = now
+        if reason == "cancelled":
+            self.cancelled_total += 1
+        self.completed_total += 1
+        # bounded like the stat windows: retaining every Request forever
+        # (prompt, output, sampler, sink closure) would leak on a
+        # long-running endpoint
+        self._push(self.completed, req)
+        self._push(self.latency_window, now - req.submitted_at)
+
+    def _notify(self, req: Request, token: Optional[int]) -> None:
+        if req.sink is not None:
+            req.sink(req, token, req.done)
+
+    @staticmethod
+    def _push(window: List[Any], value: Any) -> None:
+        window.append(value)
+        if len(window) > _WINDOW:
+            del window[:-_WINDOW // 2]
 
 
 class SchedulerService:
@@ -161,9 +318,11 @@ class SchedulerService:
     device state); the REST server is not.  The service owns ONE driver
     thread that ticks the scheduler whenever work is pending, while any
     number of handler threads ``submit_and_wait`` prompts and block on a
-    per-request event.  Concurrent /v1/generate calls therefore share decode
-    steps through slot admission instead of serializing whole-batch
-    ``engine.generate`` calls behind a device lock.
+    per-request event — or ``submit_request`` a sink-carrying streaming
+    request whose tokens are delivered as they decode.  Concurrent
+    /v1/generate calls therefore share decode steps through slot admission
+    instead of serializing whole-batch ``engine.generate`` calls behind a
+    device lock.
     """
 
     def __init__(self, engine: InferenceEngine, num_slots: int = 4):
@@ -173,29 +332,39 @@ class SchedulerService:
         self._events: Dict[int, threading.Event] = {}
         self._errors: Dict[int, BaseException] = {}
         self._closed = False
+        self._retiring = False
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="flexserve-scheduler")
         self._thread.start()
 
+    @property
+    def engine(self) -> InferenceEngine:
+        return self.scheduler.engine
+
     def submit_and_wait(self, prompts: Sequence[Sequence[int]], *,
                         max_new_tokens: int = 32,
                         eos_id: Optional[int] = None,
+                        sampling: Optional[SamplingParams] = None,
                         timeout: Optional[float] = None) -> GenerationResult:
         """Enqueue every prompt as its own slot-admissible request and block
         until all of them finish; mirrors ``engine.generate``'s result.
-        ``steps`` counts scheduler ticks during this call's lifetime."""
+        ``steps`` counts scheduler ticks during this call's lifetime.
+        A seeded ``sampling`` gives row i the derived seed ``seed + i`` so
+        rows stay independently reproducible."""
+        if sampling is None:
+            sampling = SamplingParams(max_new_tokens=max_new_tokens,
+                                      eos_id=eos_id)
         for p in prompts:
             # reject un-admittable prompts synchronously (a caller error
             # must not reach — and kill — the driver thread)
             self.scheduler.engine.seq_buckets.bucket_for(len(p))
         with self._lock:
-            if self._closed:
+            if self._closed or self._retiring:
                 raise RuntimeError("scheduler service is closed")
             steps0 = self.scheduler.steps
             pairs: List[Tuple[Request, threading.Event]] = []
-            for p in prompts:
-                req = self.scheduler.submit(p, max_new_tokens=max_new_tokens,
-                                            eos_id=eos_id)
+            for i, p in enumerate(prompts):
+                req = self.scheduler.submit(p, sampling=sampling.for_row(i))
                 ev = threading.Event()
                 self._events[req.req_id] = ev
                 pairs.append((req, ev))
@@ -212,14 +381,75 @@ class SchedulerService:
         return GenerationResult(
             tokens=[req.output for req, _ in pairs],
             prompt_lengths=[len(req.prompt) for req, _ in pairs],
-            steps=steps)
+            steps=steps,
+            finish_reasons=[req.finish_reason for req, _ in pairs])
+
+    def submit_request(self, prompt: Sequence[int], *,
+                       sampling: SamplingParams,
+                       sink: TokenSink) -> Request:
+        """Admit one streaming request; its ``sink`` fires per token from
+        the driver thread (it must never block).  The caller observes
+        completion through the sink's ``done`` flag."""
+        self.scheduler.engine.seq_buckets.bucket_for(len(prompt))
+        with self._lock:
+            if self._closed or self._retiring:
+                raise RuntimeError("scheduler service is closed")
+            req = self.scheduler.submit(prompt, sampling=sampling, sink=sink)
+            self._work.notify()
+            return req
+
+    def cancel(self, req: Request) -> bool:
+        """Cancel a request (frees its decode slot at the next tick)."""
+        with self._lock:
+            live = self.scheduler.cancel(req)
+            # a QUEUED request is finalized inside cancel() and will never
+            # come back from step() — release its submit_and_wait waiter
+            # here or it blocks forever
+            if req.done and req.req_id in self._events:
+                self._events.pop(req.req_id).set()
+            self._work.notify()
+            return live
+
+    def begin_retire(self) -> None:
+        """Refuse NEW submissions from now on (synchronous RuntimeError,
+        which callers route to a replacement service).  Set BEFORE
+        draining: every submit either landed first — and drain() waits
+        for it — or raises and is retried elsewhere.  Closes the window
+        where a request could slip into a scheduler that is about to be
+        torn down."""
+        with self._lock:
+            self._retiring = True
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request has finished (engine
+        retirement path); returns False on timeout."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        while True:
+            with self._lock:
+                if self._closed or self.scheduler.idle():
+                    return True
+            if deadline is not None and time.monotonic() >= deadline:
+                return False
+            time.sleep(0.002)
 
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             s = self.scheduler
-            return {"steps": s.steps, "active_slots": s.active,
-                    "pending": s.pending, "num_slots": s.num_slots,
-                    "completed": len(s.completed)}
+            lat = sorted(s.latency_window)
+            ttft = sorted(s.ttft_window)
+            itl = sorted(s.itl_window)
+            return {
+                "steps": s.steps, "active_slots": s.active,
+                "pending": s.pending, "num_slots": s.num_slots,
+                "completed": s.completed_total,
+                "cancelled": s.cancelled_total,
+                "request_latency_p50_ms": 1e3 * pctl(lat, 0.50),
+                "request_latency_p95_ms": 1e3 * pctl(lat, 0.95),
+                "ttft_p50_ms": 1e3 * pctl(ttft, 0.50),
+                "ttft_p95_ms": 1e3 * pctl(ttft, 0.95),
+                "inter_token_p50_ms": 1e3 * pctl(itl, 0.50),
+                "inter_token_p95_ms": 1e3 * pctl(itl, 0.95),
+            }
 
     def close(self) -> None:
         with self._lock:
@@ -227,18 +457,32 @@ class SchedulerService:
             self._work.notify()
         self._thread.join(timeout=5.0)
 
+    def _fail_in_flight(self, err: BaseException) -> None:
+        """Fail every queued/active request (driver error or close):
+        waiters get the error, streaming sinks get a terminal event."""
+        s = self.scheduler
+        now = time.perf_counter()
+        for req in list(s.queue) + [r for r in s.slots if r is not None]:
+            if req.done:
+                continue
+            req.error = err
+            s._finish(req, "error", now)
+            s._notify(req, None)
+        for req_id, ev in self._events.items():
+            self._errors[req_id] = err
+            ev.set()
+        self._events.clear()
+        s.queue.clear()
+        s.slots = [None] * s.num_slots
+
     def _run(self) -> None:
         while True:
             with self._lock:
                 while not self._closed and self.scheduler.idle():
                     self._work.wait(timeout=0.1)
                 if self._closed:
-                    err = RuntimeError(
-                        "scheduler service closed with requests in flight")
-                    for req_id, ev in self._events.items():
-                        self._errors[req_id] = err
-                        ev.set()
-                    self._events.clear()
+                    self._fail_in_flight(RuntimeError(
+                        "scheduler service closed with requests in flight"))
                     return
                 try:
                     finished = self.scheduler.step()
@@ -247,12 +491,7 @@ class SchedulerService:
                 except BaseException as err:  # noqa: BLE001 — keep driving
                     # Fail every in-flight request but keep the driver
                     # alive: a poisoned batch must not hang future ones.
-                    for req_id, ev in self._events.items():
-                        self._errors[req_id] = err
-                        ev.set()
-                    self._events.clear()
-                    self.scheduler.queue.clear()
-                    self.scheduler.slots = [None] * self.scheduler.num_slots
+                    self._fail_in_flight(err)
                     continue
             for ev in events:
                 ev.set()

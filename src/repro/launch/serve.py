@@ -9,8 +9,10 @@ deployment, runnable here); --full targets the production mesh on TPU.
 With ``--model-store DIR`` the endpoint is store-backed: member params are
 published to (or loaded from) a versioned on-disk model store with
 provenance manifests, and the server exposes the lifecycle admin surface
-(GET /v1/models/{name}, POST .../load /unload /rollback) for hot swaps
-under traffic.
+(GET /v1/models/{name}, POST .../load /unload /rollback /gc, plus
+POST /v1/engines/{name}/load|rollback for the generation engine) for hot
+swaps under traffic.  /v1/generate supports token streaming
+(``"stream": true``) and per-request sampling params.
 """
 
 from __future__ import annotations
@@ -28,23 +30,9 @@ from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
                            ModelStore)
 
 
-def _build_engine(arch_names, *, max_len: int, max_batch: int,
-                  full: bool, seed: int):
-    for i, name in enumerate(arch_names):
-        cfg = get_config(name)
-        if not full:
-            cfg = reduce_for_smoke(cfg)
-        if cfg.family in ("dense", "moe", "ssm", "hybrid"):
-            model = build_model(cfg)
-            params = model.init(jax.random.PRNGKey(seed + i))
-            return InferenceEngine(model, params, max_len=max_len,
-                                   max_batch=max_batch)
-    return None
-
-
 def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               max_batch: int = 8, full: bool = False,
-              seed: int = 0) -> FlexServeApp:
+              seed: int = 0, num_slots: int = 4) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -67,36 +55,49 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
             engine = InferenceEngine(model, params, max_len=max_len,
                                      max_batch=max_batch)
     ensemble = Ensemble(members, max_batch=max_batch)
-    return FlexServeApp(registry, ensemble, engine)
+    return FlexServeApp(registry, ensemble, engine, num_slots=num_slots)
 
 
 def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     max_len: int = 256, max_batch: int = 8,
-                    full: bool = False, seed: int = 0) -> FlexServeApp:
+                    full: bool = False, seed: int = 0,
+                    num_slots: int = 4) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
-    LATEST published version of every member through a ModelManager."""
+    LATEST published version of every member through a ModelManager.  The
+    generation engine is ALSO store-versioned: the first decode-capable
+    member is loaded through the manager's engine plane, so it can be
+    hot-swapped / rolled back under live streaming traffic."""
     store = ModelStore(store_dir)
     member_names = []
+    engine_member = None
     for i, name in enumerate(arch_names):
         reg_name = f"{name}#{i}"
         member_names.append(reg_name)
+        cfg = get_config(name)
+        if not full:
+            cfg = reduce_for_smoke(cfg)
         if store.latest_version(reg_name) is None:
-            cfg = get_config(name)
-            if not full:
-                cfg = reduce_for_smoke(cfg)
             model = build_model(cfg)
             params = model.init(jax.random.PRNGKey(seed + i))
             v = store.publish(reg_name, params, config=name,
                               source=cfg.source,
                               meta={"reduced": not full,
                                     "num_classes": num_classes,
-                                    "init_seed": seed + i})
+                                    "init_seed": seed + i,
+                                    "max_len": max_len,
+                                    "max_batch": max_batch})
             print(f"[serve] published {reg_name} v{v} to {store_dir}")
+        if engine_member is None and cfg.family in ("dense", "moe", "ssm",
+                                                    "hybrid"):
+            engine_member = reg_name
     manager = ModelManager(store, max_batch=max_batch)
     manager.bootstrap(member_names)
-    engine = _build_engine(arch_names, max_len=max_len, max_batch=max_batch,
-                           full=full, seed=seed)
-    return FlexServeApp(engine=engine, manager=manager)
+    app = FlexServeApp(manager=manager, num_slots=num_slots)
+    if engine_member is not None and app.generation is not None:
+        res = manager.load_engine(engine_member)
+        print(f"[serve] generation engine {res['engine']} "
+              f"(alias {res['alias']})")
+    return app
 
 
 def main(argv=None) -> int:
@@ -108,6 +109,8 @@ def main(argv=None) -> int:
     ap.add_argument("--num-classes", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=256)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--num-slots", type=int, default=4,
+                    help="continuous-batching decode slots per engine")
     ap.add_argument("--model-store", default=None, metavar="DIR",
                     help="versioned model store directory; enables the "
                          "lifecycle admin API and hot swaps")
@@ -115,7 +118,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     kw = dict(num_classes=args.num_classes, max_len=args.max_len,
-              max_batch=args.max_batch, full=args.full)
+              max_batch=args.max_batch, full=args.full,
+              num_slots=args.num_slots)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:
@@ -125,8 +129,10 @@ def main(argv=None) -> int:
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "
           f"{len(app.registry)} model(s): {app.registry.names()}")
     print("[serve] routes: GET /health /healthz /v1/models "
-          "/v1/models/{name}; POST /v1/infer /v1/detect /v1/generate"
-          + (" /v1/models/{name}/load|unload|rollback"
+          "/v1/models/{name} /v1/engines; POST /v1/infer /v1/detect "
+          "/v1/generate (+\"stream\": true for token streaming)"
+          + (" /v1/models/{name}/load|unload|rollback|gc "
+             "/v1/engines/{name}/load|rollback"
              if app.manager else ""))
     try:
         server.httpd.serve_forever()

@@ -1,10 +1,14 @@
 from repro.serving.client import FlexServeClient
 from repro.serving.coalesce import BatchCoalescer, CoalesceError
+from repro.serving.generate import (GenerationError, GenerationService,
+                                    GenerationStream)
 from repro.serving.lifecycle import (LifecycleError, ModelManager,
-                                     default_factory)
+                                     default_engine_factory, default_factory)
 from repro.serving.modelstore import ModelStore, StoreError
 from repro.serving.server import FlexServeApp, FlexServeServer
 
 __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
            "BatchCoalescer", "CoalesceError", "ModelStore", "StoreError",
-           "ModelManager", "LifecycleError", "default_factory"]
+           "ModelManager", "LifecycleError", "default_factory",
+           "default_engine_factory", "GenerationError", "GenerationService",
+           "GenerationStream"]

@@ -12,8 +12,21 @@ POST /v1/detect    {"inputs": {...}, "positive_class": 3, "policy": "or",
 ``target`` (optional) names a version alias maintained by the lifecycle
 manager; requests without one hit the default ("stable") alias.
 
-POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16}
-    -> {"outputs": [[...], ...], "steps": n}
+POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16,
+                    "temperature"?: 0.8, "top_k"?: 40, "top_p"?: 0.95,
+                    "seed"?: 7, "stop"?: [50256], "eos_id"?: 2,
+                    "stream"?: false, "target"?: "canary"}
+    -> {"outputs": [[...], ...], "steps": n, "prompt_lengths": [...],
+        "finish_reasons": ["length"|"eos"|"stop", ...]}
+
+    With ``"stream": true`` (exactly ONE prompt) the response is chunked
+    transfer encoding, application/x-ndjson — one JSON event per chunk:
+        {"event": "token", "token": t, "index": i}          per token
+        {"event": "done", "tokens": [...], "finish_reason": ...,
+         "token_count": n, "prompt_length": l, "ttft_ms": ...,
+         "total_ms": ..., "engine": "name@vN", "sampling": {...}}
+    (or a terminal {"event": "error", "error": ...}).  Disconnecting
+    mid-stream cancels the request and frees its decode slot.
 
 GET  /v1/models    -> {"models": [{name, version, arch, family, params,
                                    source, param_hash?}, ...]}
@@ -29,6 +42,19 @@ POST /v1/models/{name}/load     {"version"?: n, "alias"?: "canary",
                                  "warm"?: true}
 POST /v1/models/{name}/unload   {"version"?: n}   (omit -> whole member)
 POST /v1/models/{name}/rollback {"alias"?: "stable"}
+POST /v1/models/{name}/gc       {"keep_last_n": 3}
+    -> {"deleted": [...], "kept": [...], "protected": [...]}
+    (retention GC: never deletes a version referenced by a serving alias)
+
+Generation-engine lifecycle (versioned engines under the same manager):
+
+GET  /v1/engines                -> {"aliases": {alias: "name@vN"},
+                                    "ready": true}
+POST /v1/engines/{name}/load     {"version"?: n, "alias"?: "canary"}
+POST /v1/engines/{name}/rollback {"alias"?: "stable"}
+    Hot-swaps the alias's engine under live decode traffic; in-flight
+    streams drain on the old engine.  /v1/generate targets an engine
+    alias per request via "target".
 
 GET  /health       -> {"status": "ok"}            (liveness: process is up)
 GET  /healthz      -> 200 {"status": "ready"} | 503 {"error": ...}
@@ -37,18 +63,28 @@ GET  /healthz      -> 200 {"status": "ready"} | 503 {"error": ...}
 GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                        "coalesce": {batches_formed, rows_total,
                                     mean_rows_per_batch, max_rows_per_batch,
-                                    queue_wait_p50_ms, queue_wait_p95_ms},
+                                    queue_wait_p50_ms, queue_wait_p95_ms,
+                                    adaptive_linger, effective_linger_ms,
+                                    ewma_interarrival_ms},
                        "ensemble_compiles": {"<bucket>": count, ...},
-                       "generate": {steps, active_slots, pending,
-                                    num_slots, completed}}
+                       "generate": {steps, active_slots, pending, num_slots,
+                                    completed, cancelled,
+                                    request_latency_p50_ms/…_p95_ms,
+                                    ttft_p50_ms/…_p95_ms,
+                                    inter_token_p50_ms/…_p95_ms,
+                                    streams: {started, completed,
+                                              cancelled, failed},
+                                    engines: {alias: {...}}}}
 """
 
 from __future__ import annotations
 
 import json
-from typing import Any, Dict
+from typing import Any, Callable, Dict, Iterator, Optional
 
 import numpy as np
+
+from repro.core.sampling import SamplingError, SamplingParams
 
 
 class ApiError(Exception):
@@ -56,6 +92,32 @@ class ApiError(Exception):
         super().__init__(message)
         self.status = status
         self.message = message
+
+
+class StreamingResponse:
+    """A route handler's signal to the HTTP layer: write ``events`` as a
+    chunked-transfer NDJSON body (one event per chunk) instead of a single
+    JSON document.  ``on_disconnect`` is invoked if the client goes away
+    mid-stream (cancels the underlying request)."""
+
+    def __init__(self, events: Iterator[Dict[str, Any]],
+                 on_disconnect: Optional[Callable[[], Any]] = None):
+        self.events = events
+        self._on_disconnect = on_disconnect
+
+    def disconnect(self) -> None:
+        if self._on_disconnect is not None:
+            self._on_disconnect()
+
+
+def parse_sampling(req: Dict[str, Any], *,
+                   default_max_new_tokens: int = 16) -> SamplingParams:
+    """Per-request sampling params from a /v1/generate body (400 on bad)."""
+    try:
+        return SamplingParams.from_request(
+            req, default_max_new_tokens=default_max_new_tokens)
+    except SamplingError as e:
+        raise ApiError(400, str(e)) from None
 
 
 def parse_request(body: bytes) -> Dict[str, Any]:

@@ -4,9 +4,17 @@ Connections are persistent (HTTP/1.1 keep-alive) and thread-local: each
 client thread reuses one TCP connection across requests, with TCP_NODELAY
 so small request/response bodies are never Nagle-stalled.  Requests go out
 as ONE send; responses are parsed with a minimal header scan (status +
-Content-Length) — the same leanness as the server side, so concurrent
-benchmarking measures the endpoint, not stdlib HTTP machinery.  A stale
-connection (server restart, timeout) is transparently re-opened once.
+Content-Length / Transfer-Encoding) — the same leanness as the server
+side, so concurrent benchmarking measures the endpoint, not stdlib HTTP
+machinery.  A stale connection (server restart, timeout) is transparently
+re-opened once.
+
+Streaming: ``generate_stream`` issues a ``"stream": true`` generate and
+returns an iterator of JSON events, parsed incrementally from the chunked
+response as the server flushes each token.  The iterator must be consumed
+to the terminal ("done"/"error") event to keep the connection reusable;
+``close()`` abandons a stream mid-flight (the server notices the
+disconnect and cancels the request).
 """
 
 from __future__ import annotations
@@ -15,7 +23,7 @@ import json
 import socket
 import threading
 import urllib.parse
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
 
 
 class _Connection:
@@ -33,7 +41,8 @@ class _Connection:
         except OSError:
             pass
 
-    def roundtrip(self, request: bytes) -> Tuple[int, bytes]:
+    def _send_and_head(self, request: bytes) -> Tuple[int, int, bool]:
+        """Send + parse the response head -> (status, length, chunked)."""
         self.sock.sendall(request)
         status_line = self.rfile.readline(65537)
         if not status_line:
@@ -42,15 +51,72 @@ class _Connection:
         if len(parts) < 2 or not parts[0].startswith(b"HTTP/"):
             raise ConnectionError(f"malformed status line {status_line!r}")
         status = int(parts[1])
-        length = 0
+        length, chunked = 0, False
         while True:
             h = self.rfile.readline(65537)
             if h in (b"\r\n", b"\n", b""):
                 break
             key, _, val = h.partition(b":")
-            if key.strip().lower() == b"content-length":
+            key = key.strip().lower()
+            if key == b"content-length":
                 length = int(val)
+            elif key == b"transfer-encoding":
+                chunked = b"chunked" in val.lower()
+        return status, length, chunked
+
+    def roundtrip(self, request: bytes) -> Tuple[int, bytes]:
+        status, length, chunked = self._send_and_head(request)
+        if chunked:
+            return status, b"".join(self.read_chunks())
         return status, self.rfile.read(length) if length else b""
+
+    def stream(self, request: bytes) -> Tuple[int, Iterator[bytes]]:
+        """-> (status, iterator of newline-delimited body records).
+
+        A chunked response is parsed chunk by chunk as the server flushes
+        (this is what makes client-side streaming real: each record is
+        yielded the moment its chunk arrives); a Content-Length response
+        degenerates to a single record.
+        """
+        status, length, chunked = self._send_and_head(request)
+        if not chunked:
+            body = self.rfile.read(length) if length else b""
+            return status, iter([body] if body else [])
+        return status, self._iter_records()
+
+    def read_chunks(self) -> Iterator[bytes]:
+        """Decode chunked transfer encoding: size-line, payload, CRLF,
+        terminated by a zero-size chunk."""
+        while True:
+            size_line = self.rfile.readline(65537)
+            if not size_line:
+                raise ConnectionError("truncated chunked response")
+            try:
+                size = int(size_line.split(b";", 1)[0], 16)
+            except ValueError:
+                raise ConnectionError(
+                    f"malformed chunk size {size_line!r}") from None
+            if size == 0:
+                self.rfile.readline(65537)        # trailing CRLF
+                return
+            data = self.rfile.read(size)
+            if len(data) < size:
+                raise ConnectionError("truncated chunk payload")
+            self.rfile.read(2)                    # chunk-terminating CRLF
+            yield data
+
+    def _iter_records(self) -> Iterator[bytes]:
+        """Split the chunk stream into newline-delimited records,
+        tolerating records that span chunk boundaries."""
+        buf = b""
+        for chunk in self.read_chunks():
+            buf += chunk
+            while b"\n" in buf:
+                line, buf = buf.split(b"\n", 1)
+                if line.strip():
+                    yield line
+        if buf.strip():
+            yield buf
 
 
 class FlexServeClient:
@@ -73,14 +139,18 @@ class FlexServeClient:
             conn.close()
             self._local.conn = None
 
+    def _raw_request(self, method: str, path: str,
+                     payload: Optional[Dict[str, Any]] = None) -> bytes:
+        body = json.dumps(payload).encode() if payload is not None else b""
+        return (f"{method} {path} HTTP/1.1\r\n"
+                f"Host: {self.host}:{self.port}\r\n"
+                f"Content-Type: application/json\r\n"
+                f"Content-Length: {len(body)}\r\n"
+                f"\r\n").encode("latin-1") + body
+
     def _request(self, method: str, path: str,
                  payload: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        body = json.dumps(payload).encode() if payload is not None else b""
-        request = (f"{method} {path} HTTP/1.1\r\n"
-                   f"Host: {self.host}:{self.port}\r\n"
-                   f"Content-Type: application/json\r\n"
-                   f"Content-Length: {len(body)}\r\n"
-                   f"\r\n").encode("latin-1") + body
+        request = self._raw_request(method, path, payload)
         for attempt in (0, 1):
             fresh = getattr(self._local, "conn", None) is None
             try:
@@ -147,6 +217,35 @@ class FlexServeClient:
         body = {} if alias is None else {"alias": alias}
         return self._request("POST", self._model_path(name, "rollback"), body)
 
+    def gc_model(self, name: str, keep_last_n: int) -> Dict[str, Any]:
+        """Retention GC: delete store versions beyond the newest
+        ``keep_last_n`` (versions referenced by a serving alias survive)."""
+        return self._request("POST", self._model_path(name, "gc"),
+                             {"keep_last_n": keep_last_n})
+
+    # --- generation-engine lifecycle ------------------------------------------
+
+    def _engine_path(self, name: str, action: str) -> str:
+        return (f"/v1/engines/{urllib.parse.quote(name, safe='')}/{action}")
+
+    def engines(self) -> Dict[str, Any]:
+        return self._request("GET", "/v1/engines")
+
+    def load_engine(self, name: str, version: Optional[int] = None,
+                    alias: Optional[str] = None) -> Dict[str, Any]:
+        body: Dict[str, Any] = {}
+        if version is not None:
+            body["version"] = version
+        if alias is not None:
+            body["alias"] = alias
+        return self._request("POST", self._engine_path(name, "load"), body)
+
+    def rollback_engine(self, name: str,
+                        alias: Optional[str] = None) -> Dict[str, Any]:
+        body = {} if alias is None else {"alias": alias}
+        return self._request("POST", self._engine_path(name, "rollback"),
+                             body)
+
     def infer(self, inputs: Dict[str, Any], policy: str = "soft_vote",
               target: Optional[str] = None) -> Dict[str, Any]:
         body: Dict[str, Any] = {"inputs": inputs, "policy": policy}
@@ -164,10 +263,59 @@ class FlexServeClient:
             body["target"] = target
         return self._request("POST", "/v1/detect", body)
 
+    @staticmethod
+    def _generate_body(prompts, max_new_tokens, eos_id, *,
+                       temperature=None, top_k=None, top_p=None, seed=None,
+                       stop=None, target=None) -> Dict[str, Any]:
+        body: Dict[str, Any] = {"prompts": [list(p) for p in prompts],
+                                "max_new_tokens": max_new_tokens,
+                                "eos_id": eos_id}
+        for key, val in (("temperature", temperature), ("top_k", top_k),
+                         ("top_p", top_p), ("seed", seed), ("stop", stop),
+                         ("target", target)):
+            if val is not None:
+                body[key] = val
+        return body
+
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 16,
-                 eos_id: Optional[int] = None) -> Dict[str, Any]:
-        return self._request("POST", "/v1/generate",
-                             {"prompts": [list(p) for p in prompts],
-                              "max_new_tokens": max_new_tokens,
-                              "eos_id": eos_id})
+                 eos_id: Optional[int] = None,
+                 **sampling: Any) -> Dict[str, Any]:
+        """Blocking generate; ``sampling`` may carry temperature / top_k /
+        top_p / seed / stop / target (an engine version alias)."""
+        return self._request(
+            "POST", "/v1/generate",
+            self._generate_body(prompts, max_new_tokens, eos_id, **sampling))
+
+    def generate_stream(self, prompt: Sequence[int],
+                        max_new_tokens: int = 16,
+                        eos_id: Optional[int] = None,
+                        **sampling: Any) -> Iterator[Dict[str, Any]]:
+        """Streamed generate for ONE prompt: yields event dicts (see
+        repro.serving.api) as the server decodes.  Consume to the terminal
+        event, or ``close()`` the client to abandon mid-stream (the server
+        cancels the request and frees its slot)."""
+        body = self._generate_body([prompt], max_new_tokens, eos_id,
+                                   **sampling)
+        body["stream"] = True
+        request = self._raw_request("POST", "/v1/generate", body)
+        # eager send: the request is in flight (and errors surface) before
+        # the caller pulls the first event; a stale reused keep-alive
+        # connection is re-opened once, exactly like _request
+        for attempt in (0, 1):
+            fresh = getattr(self._local, "conn", None) is None
+            try:
+                status, records = self._conn().stream(request)
+                break
+            except socket.timeout:
+                self.close()
+                raise
+            except (ConnectionError, OSError):
+                self.close()
+                if attempt or fresh:
+                    raise
+        if status != 200:
+            data = json.loads(b"".join(records) or b"{}")
+            raise RuntimeError(f"POST /v1/generate -> {status}: "
+                               f"{data.get('error', data)}")
+        return (json.loads(record) for record in records)

@@ -33,6 +33,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.batching import BucketSpec
+from repro.core.scheduler import pctl
 
 
 @dataclass
@@ -87,6 +88,12 @@ class BatchCoalescer:
                   groups never exceed the largest bucket.
     max_wait_ms:  how long the dispatcher lingers for more rows after the
                   first request of a group arrives (the latency knob).
+                  ``None`` (the default) derives the linger ADAPTIVELY
+                  from the observed request inter-arrival gap (EWMA): a
+                  few gaps' worth under load — long enough for the next
+                  requests to join — collapsing to near zero when traffic
+                  is too sparse for lingering to ever pay.  A float pins
+                  the fixed linger (the pre-adaptive behavior).
     max_rows:     hard cap on rows per forward (default: largest bucket).
     boundary_grace_ms:
                   once a group's rows exactly fill a bucket and the queue
@@ -95,8 +102,17 @@ class BatchCoalescer:
                   arrivals, short enough that a lone request barely notices.
     """
 
+    # adaptive-linger envelope: linger ~ GAIN x EWMA inter-arrival gap,
+    # clamped to [MIN, CAP]; gaps beyond the cap mean the next request
+    # cannot arrive inside any permissible linger, so don't linger at all
+    ADAPTIVE_MIN_S = 2e-4
+    ADAPTIVE_CAP_S = 10e-3
+    ADAPTIVE_GAIN = 4.0
+    _EWMA_ALPHA = 0.2
+
     def __init__(self, forward_fn: Callable, buckets: BucketSpec, *,
-                 max_wait_ms: float = 5.0, max_rows: Optional[int] = None,
+                 max_wait_ms: Optional[float] = None,
+                 max_rows: Optional[int] = None,
                  boundary_grace_ms: float = 1.5):
         self._forward = forward_fn
         try:
@@ -105,7 +121,9 @@ class BatchCoalescer:
         except (TypeError, ValueError):   # builtins, odd callables
             self._fwd_takes_tag = False
         self.buckets = buckets
-        self.max_wait_s = max_wait_ms / 1e3
+        self.adaptive = max_wait_ms is None
+        self.max_wait_s = (self.ADAPTIVE_CAP_S if self.adaptive
+                           else max_wait_ms / 1e3)
         self.boundary_grace_s = min(boundary_grace_ms / 1e3, self.max_wait_s)
         self.max_rows = min(max_rows or buckets.sizes[-1], buckets.sizes[-1])
         self._queue: "queue.Queue[Optional[_Pending]]" = queue.Queue()
@@ -119,6 +137,8 @@ class BatchCoalescer:
         self._rows = 0
         self._max_rows_seen = 0
         self._waits: List[float] = []
+        self._last_arrival: Optional[float] = None
+        self._ewma_gap_s: Optional[float] = None
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="flexserve-coalescer")
         self._thread.start()
@@ -133,8 +153,16 @@ class BatchCoalescer:
         if n > self.buckets.sizes[-1]:
             raise ValueError(f"batch of {n} exceeds max bucket "
                              f"{self.buckets.sizes[-1]}")
+        now = time.perf_counter()
         entry = _Pending({k: np.asarray(v) for k, v in batch.items()},
-                         n, time.perf_counter(), tag)
+                         n, now, tag)
+        with self._stats_lock:
+            if self._last_arrival is not None:
+                gap = now - self._last_arrival
+                self._ewma_gap_s = (gap if self._ewma_gap_s is None else
+                                    (1 - self._EWMA_ALPHA) * self._ewma_gap_s
+                                    + self._EWMA_ALPHA * gap)
+            self._last_arrival = now
         with self._submit_lock:
             if self._closed:
                 raise CoalesceError("coalescer is closed")
@@ -157,26 +185,41 @@ class BatchCoalescer:
         """Dispatch thread running and accepting work (readiness signal)."""
         return self._thread.is_alive() and not self._closed
 
+    # --- adaptive linger --------------------------------------------------------
+
+    def linger_s(self) -> float:
+        """The effective per-group linger.  Fixed mode returns the knob;
+        adaptive mode scales with the EWMA inter-arrival gap so the
+        dispatcher waits just long enough for the next few requests under
+        load, and barely at all when traffic is sparse."""
+        if not self.adaptive:
+            return self.max_wait_s
+        with self._stats_lock:
+            gap = self._ewma_gap_s
+        if gap is None or gap >= self.ADAPTIVE_CAP_S:
+            return self.ADAPTIVE_MIN_S
+        return min(max(self.ADAPTIVE_GAIN * gap, self.ADAPTIVE_MIN_S),
+                   self.ADAPTIVE_CAP_S)
+
     # --- observability --------------------------------------------------------
 
     def stats(self) -> Dict[str, Any]:
+        effective_linger = self.linger_s()
         with self._stats_lock:
             waits = sorted(self._waits)
             batches, rows = self._batches, self._rows
-
-            def pct(p):
-                if not waits:
-                    return 0.0
-                return 1e3 * waits[min(len(waits) - 1,
-                                       int(p * (len(waits) - 1)))]
-
+            gap = self._ewma_gap_s
             return {
                 "batches_formed": batches,
                 "rows_total": rows,
                 "mean_rows_per_batch": rows / batches if batches else 0.0,
                 "max_rows_per_batch": self._max_rows_seen,
-                "queue_wait_p50_ms": pct(0.50),
-                "queue_wait_p95_ms": pct(0.95),
+                "queue_wait_p50_ms": 1e3 * pctl(waits, 0.50),
+                "queue_wait_p95_ms": 1e3 * pctl(waits, 0.95),
+                "adaptive_linger": self.adaptive,
+                "effective_linger_ms": 1e3 * effective_linger,
+                "ewma_interarrival_ms": (1e3 * gap if gap is not None
+                                         else None),
             }
 
     # --- dispatch thread ------------------------------------------------------
@@ -226,7 +269,7 @@ class BatchCoalescer:
                 self._execute(groups.pop(sig).entries)   # full: flush, restart
                 g = None
             if g is None:
-                groups[sig] = g = _Group(entry, now + self.max_wait_s)
+                groups[sig] = g = _Group(entry, now + self.linger_s())
             else:
                 g.entries.append(entry)
                 g.rows += entry.n

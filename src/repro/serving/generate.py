@@ -1,0 +1,313 @@
+"""Streaming generation subsystem: the request-lifecycle layer between the
+REST front-end and the continuous-batching scheduler.
+
+``GenerationService`` owns everything that happens to a generate request
+after the HTTP handler has parsed it:
+
+  * **Token streaming** — ``stream()`` admits one prompt into a decode
+    slot and returns a ``GenerationStream`` whose ``events()`` iterator
+    yields one JSON-able event per decoded token as it lands (the HTTP
+    layer writes each as one chunk), closing with an end-of-stream summary
+    (token count, finish reason, TTFT, total latency).  Non-streaming
+    ``generate()`` keeps the blocking all-at-once path.
+
+  * **Per-request sampling** — every request carries its own
+    ``SamplingParams``; slots sharing a decode batch sample independently
+    (see repro.core.sampling).
+
+  * **Versioned engines** — the service maps version ALIASES ("stable",
+    "canary", ...) to engine entries, mirroring the lifecycle manager's
+    ensemble aliases.  ``install()`` hot-swaps an alias to a new engine:
+    new requests land on the new engine's scheduler immediately, in-flight
+    streams DRAIN on the old engine (nothing is truncated), and only then
+    is the old scheduler closed.  The ``ModelManager`` drives this from
+    store-backed versions (load_engine / rollback_engine).
+
+  * **Cancellation** — a client that disconnects mid-stream has its
+    request cancelled and its decode slot freed at the next scheduler
+    tick; cancellations, TTFT, and inter-token latency are all on
+    /metrics.
+
+The token sinks run on each scheduler's driver thread and only ever
+enqueue into per-stream queues — a slow or dead client never stalls
+decoding for the other slots.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from typing import Any, Dict, Iterator, List, Optional, Sequence
+
+from repro.core.engine import GenerationResult, InferenceEngine
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import Request, SchedulerService
+
+
+class GenerationError(RuntimeError):
+    """Generation-plane failure (no engine, unknown alias)."""
+
+
+class _EngineEntry:
+    """One versioned engine serving one alias: its own scheduler service."""
+
+    __slots__ = ("name", "version", "service", "installed_at")
+
+    def __init__(self, name: str, version: int, service: SchedulerService):
+        self.name = name
+        self.version = version
+        self.service = service
+        self.installed_at = time.time()
+
+    @property
+    def label(self) -> str:
+        return f"{self.name}@v{self.version}"
+
+
+class GenerationStream:
+    """Handle on one in-flight streaming request.
+
+    ``events()`` yields dict events in order:
+        {"event": "token", "token": t, "index": i}          (per token)
+        {"event": "done", "tokens": [...], "finish_reason": ...,
+         "token_count": n, "prompt_length": ..., "ttft_ms": ...,
+         "total_ms": ..., "engine": "name@vN"}              (terminal)
+    or a terminal {"event": "error", "error": ...} if the engine failed.
+    ``cancel()`` abandons the request and frees its decode slot.
+    """
+
+    def __init__(self, service: "GenerationService", entry: _EngineEntry,
+                 sampling: SamplingParams):
+        self._service = service
+        self._entry = entry
+        self._sampling = sampling
+        self._queue: "queue.Queue[Optional[Dict[str, Any]]]" = queue.Queue()
+        self.request: Optional[Request] = None        # set right after submit
+
+    # --- sink: runs on the scheduler driver thread; must never block ---------
+
+    def _sink(self, req: Request, token: Optional[int], done: bool) -> None:
+        if token is not None:
+            self._queue.put({"event": "token", "token": token,
+                             "index": len(req.output) - 1})
+        if done:
+            self._queue.put(self._terminal_event(req))
+            self._queue.put(None)                     # end-of-stream marker
+            self._service._finished(req)
+
+    def _terminal_event(self, req: Request) -> Dict[str, Any]:
+        if req.finish_reason == "error":
+            return {"event": "error",
+                    "error": f"{type(req.error).__name__}: {req.error}"
+                             if req.error is not None else "engine failure"}
+        ev = {"event": "done", "tokens": list(req.output),
+              "finish_reason": req.finish_reason,
+              "token_count": len(req.output),
+              "prompt_length": len(req.prompt),
+              "total_ms": 1e3 * (req.latency_s or 0.0),
+              "engine": self._entry.label,
+              "sampling": self._sampling.describe()}
+        if req.ttft_s is not None:
+            ev["ttft_ms"] = 1e3 * req.ttft_s
+        return ev
+
+    # --- consumer side --------------------------------------------------------
+
+    def events(self, timeout: Optional[float] = 120.0
+               ) -> Iterator[Dict[str, Any]]:
+        """Yield events until the terminal one (inclusive).  ``timeout``
+        bounds the wait for EACH event, not the whole stream."""
+        while True:
+            try:
+                ev = self._queue.get(timeout=timeout)
+            except queue.Empty:
+                self.cancel()
+                yield {"event": "error",
+                       "error": f"no token within {timeout}s"}
+                return
+            if ev is None:
+                return
+            yield ev
+
+    def cancel(self) -> bool:
+        """Abandon the stream (client went away); frees the decode slot."""
+        if self.request is None:
+            return False
+        return self._entry.service.cancel(self.request)
+
+
+class GenerationService:
+    """Versioned, streaming generate front-end (see module docstring).
+
+    Constructed either around a static ``engine`` (installed as
+    ``engine@v0`` under the default alias) or empty, with engines
+    installed later by the lifecycle manager.
+    """
+
+    def __init__(self, engine: Optional[InferenceEngine] = None, *,
+                 num_slots: int = 4, default_alias: str = "stable",
+                 drain_timeout_s: float = 30.0):
+        self.num_slots = num_slots
+        self.default_alias = default_alias
+        self.drain_timeout_s = drain_timeout_s
+        self._lock = threading.Lock()
+        self._aliases: Dict[str, _EngineEntry] = {}
+        self._stats_lock = threading.Lock()
+        self._streams = {"started": 0, "completed": 0, "cancelled": 0,
+                         "failed": 0}
+        self._swaps = 0
+        self._closed = False
+        if engine is not None:
+            self.install("engine", 0, engine)
+
+    # --- engine lifecycle -----------------------------------------------------
+
+    def install(self, name: str, version: int, engine: InferenceEngine, *,
+                alias: Optional[str] = None,
+                num_slots: Optional[int] = None) -> Dict[str, Any]:
+        """Serve ``engine`` as ``name@vversion`` under ``alias``.
+
+        The swap is atomic for admission: requests submitted after this
+        returns (and any racing submit that wins the pointer swap) land on
+        the NEW engine.  Requests already admitted keep decoding on the
+        old engine until they finish — the old scheduler is drained, then
+        closed, so no in-flight stream is truncated by a swap."""
+        service = SchedulerService(engine,
+                                   num_slots=num_slots or self.num_slots)
+        entry = _EngineEntry(name, version, service)
+        with self._lock:
+            if self._closed:
+                service.close()
+                raise GenerationError("generation service is closed")
+            alias = alias or self.default_alias
+            old = self._aliases.get(alias)
+            self._aliases[alias] = entry
+        drained, drain_s = True, 0.0
+        if old is not None:
+            # refuse-new FIRST: a submit racing the swap either landed
+            # before this (drain waits for it) or raises and is retried
+            # on the alias's new entry — no stream is ever stranded in a
+            # closing scheduler
+            old.service.begin_retire()
+            t0 = time.perf_counter()
+            drained = old.service.drain(self.drain_timeout_s)
+            drain_s = time.perf_counter() - t0
+            old.service.close()
+        with self._stats_lock:
+            self._swaps += 1
+        return {"alias": alias, "engine": entry.label,
+                "previous_engine": old.label if old is not None else None,
+                "drained": drained, "drain_ms": 1e3 * drain_s}
+
+    @property
+    def ready(self) -> bool:
+        with self._lock:
+            return self.default_alias in self._aliases
+
+    def aliases(self) -> List[str]:
+        with self._lock:
+            return sorted(self._aliases)
+
+    def entry_for(self, alias: Optional[str] = None) -> _EngineEntry:
+        alias = alias or self.default_alias
+        with self._lock:
+            try:
+                return self._aliases[alias]
+            except KeyError:
+                raise GenerationError(
+                    f"no generation engine under alias {alias!r}; "
+                    f"available: {sorted(self._aliases)}") from None
+
+    def engine_for(self, alias: Optional[str] = None) -> InferenceEngine:
+        return self.entry_for(alias).service.engine
+
+    # --- request lifecycle ----------------------------------------------------
+
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 sampling: Optional[SamplingParams] = None, *,
+                 alias: Optional[str] = None,
+                 timeout: Optional[float] = None) -> GenerationResult:
+        """Blocking all-at-once generation (the legacy response shape)."""
+        sampling = sampling or SamplingParams()
+        while True:
+            entry = self.entry_for(alias)
+            try:
+                return entry.service.submit_and_wait(
+                    prompts, sampling=sampling, timeout=timeout)
+            except GenerationError:
+                raise
+            except RuntimeError:
+                # raced an engine swap into the retiring old service: the
+                # alias already points at the replacement — retry there.
+                # Each retry requires ANOTHER swap to have moved the
+                # pointer, so this terminates; an unmoved pointer means a
+                # real failure
+                if entry is self.entry_for(alias):
+                    raise
+
+    def stream(self, prompt: Sequence[int],
+               sampling: Optional[SamplingParams] = None, *,
+               alias: Optional[str] = None) -> GenerationStream:
+        """Admit one prompt and return the stream handle immediately;
+        tokens arrive on the handle as the scheduler decodes them."""
+        sampling = sampling or SamplingParams()
+        while True:
+            entry = self.entry_for(alias)
+            stream = GenerationStream(self, entry, sampling)
+            try:
+                stream.request = entry.service.submit_request(
+                    prompt, sampling=sampling, sink=stream._sink)
+                break
+            except GenerationError:
+                raise
+            except RuntimeError:
+                # raced an engine swap into the retiring old service: the
+                # alias already points at the replacement — admit there.
+                # Terminates because each retry needs another swap to have
+                # moved the pointer; an unmoved pointer is a real failure
+                if entry is self.entry_for(alias):
+                    raise
+        with self._stats_lock:
+            self._streams["started"] += 1
+        return stream
+
+    def _finished(self, req: Request) -> None:
+        key = ("cancelled" if req.finish_reason == "cancelled" else
+               "failed" if req.finish_reason == "error" else "completed")
+        with self._stats_lock:
+            self._streams[key] += 1
+
+    # --- observability / teardown ---------------------------------------------
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            entries = dict(self._aliases)
+        engines = {a: {"engine": e.label, **e.service.stats()}
+                   for a, e in entries.items()}
+        with self._stats_lock:
+            out: Dict[str, Any] = {"streams": dict(self._streams),
+                                   "engine_swaps": self._swaps}
+        # the default alias's scheduler stats at top level keep the
+        # /metrics "generate" section shape stable for dashboards — zeroed
+        # before the first engine load so scrapers never hit missing keys
+        out.update({"steps": 0, "active_slots": 0, "pending": 0,
+                    "num_slots": self.num_slots, "completed": 0,
+                    "cancelled": 0,
+                    "request_latency_p50_ms": 0.0,
+                    "request_latency_p95_ms": 0.0,
+                    "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,
+                    "inter_token_p50_ms": 0.0, "inter_token_p95_ms": 0.0})
+        default = engines.get(self.default_alias)
+        if default is not None:
+            out.update({k: v for k, v in default.items() if k != "engine"})
+        out["engines"] = engines
+        return out
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            entries = list(self._aliases.values())
+            self._aliases.clear()
+        for e in entries:
+            e.service.close()

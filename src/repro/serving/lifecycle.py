@@ -19,6 +19,16 @@ Version ALIASES ("stable", "canary", ...) each own a membership map and an
 ensemble; ``/v1/infer``/``/v1/detect`` target one per request, so a canary
 version takes real traffic next to stable — sharing the param arrays of
 every member the two aliases have in common.
+
+GENERATION ENGINES ride the same lifecycle: with a ``GenerationService``
+attached, ``load_engine`` materializes a store version (restore + hash
+verify, like any member), wraps it in an ``InferenceEngine``, and
+hot-swaps it under an engine alias — new decode requests land on the new
+engine while in-flight streams drain on the old one — with
+``rollback_engine`` returning an alias to its previous version.  ``gc``
+applies a keep-last-N retention policy to the store, never deleting a
+version any serving alias (ensemble or engine, active or rollback
+target) still references.
 """
 
 from __future__ import annotations
@@ -29,6 +39,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.registry import ModelRegistry
 from repro.serving.modelstore import ModelStore
@@ -60,6 +71,17 @@ def default_factory(manifest: Dict[str, Any]):
     return model, apply, num_classes
 
 
+def default_engine_factory(manifest: Dict[str, Any], model,
+                           params) -> InferenceEngine:
+    """(manifest, Model, params) -> InferenceEngine for the decode plane.
+
+    ``max_len`` / ``max_batch`` come from the manifest when the publisher
+    recorded them, so an engine version carries its own serving shape."""
+    return InferenceEngine(model, params,
+                           max_len=int(manifest.get("max_len", 256)),
+                           max_batch=int(manifest.get("max_batch", 8)))
+
+
 class ModelManager:
     """Coordinates store <-> registry <-> per-alias ensembles.
 
@@ -72,6 +94,9 @@ class ModelManager:
                  registry: Optional[ModelRegistry] = None, *,
                  factory: Callable[[Dict[str, Any]], Tuple[Any, Any, int]]
                  = default_factory,
+                 engine_factory: Callable[[Dict[str, Any], Any, Any],
+                                          InferenceEngine]
+                 = default_engine_factory,
                  max_batch: int = 8,
                  class_names: Optional[List[str]] = None,
                  default_alias: str = "stable",
@@ -83,6 +108,10 @@ class ModelManager:
         self.default_alias = default_alias
         self.drain_timeout_s = drain_timeout_s
         self._factory = factory
+        self._engine_factory = engine_factory
+        self.generation = None          # attach_generation() wires this
+        self._engine_active: Dict[str, Tuple[str, int]] = {}
+        self._engine_previous: Dict[str, Tuple[str, int]] = {}
         self._admin_lock = threading.RLock()
         # alias -> {member name -> active version}; maps are replaced
         # wholesale under the admin lock, so hot-path readers always see a
@@ -93,7 +122,8 @@ class ModelManager:
         self._warm_example: Optional[Dict[str, np.ndarray]] = None
         self._stats_lock = threading.Lock()
         self._counters = {"loads": 0, "unloads": 0, "swaps": 0,
-                          "rollbacks": 0}
+                          "rollbacks": 0, "engine_loads": 0,
+                          "engine_rollbacks": 0, "gc_runs": 0}
         self._warm_total_s = 0.0
         self._last_warm_s = 0.0
         self._version_traffic: Dict[str, Dict[str, int]] = {}
@@ -176,6 +206,9 @@ class ModelManager:
             if version is not None:
                 holders = [a for a, m in self._active.items()
                            if m.get(name) == version]
+                holders += [f"engine:{a}"
+                            for a, nv in self._engine_active.items()
+                            if nv == (name, version)]
                 if holders:
                     raise LifecycleError(
                         f"{name} v{version} is active in alias(es) "
@@ -222,6 +255,90 @@ class ModelManager:
                 self._counters["rollbacks"] += 1
                 self._counters["loads"] -= 1    # it was a rollback, not a load
             result["rolled_back_to"] = prev
+            return result
+
+    # --- generation-engine plane ----------------------------------------------
+
+    def attach_generation(self, service) -> Any:
+        """Wire a ``GenerationService``; engine versions then flow through
+        this manager (load_engine / rollback_engine), under the manager's
+        drain budget."""
+        service.drain_timeout_s = self.drain_timeout_s
+        self.generation = service
+        return service
+
+    def _require_generation(self):
+        if self.generation is None:
+            raise LifecycleError(
+                "no generation service attached to this manager; "
+                "engine lifecycle needs a scheduler-backed endpoint")
+        return self.generation
+
+    def load_engine(self, name: str, version: Optional[int] = None, *,
+                    alias: Optional[str] = None) -> Dict[str, Any]:
+        """Materialize a store version (restore + hash verify) as an
+        InferenceEngine and hot-swap it under an engine alias.  In-flight
+        decode streams drain on the displaced engine before it is closed;
+        new requests land on the new engine immediately."""
+        gen = self._require_generation()
+        alias = alias or self.default_alias
+        with self._admin_lock:
+            if version is None:
+                version = self.store.latest_version(name)
+                if version is None:
+                    raise LifecycleError(
+                        f"store has no published versions of {name!r}")
+            manifest = self.store.manifest(name, version)  # raises StoreError
+            rm = self._materialize(name, version, manifest)
+            engine = self._engine_factory(manifest, rm.model, rm.params)
+            swap = gen.install(name, version, engine, alias=alias)
+            old = self._engine_active.get(alias)
+            self._engine_active[alias] = (name, version)
+            if old is not None and old != (name, version):
+                self._engine_previous[alias] = old
+            with self._stats_lock:
+                self._counters["engine_loads"] += 1
+            return {"name": name, "version": version,
+                    "manifest": manifest, **swap}
+
+    def rollback_engine(self, name: Optional[str] = None, *,
+                        alias: Optional[str] = None) -> Dict[str, Any]:
+        """Swap an engine alias back to its previously active version."""
+        alias = alias or self.default_alias
+        with self._admin_lock:
+            prev = self._engine_previous.get(alias)
+            if prev is None:
+                raise LifecycleError(
+                    f"no previous engine recorded for alias {alias!r}")
+            if name is not None and prev[0] != name:
+                raise LifecycleError(
+                    f"alias {alias!r} previously served engine "
+                    f"{prev[0]!r} v{prev[1]}, not {name!r}")
+            result = self.load_engine(prev[0], prev[1], alias=alias)
+            with self._stats_lock:
+                self._counters["engine_rollbacks"] += 1
+                self._counters["engine_loads"] -= 1   # rollback, not a load
+            result["rolled_back_to"] = prev[1]
+            return result
+
+    # --- retention GC ---------------------------------------------------------
+
+    def gc(self, name: str, keep_last_n: int) -> Dict[str, Any]:
+        """Apply keep-last-N retention to ``name``'s store versions.
+        Versions referenced by ANY serving alias — ensemble or engine,
+        active or recorded as a rollback target — are never deleted."""
+        with self._admin_lock:
+            protected = {m[name] for m in self._active.values()
+                         if name in m}
+            protected |= {v for (a, n), v in self._previous.items()
+                          if n == name}
+            protected |= {v for n, v in self._engine_active.values()
+                          if n == name}
+            protected |= {v for n, v in self._engine_previous.values()
+                          if n == name}
+            result = self.store.gc(name, keep_last_n, protected=protected)
+            with self._stats_lock:
+                self._counters["gc_runs"] += 1
             return result
 
     def bootstrap(self, names: Optional[List[str]] = None, *,
@@ -312,6 +429,9 @@ class ModelManager:
             "active": active,
             "previous": {a: v for (a, n), v in self._previous.items()
                          if n == name},
+            "engine_active": {a: v
+                              for a, (n, v) in self._engine_active.items()
+                              if n == name},
             "traffic": traffic,
         }
 
@@ -323,4 +443,6 @@ class ModelManager:
             out["per_version"] = {k: dict(v)
                                   for k, v in self._version_traffic.items()}
         out["aliases"] = {a: dict(m) for a, m in self._active.items()}
+        out["engine_aliases"] = {a: f"{n}@v{v}" for a, (n, v)
+                                 in self._engine_active.items()}
         return out

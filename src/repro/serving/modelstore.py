@@ -25,9 +25,10 @@ from __future__ import annotations
 
 import os
 import re
+import shutil
 import time
 from datetime import datetime, timezone
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 from repro.training import checkpoint
 
@@ -144,3 +145,33 @@ class ModelStore:
                     f"(manifest {manifest['param_hash'][:12]}…, "
                     f"checkpoint {got[:12]}…) — refusing to serve")
         return tree, manifest
+
+    # --- retention ------------------------------------------------------------
+
+    def gc(self, name: str, keep_last_n: int, *,
+           protected: Iterable[int] = ()) -> Dict[str, Any]:
+        """Delete published versions beyond the newest ``keep_last_n``.
+
+        ``protected`` versions (the lifecycle manager passes everything a
+        serving alias references) are NEVER deleted regardless of age —
+        retention must not be able to pull a version out from under live
+        traffic or a rollback.  Versions are immutable, so deletion is the
+        only mutation the store ever performs; a version number is never
+        reused afterwards (publish allocates past the highest survivor).
+        """
+        if keep_last_n < 1:
+            raise StoreError(f"keep_last_n must be >= 1, got {keep_last_n}")
+        versions = self.versions(name)
+        if not versions:
+            raise StoreError(f"store has no published versions of {name!r}")
+        protected = set(protected)
+        keep = set(versions[-keep_last_n:]) | protected
+        deleted = []
+        for v in versions:
+            if v in keep:
+                continue
+            shutil.rmtree(self.version_dir(name, v))
+            deleted.append(v)
+        return {"name": name, "deleted": deleted,
+                "kept": [v for v in versions if v in keep],
+                "protected": sorted(protected & set(versions))}

@@ -37,9 +37,9 @@ from repro.core.batching import BucketSpec
 from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
 from repro.core.registry import ModelRegistry
-from repro.core.scheduler import SchedulerService
 from repro.serving import api
 from repro.serving.coalesce import BatchCoalescer
+from repro.serving.generate import GenerationError, GenerationService
 from repro.serving.lifecycle import LifecycleError, ModelManager
 from repro.serving.modelstore import StoreError
 
@@ -47,18 +47,21 @@ from repro.serving.modelstore import StoreError
 class FlexServeApp:
     """Bundles a registry, an optional ensemble/manager, and an engine.
 
-    ``max_wait_ms`` / ``max_coalesce_rows`` tune the coalescer (how long the
-    dispatcher lingers for more rows, and the rows-per-forward cap);
-    ``num_slots`` sizes the continuous-batching decode pool.  Pass a
-    ``manager`` instead of a static ``ensemble`` to serve store-backed,
-    hot-swappable models.
+    ``max_wait_ms`` / ``max_coalesce_rows`` tune the coalescer (how long
+    the dispatcher lingers for more rows — ``None`` derives the linger
+    adaptively from the observed arrival rate — and the rows-per-forward
+    cap); ``num_slots`` sizes each continuous-batching decode pool.  Pass
+    a ``manager`` instead of a static ``ensemble`` to serve store-backed,
+    hot-swappable models; with a manager attached, generation engines are
+    versioned and hot-swappable too (POST /v1/engines/{name}/load).
     """
 
     def __init__(self, registry: Optional[ModelRegistry] = None,
                  ensemble: Optional[Ensemble] = None,
                  engine: Optional[InferenceEngine] = None, *,
                  manager: Optional[ModelManager] = None,
-                 coalesce: bool = True, max_wait_ms: float = 5.0,
+                 coalesce: bool = True,
+                 max_wait_ms: Optional[float] = None,
                  max_coalesce_rows: Optional[int] = None,
                  num_slots: int = 4):
         if manager is not None and ensemble is not None:
@@ -75,15 +78,17 @@ class FlexServeApp:
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
         self.coalescer: Optional[BatchCoalescer] = None
-        self.generation: Optional[SchedulerService] = None
+        self.generation: Optional[GenerationService] = None
         if coalesce and (ensemble is not None or manager is not None):
             buckets = (ensemble.batch_buckets if ensemble is not None
                        else BucketSpec.pow2(manager.max_batch))
             self.coalescer = BatchCoalescer(
                 self._coalesced_forward, buckets,
                 max_wait_ms=max_wait_ms, max_rows=max_coalesce_rows)
-        if coalesce and engine is not None:
-            self.generation = SchedulerService(engine, num_slots=num_slots)
+        if coalesce and (engine is not None or manager is not None):
+            self.generation = GenerationService(engine, num_slots=num_slots)
+            if manager is not None:
+                manager.attach_generation(self.generation)
 
     @property
     def ensemble(self) -> Optional[Ensemble]:
@@ -160,6 +165,11 @@ class FlexServeApp:
         if path.startswith("/v1/models/"):
             return self._model_admin(method, path[len("/v1/models/"):],
                                      body)
+        if method == "GET" and path == "/v1/engines":
+            return self._engines_status()
+        if path.startswith("/v1/engines/"):
+            return self._engine_admin(method, path[len("/v1/engines/"):],
+                                      body)
         if method == "POST" and path == "/v1/infer":
             return self._infer(api.parse_request(body))
         if method == "POST" and path == "/v1/detect":
@@ -202,7 +212,8 @@ class FlexServeApp:
             raise api.ApiError(404, "missing model name")
         if method == "GET" and not action:
             return self._model_status(name)
-        if method != "POST" or action not in ("load", "unload", "rollback"):
+        if method != "POST" or action not in ("load", "unload", "rollback",
+                                              "gc"):
             raise api.ApiError(404,
                                f"no route {method} /v1/models/{rest}")
         mgr = self._require_manager()
@@ -215,8 +226,49 @@ class FlexServeApp:
                                 warm=bool(req.get("warm", True)))
             if action == "unload":
                 return mgr.unload(name, version)
+            if action == "gc":
+                keep = api.opt_int(req, "keep_last_n", 0)
+                if keep < 1:
+                    raise api.ApiError(
+                        400, "'keep_last_n' must be an integer >= 1")
+                return mgr.gc(name, keep)
             return mgr.rollback(name, alias=alias,
                                 warm=bool(req.get("warm", True)))
+        except StoreError as e:
+            raise api.ApiError(404, str(e)) from None
+        except KeyError as e:
+            raise api.ApiError(404, str(e)) from None
+        except LifecycleError as e:
+            raise api.ApiError(409, str(e)) from None
+
+    # --- generation-engine admin surface --------------------------------------
+
+    def _engines_status(self) -> Dict[str, Any]:
+        gen = self.generation
+        if gen is None:
+            return {"aliases": {}, "ready": False}
+        stats = gen.stats()
+        return {"aliases": {a: e["engine"]
+                            for a, e in stats["engines"].items()},
+                "ready": gen.ready}
+
+    def _engine_admin(self, method: str, rest: str,
+                      body: bytes) -> Dict[str, Any]:
+        name, _, action = rest.partition("/")
+        name = urllib.parse.unquote(name)
+        if not name:
+            raise api.ApiError(404, "missing engine name")
+        if method != "POST" or action not in ("load", "rollback"):
+            raise api.ApiError(404,
+                               f"no route {method} /v1/engines/{rest}")
+        mgr = self._require_manager()
+        req = api.parse_request(body)
+        version = api.opt_int(req, "version", 0) or None
+        alias = req.get("alias")
+        try:
+            if action == "load":
+                return mgr.load_engine(name, version, alias=alias)
+            return mgr.rollback_engine(name, alias=alias)
         except StoreError as e:
             raise api.ApiError(404, str(e)) from None
         except KeyError as e:
@@ -310,26 +362,55 @@ class FlexServeApp:
         resp["policy"] = req.get("policy", "or")
         return resp
 
-    def _generate(self, req) -> Dict[str, Any]:
-        if self.engine is None:
-            raise api.ApiError(503, "no generation engine deployed")
+    def _generate(self, req):
         prompts = req.get("prompts")
         if not prompts or not isinstance(prompts, list):
             raise api.ApiError(400, "'prompts' must be a list of token lists")
-        max_new = api.opt_int(req, "max_new_tokens", 16)
-        eos_id = req.get("eos_id")
+        sampling = api.parse_sampling(req)
+        alias = req.get("target")
+        if req.get("stream"):
+            return self._generate_stream(prompts, sampling, alias)
         try:
-            if self.generation is not None:
-                res = self.generation.submit_and_wait(
-                    prompts, max_new_tokens=max_new, eos_id=eos_id)
-            else:
+            if self.generation is not None and (self.generation.ready
+                                                or alias is not None):
+                res = self.generation.generate(prompts, sampling,
+                                               alias=alias)
+            elif self.engine is not None:
+                if alias is not None:
+                    raise api.ApiError(
+                        400, "per-request 'target' aliases need a "
+                             "generation service on this endpoint")
                 with self.device_lock:
-                    res = self.engine.generate(
-                        prompts, max_new_tokens=max_new, eos_id=eos_id)
+                    res = self.engine.generate(prompts, sampling=sampling)
+            else:
+                raise api.ApiError(503, "no generation engine deployed")
+        except GenerationError as e:
+            raise api.ApiError(404, str(e)) from None
         except (ValueError, TypeError) as e:
             raise api.ApiError(400, str(e)) from None
         return {"outputs": res.tokens, "steps": res.steps,
-                "prompt_lengths": res.prompt_lengths}
+                "prompt_lengths": res.prompt_lengths,
+                "finish_reasons": res.finish_reasons}
+
+    def _generate_stream(self, prompts, sampling,
+                         alias) -> api.StreamingResponse:
+        if self.generation is None or not (self.generation.ready
+                                           or alias is not None):
+            raise api.ApiError(
+                503, "streaming needs the scheduler-backed generation "
+                     "service (engine deployed, coalesce=True)")
+        if len(prompts) != 1:
+            raise api.ApiError(
+                400, "streaming supports exactly one prompt per request")
+        try:
+            stream = self.generation.stream(prompts[0], sampling,
+                                            alias=alias)
+        except GenerationError as e:
+            raise api.ApiError(404, str(e)) from None
+        except (ValueError, TypeError) as e:
+            raise api.ApiError(400, str(e)) from None
+        return api.StreamingResponse(stream.events(),
+                                     on_disconnect=stream.cancel)
 
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
@@ -391,6 +472,8 @@ def make_handler(app: FlexServeApp):
                 status, payload = e.status, {"error": e.message}
             except Exception as e:          # noqa: BLE001 — server boundary
                 status, payload = 500, {"error": f"{type(e).__name__}: {e}"}
+            if isinstance(payload, api.StreamingResponse):
+                return self._stream_reply(payload, keep)
             data = api.encode_response(payload)
             self._reply(status, data, keep)
             return keep
@@ -402,6 +485,31 @@ def make_handler(app: FlexServeApp):
                     f"Connection: {'keep-alive' if keep else 'close'}\r\n"
                     f"\r\n").encode("latin-1")
             self.wfile.write(head + data)     # one syscall, one segment
+
+        def _stream_reply(self, resp: api.StreamingResponse,
+                          keep: bool) -> bool:
+            """Write a token stream as chunked transfer encoding — one
+            NDJSON event per chunk, flushed as it decodes, so the client
+            sees the first token long before the stream finishes.  A
+            failed write means the client went away: cancel the request
+            (freeing its decode slot) and drop the connection."""
+            head = (f"HTTP/1.1 200 OK\r\n"
+                    f"Content-Type: application/x-ndjson\r\n"
+                    f"Transfer-Encoding: chunked\r\n"
+                    f"Connection: {'keep-alive' if keep else 'close'}\r\n"
+                    f"\r\n").encode("latin-1")
+            try:
+                self.wfile.write(head)
+                for event in resp.events:
+                    data = api.encode_response(event) + b"\n"
+                    # chunk = size line + payload (wfile is unbuffered:
+                    # one write, one segment — the flush per token)
+                    self.wfile.write(b"%x\r\n%s\r\n" % (len(data), data))
+                self.wfile.write(b"0\r\n\r\n")
+                return keep
+            except (ConnectionError, TimeoutError, OSError):
+                resp.disconnect()             # cancel: free the decode slot
+                return False
 
     return Handler
 

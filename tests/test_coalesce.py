@@ -202,6 +202,54 @@ def test_forward_error_scatters_to_callers():
         co.close()
 
 
+# --- adaptive linger ----------------------------------------------------------
+
+
+def test_fixed_max_wait_overrides_adaptive():
+    """An explicit max_wait_ms pins the linger (pre-adaptive behavior)."""
+    fwd = CountingForward()
+    co = BatchCoalescer(fwd, BucketSpec.pow2(16), max_wait_ms=30.0)
+    try:
+        assert not co.adaptive
+        assert co.linger_s() == pytest.approx(0.030)
+        st = co.stats()
+        assert st["adaptive_linger"] is False
+        assert st["effective_linger_ms"] == pytest.approx(30.0)
+    finally:
+        co.close()
+
+
+def test_adaptive_linger_tracks_arrival_rate():
+    """Default mode derives the linger from the observed inter-arrival
+    EWMA: dense traffic earns a few-gaps linger, sparse traffic collapses
+    to the minimum (lingering could never pay)."""
+    fwd = CountingForward()
+    co = BatchCoalescer(fwd, BucketSpec.pow2(16))
+    try:
+        assert co.adaptive
+        # no history yet: don't make the first request pay
+        assert co.linger_s() == pytest.approx(co.ADAPTIVE_MIN_S)
+        # live traffic populates the EWMA (exact value is host-noisy)
+        for _ in range(6):
+            co.submit({"x": np.ones((1, 2), np.float32)})
+        st = co.stats()
+        assert st["adaptive_linger"] is True
+        assert st["ewma_interarrival_ms"] is not None
+        assert (co.ADAPTIVE_MIN_S <= co.linger_s() <= co.ADAPTIVE_CAP_S)
+        # dense arrivals -> linger = GAIN x gap (injected: deterministic)
+        co._ewma_gap_s = 0.001
+        assert co.linger_s() == pytest.approx(co.ADAPTIVE_GAIN * 0.001)
+        # ...clamped to the cap as traffic density drops
+        co._ewma_gap_s = co.ADAPTIVE_CAP_S * 0.9
+        assert co.linger_s() == pytest.approx(co.ADAPTIVE_CAP_S)
+        # gaps beyond the cap: the next request can never arrive inside a
+        # permissible linger, so don't linger at all
+        co._ewma_gap_s = co.ADAPTIVE_CAP_S * 3
+        assert co.linger_s() == pytest.approx(co.ADAPTIVE_MIN_S)
+    finally:
+        co.close()
+
+
 # --- integration: HTTP front-end over a real ensemble ------------------------
 
 

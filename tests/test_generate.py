@@ -1,0 +1,279 @@
+"""Streaming generation subsystem: token streaming over chunked HTTP,
+per-request sampling through the continuous-batching scheduler, stream
+cancellation on client disconnect, and engine hot-swap draining.
+
+Acceptance anchors:
+  * a streamed request delivers its first token BEFORE decoding finishes
+    (TTFT < total latency, asserted client-side and from the summary);
+  * two requests with different temperature/seed sharing a decode batch
+    each produce exactly the tokens a dedicated single-request run with
+    the same params produces (slot isolation under sampling);
+  * a mid-stream client disconnect cancels the request and frees its
+    decode slot.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from conftest import smoke_model
+from repro.core import (InferenceEngine, ModelRegistry, SamplingParams,
+                        SchedulerService)
+from repro.core.sampling import SamplingError, samplers_for
+from repro.core.scheduler import ContinuousBatchingScheduler
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           GenerationService)
+
+ARCH = "yi-9b"
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg, model, params = smoke_model(ARCH)
+    return InferenceEngine(model, params, max_len=128, max_batch=4)
+
+
+@pytest.fixture(scope="module")
+def server(engine):
+    srv = FlexServeServer(
+        FlexServeApp(ModelRegistry(), None, engine, num_slots=4)).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture()
+def client(server):
+    cl = FlexServeClient(*server.address)
+    yield cl
+    cl.close()
+
+
+# --- sampling params ----------------------------------------------------------
+
+
+def test_sampling_params_validation():
+    assert SamplingParams().greedy
+    p = SamplingParams.from_request(
+        {"temperature": 0.7, "top_k": 5, "seed": 3, "stop": [7]})
+    assert (p.temperature, p.top_k, p.seed, p.stop) == (0.7, 5, 3, (7,))
+    for bad in ({"temperature": -1}, {"top_p": 0.0}, {"top_p": 1.5},
+                {"top_k": -2}, {"max_new_tokens": 0}, {"seed": "x"},
+                {"stop": "eos"}, {"temperature": "warm"}):
+        with pytest.raises(SamplingError):
+            SamplingParams.from_request(bad)
+
+
+def test_sampler_greedy_matches_argmax():
+    rng = np.random.default_rng(0)
+    logits = rng.normal(size=(64,)).astype(np.float32)
+    assert SamplingParams().sampler().sample(logits) == int(logits.argmax())
+
+
+def test_sampler_top_k_top_p_restrict_support():
+    rng = np.random.default_rng(1)
+    logits = rng.normal(size=(128,)).astype(np.float32)
+    top5 = set(np.argsort(logits)[-5:])
+    s = SamplingParams(temperature=1.0, top_k=5, seed=0).sampler()
+    assert all(s.sample(logits) in top5 for _ in range(50))
+    # top_p -> 0 degenerates to argmax (the single most likely token)
+    s = SamplingParams(temperature=1.0, top_p=1e-9, seed=0).sampler()
+    assert s.sample(logits) == int(logits.argmax())
+
+
+def test_sampler_seed_reproducible_and_rows_independent():
+    rng = np.random.default_rng(2)
+    logits = rng.normal(size=(256,)).astype(np.float32)
+    p = SamplingParams(temperature=1.0, seed=11)
+    a = [p.sampler().sample(logits) for _ in range(8)]
+    b = [p.sampler().sample(logits) for _ in range(8)]
+    assert a == b                        # same seed, same stream
+    s0, s1 = samplers_for(p, 2)          # row 1 derives seed 12
+    assert s0.params.seed == 11 and s1.params.seed == 12
+
+
+# --- per-slot sampling in the scheduler ---------------------------------------
+
+
+def test_mixed_sampling_in_shared_batch_isolated(engine):
+    """Two requests with different temperature/seed decode in the SAME
+    continuous batch; each must produce exactly what a dedicated
+    single-request run with its params produces."""
+    configs = [SamplingParams(temperature=0.9, seed=7, max_new_tokens=6),
+               SamplingParams(temperature=0.0, max_new_tokens=6)]
+    prompts = [[1, 2, 3], [9, 8, 7, 6]]
+    sched = ContinuousBatchingScheduler(engine, num_slots=2)
+    reqs = [sched.submit(p, sampling=s) for p, s in zip(prompts, configs)]
+    sched.run()
+    assert sched.steps < 12              # they really shared decode steps
+    for req, prompt, s in zip(reqs, prompts, configs):
+        direct = engine.generate([prompt], sampling=s)
+        assert req.output == direct.tokens[0], (req.output, direct.tokens)
+
+
+def test_scheduler_stop_tokens_and_finish_reasons(engine):
+    probe = engine.generate([[5, 4, 3]], max_new_tokens=4)
+    second = probe.tokens[0][1]
+    sched = ContinuousBatchingScheduler(engine, num_slots=2)
+    stopped = sched.submit([5, 4, 3],
+                           sampling=SamplingParams(max_new_tokens=8,
+                                                   stop=(second,)))
+    full = sched.submit([5, 4, 3], sampling=SamplingParams(max_new_tokens=4))
+    sched.run()
+    assert stopped.output == probe.tokens[0][:2]     # stop token included
+    assert stopped.finish_reason == "stop"
+    assert full.finish_reason == "length" and len(full.output) == 4
+
+
+def test_cancel_queued_request_releases_waiter(engine):
+    """Cancelling a request still WAITING for a slot must release its
+    submit_and_wait waiter (regression: queued cancels finalized outside
+    step(), so the completion event was never set)."""
+    svc = SchedulerService(engine, num_slots=1)
+    try:
+        blocker = svc.submit_request(
+            [1, 2], sampling=SamplingParams(max_new_tokens=100),
+            sink=lambda *a: None)
+        deadline = time.time() + 5
+        while svc.stats()["active_slots"] == 0 and time.time() < deadline:
+            time.sleep(0.005)
+        out = {}
+        waiter = threading.Thread(target=lambda: out.update(
+            res=svc.submit_and_wait([[3, 4]], max_new_tokens=4, timeout=15)))
+        waiter.start()
+        queued = None
+        deadline = time.time() + 5
+        while queued is None and time.time() < deadline:
+            with svc._lock:
+                if svc.scheduler.queue:
+                    queued = svc.scheduler.queue[0]
+            time.sleep(0.005)
+        assert queued is not None, "request never reached the queue"
+        svc.cancel(queued)
+        waiter.join(timeout=5)
+        assert not waiter.is_alive(), "cancelled queued request hung waiter"
+        assert out["res"].finish_reasons == ["cancelled"]
+        svc.cancel(blocker)
+    finally:
+        svc.close()
+
+
+# --- streaming over HTTP ------------------------------------------------------
+
+
+def test_stream_first_token_before_done(client):
+    """THE acceptance assertion: token events arrive while decoding is
+    still in flight — first-event wall time < done wall time, and the
+    server-side summary agrees (ttft < total)."""
+    t_first = t_done = None
+    events = []
+    for ev in client.generate_stream([1, 2, 3], max_new_tokens=16):
+        events.append(ev)
+        if ev["event"] == "token" and t_first is None:
+            t_first = time.perf_counter()
+        if ev["event"] == "done":
+            t_done = time.perf_counter()
+    assert t_first is not None and t_done is not None and t_first < t_done
+    done = events[-1]
+    assert done["ttft_ms"] < done["total_ms"]
+    assert done["finish_reason"] == "length"
+    assert done["token_count"] == 16 and done["engine"] == "engine@v0"
+
+
+def test_stream_chunked_wire_format(client):
+    """Per-token events are well-formed and agree with the summary; the
+    keep-alive connection is reusable after the stream terminator."""
+    events = list(client.generate_stream([2, 4, 6], max_new_tokens=5))
+    tokens = [e for e in events if e["event"] == "token"]
+    assert [e["index"] for e in tokens] == list(range(5))
+    done = events[-1]
+    assert [e["token"] for e in tokens] == done["tokens"]
+    assert done["prompt_length"] == 3
+    # same connection, next request: chunked framing fully consumed
+    assert client.health()["status"] == "ok"
+    out = client.generate([[2, 4, 6]], max_new_tokens=5)
+    assert out["outputs"][0] == done["tokens"]       # greedy == greedy
+
+
+def test_stream_sampling_seeded_determinism(client):
+    a = list(client.generate_stream([3, 1, 4], max_new_tokens=8,
+                                    temperature=0.8, seed=42))[-1]
+    b = list(client.generate_stream([3, 1, 4], max_new_tokens=8,
+                                    temperature=0.8, seed=42))[-1]
+    assert a["tokens"] == b["tokens"]
+    assert a["sampling"]["seed"] == 42
+
+
+def test_stream_rejects_multi_prompt_and_bad_sampling(client):
+    with pytest.raises(RuntimeError, match="400"):
+        list(client.generate_stream([1, 2], max_new_tokens=4,
+                                    temperature=-0.5))
+    with pytest.raises(RuntimeError, match="exactly one prompt"):
+        client._request("POST", "/v1/generate",
+                        {"prompts": [[1], [2]], "stream": True})
+
+
+def test_stream_disconnect_cancels_and_frees_slot(server):
+    """Mid-stream client disconnect: the server cancels the request and
+    frees its decode slot (observed via /metrics)."""
+    host, port = server.address
+    probe = FlexServeClient(host, port)
+    before = probe.metrics()["generate"]["cancelled"]
+    victim = FlexServeClient(host, port)
+    stream = victim.generate_stream([1, 1, 2], max_new_tokens=100)
+    for _ in range(2):                   # prove the stream was live
+        assert next(stream)["event"] == "token"
+    victim.close()                       # vanish mid-stream
+    deadline = time.time() + 10
+    while time.time() < deadline:
+        g = probe.metrics()["generate"]
+        if g["cancelled"] > before and g["active_slots"] == 0:
+            break
+        time.sleep(0.05)
+    g = probe.metrics()["generate"]
+    assert g["cancelled"] > before, "disconnect never cancelled the request"
+    assert g["active_slots"] == 0, "cancelled stream left its slot occupied"
+    assert g["streams"]["cancelled"] >= 1
+    probe.close()
+
+
+def test_nonstream_response_shape_and_percentiles(client):
+    resp = client.generate([[1, 2, 3], [9, 8]], max_new_tokens=4)
+    assert set(resp) == {"outputs", "steps", "prompt_lengths",
+                         "finish_reasons"}
+    assert all(len(o) == 4 for o in resp["outputs"])
+    assert resp["finish_reasons"] == ["length", "length"]
+    g = client.metrics()["generate"]
+    assert g["request_latency_p95_ms"] >= g["request_latency_p50_ms"] > 0
+    assert {"ttft_p50_ms", "inter_token_p50_ms", "streams",
+            "engines"} <= set(g)
+
+
+# --- engine hot-swap drains in-flight streams (service-level) -----------------
+
+
+def test_install_drains_in_flight_streams(engine):
+    """Swapping the alias to a new engine must not truncate a stream
+    already decoding on the old one; new requests land on the new
+    engine."""
+    cfg, model, params = smoke_model(ARCH)
+    gen = GenerationService(engine, num_slots=2)
+    try:
+        stream = gen.stream([1, 2, 3],
+                            SamplingParams(max_new_tokens=40))
+        it = stream.events()
+        assert next(it)["event"] == "token"          # in flight on v0
+        engine2 = InferenceEngine(model, params, max_len=128, max_batch=4)
+        res = gen.install("engine", 1, engine2)
+        assert res["drained"] and res["previous_engine"] == "engine@v0"
+        events = list(it)
+        done = events[-1]
+        assert done["event"] == "done"
+        assert done["token_count"] == 40             # nothing truncated
+        assert done["engine"] == "engine@v0"         # finished where it began
+        done2 = list(gen.stream([1, 2, 3],
+                                SamplingParams(max_new_tokens=4)).events())[-1]
+        assert done2["engine"] == "engine@v1"        # new traffic, new engine
+    finally:
+        gen.close()

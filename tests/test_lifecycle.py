@@ -17,10 +17,11 @@ import numpy as np
 import pytest
 
 from conftest import smoke_model
-from repro.core import Ensemble, EnsembleMember, ModelRegistry
+from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
+                        ModelRegistry, SamplingParams)
 from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
-                           LifecycleError, ModelManager, ModelStore,
-                           StoreError)
+                           GenerationService, LifecycleError, ModelManager,
+                           ModelStore, StoreError)
 from repro.training import checkpoint
 
 ARCH = "yi-9b"
@@ -248,6 +249,95 @@ def test_manager_warm_precompiles_buckets(store_with_versions):
     assert ens.num_compilations == n_before
 
 
+# --- store GC: keep-last-N retention ------------------------------------------
+
+
+def test_store_gc_keep_last_n(tmp_path):
+    store = ModelStore(str(tmp_path))
+    _publish_versions(store, "det", 5)
+    res = store.gc("det", 2, protected={1})
+    assert res["deleted"] == [2, 3]            # 4, 5 newest; 1 protected
+    assert res["kept"] == [1, 4, 5]
+    assert store.versions("det") == [1, 4, 5]
+    # version numbers are never reused after GC
+    cfg, model, _ = smoke_model(ARCH)
+    assert store.publish("det", model.init(jax.random.PRNGKey(9)),
+                         config=ARCH) == 6
+    with pytest.raises(StoreError, match="keep_last_n"):
+        store.gc("det", 0)
+    with pytest.raises(StoreError, match="no published versions"):
+        store.gc("ghost", 1)
+
+
+def test_manager_gc_protects_serving_aliases(tmp_path):
+    """GC must never delete a version an alias references: active members,
+    rollback targets, and the generation engine's version all survive."""
+    store = ModelStore(str(tmp_path))
+    _publish_versions(store, "det", 4)
+    mgr = ModelManager(store, max_batch=4).bootstrap(["det"])   # active v4
+    mgr.load("det", 1)                     # active v1, previous v4
+    gen = mgr.attach_generation(GenerationService(num_slots=2))
+    try:
+        mgr.load_engine("det", 2)          # engine alias holds v2
+        res = mgr.gc("det", keep_last_n=1)
+        assert res["deleted"] == [3]       # only the unreferenced one
+        assert sorted(res["protected"]) == [1, 2, 4]
+        assert store.versions("det") == [1, 2, 4]
+        assert mgr.stats()["gc_runs"] == 1
+    finally:
+        gen.close()
+
+
+# --- generation-engine lifecycle under the manager ----------------------------
+
+
+def test_manager_engine_requires_generation_service(store_with_versions):
+    mgr = _manager(store_with_versions)
+    with pytest.raises(LifecycleError, match="no generation service"):
+        mgr.load_engine("det")
+
+
+def test_manager_engine_load_swap_rollback(tmp_path):
+    store = ModelStore(str(tmp_path))
+    _publish_versions(store, "det", 2)
+    mgr = ModelManager(store, max_batch=4).bootstrap(["det"])
+    gen = mgr.attach_generation(GenerationService(num_slots=2))
+    try:
+        res = mgr.load_engine("det")               # latest: v2
+        assert res["engine"] == "det@v2" and res["drained"]
+        assert res["manifest"]["param_hash"]
+        prompt, n = [1, 2, 3], 6
+        v2_tokens = gen.generate(
+            [prompt], SamplingParams(max_new_tokens=n)).tokens[0]
+        # the engine really serves the store version's params: reference
+        # engine built from the same restored checkpoint decodes the same
+        cfg, model, _ = smoke_model(ARCH)
+        like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params2, _m = store.load("det", 2, like)
+        ref = InferenceEngine(model, params2, max_len=256, max_batch=8)
+        assert v2_tokens == ref.generate([prompt],
+                                         max_new_tokens=n).tokens[0]
+        res = mgr.load_engine("det", 1)
+        assert res["engine"] == "det@v1"
+        assert res["previous_engine"] == "det@v2"
+        v1_tokens = gen.generate(
+            [prompt], SamplingParams(max_new_tokens=n)).tokens[0]
+        res = mgr.rollback_engine("det")
+        assert res["rolled_back_to"] == 2
+        assert gen.generate([prompt],
+                            SamplingParams(max_new_tokens=n)
+                            ).tokens[0] == v2_tokens
+        assert v1_tokens != v2_tokens       # distinct params, distinct decode
+        assert mgr.stats()["engine_aliases"] == {"stable": "det@v2"}
+        # an engine-held version is load-bearing: unload refuses it even
+        # when no ensemble alias serves it any more
+        mgr.load("det", 1)                  # ensemble moves off v2...
+        with pytest.raises(LifecycleError, match="engine:stable"):
+            mgr.unload("det", 2)            # ...but the engine still holds it
+    finally:
+        gen.close()
+
+
 # --- admin API over HTTP ------------------------------------------------------
 
 
@@ -316,6 +406,54 @@ def test_per_request_alias_targeting(lifecycle_server):
         client.infer({"tokens": tokens}, target="ghost")
     st = client.model_status("det")
     assert st["active"] == {"stable": 2, "canary": 1}
+
+
+def test_engine_admin_routes(lifecycle_server):
+    client = FlexServeClient(*lifecycle_server.address)
+    assert client.engines() == {"aliases": {}, "ready": False}
+    with pytest.raises(RuntimeError, match="409"):
+        client.load_engine("ghost")            # no published versions
+    res = client.load_engine("det", 1)
+    assert res["engine"] == "det@v1" and res["alias"] == "stable"
+    assert client.engines() == {"aliases": {"stable": "det@v1"},
+                                "ready": True}
+    # canary engine takes per-request "target" traffic next to stable
+    client.load_engine("det", 2, alias="canary")
+    stable = client.generate([[1, 2, 3]], max_new_tokens=4)
+    canary = client.generate([[1, 2, 3]], max_new_tokens=4, target="canary")
+    assert len(stable["outputs"][0]) == len(canary["outputs"][0]) == 4
+    with pytest.raises(RuntimeError, match="404"):
+        client.generate([[1, 2, 3]], max_new_tokens=4, target="ghost")
+    # streaming reports which engine served it
+    done = list(client.generate_stream([1, 2, 3], max_new_tokens=4,
+                                       target="canary"))[-1]
+    assert done["engine"] == "det@v2"
+    # swap stable and roll it back
+    res = client.load_engine("det", 2)
+    assert res["previous_engine"] == "det@v1"
+    res = client.rollback_engine("det")
+    assert res["rolled_back_to"] == 1 and res["engine"] == "det@v1"
+    with pytest.raises(RuntimeError, match="409"):
+        client.rollback_engine("other-name")
+    st = client.model_status("det")
+    assert st["engine_active"] == {"stable": 1, "canary": 2}
+    m = client.metrics()
+    assert m["lifecycle"]["engine_loads"] >= 3
+    assert m["lifecycle"]["engine_rollbacks"] == 1
+    assert m["generate"]["engines"]["stable"]["engine"] == "det@v1"
+
+
+def test_gc_admin_route(lifecycle_server):
+    client = FlexServeClient(*lifecycle_server.address)
+    with pytest.raises(RuntimeError, match="400"):
+        client.gc_model("det", keep_last_n=0)
+    res = client.gc_model("det", keep_last_n=1)
+    assert res["deleted"] == [1]               # v2 active in "stable"
+    assert res["kept"] == [2] and res["protected"] == [2]
+    st = client.model_status("det")
+    assert [m["version"] for m in st["versions"]] == [2]
+    with pytest.raises(RuntimeError, match="404"):
+        client.gc_model("ghost", keep_last_n=1)
 
 
 # --- healthz readiness --------------------------------------------------------
@@ -413,3 +551,70 @@ def test_hot_swap_under_open_loop_traffic(lifecycle_server):
     m = client.metrics()["lifecycle"]
     assert m["loads"] >= 1 and m["unloads"] >= 1 and m["swaps"] >= 1
     assert m["last_warm_ms"] >= 0.0
+
+
+# --- THE streaming scenario: engine hot swap under open-loop streams ----------
+
+
+@pytest.mark.slow
+def test_engine_hot_swap_zero_dropped_streams(lifecycle_server):
+    """An open-loop pool of streaming /v1/generate clients runs while the
+    admin API hot-swaps the generation engine v1 -> v2 and rolls it back.
+    ZERO streams fail or truncate: streams in flight at swap time drain on
+    the engine that admitted them, later streams decode on the new one."""
+    host, port = lifecycle_server.address
+    admin = FlexServeClient(host, port)
+    admin.load_engine("det", 1)
+
+    n_tokens = 6
+    results = {"ok": [], "failed": []}
+    engines_seen = set()
+    stop = threading.Event()
+    pool = concurrent.futures.ThreadPoolExecutor(6)
+
+    def one_stream(i):
+        cl = FlexServeClient(host, port)
+        try:
+            events = list(cl.generate_stream(
+                [1 + i % 7, 2, 3], max_new_tokens=n_tokens,
+                temperature=0.6, seed=i))
+            done = events[-1]
+            assert done["event"] == "done", done
+            assert done["token_count"] == n_tokens, done   # not truncated
+            assert [e["token"] for e in events[:-1]] == done["tokens"]
+            engines_seen.add(done["engine"])   # set.add: thread-safe
+            results["ok"].append(i)
+        except Exception as e:                 # noqa: BLE001 — we count them
+            results["failed"].append(repr(e))
+        finally:
+            cl.close()
+
+    def open_loop():
+        i = 0
+        while not stop.is_set():
+            pool.submit(one_stream, i)
+            i += 1
+            time.sleep(0.02)
+
+    driver = threading.Thread(target=open_loop)
+    driver.start()
+    try:
+        time.sleep(0.4)                        # streams flowing on v1
+        res = admin.load_engine("det", 2)      # hot swap under live decode
+        assert res["drained"], "in-flight streams must drain on old engine"
+        time.sleep(0.4)                        # streams flowing on v2
+        res = admin.rollback_engine("det")     # and back again, still live
+        assert res["rolled_back_to"] == 1
+        time.sleep(0.3)
+    finally:
+        stop.set()
+        driver.join(timeout=5)
+        pool.shutdown(wait=True)
+
+    assert results["failed"] == []             # ZERO failed/truncated streams
+    assert len(results["ok"]) >= 20
+    assert {"det@v1", "det@v2"} <= engines_seen   # both versions served
+    g = admin.metrics()["generate"]
+    assert g["streams"]["failed"] == 0 and g["streams"]["cancelled"] == 0
+    assert g["engine_swaps"] >= 3
+    assert g["streams"]["completed"] >= len(results["ok"])
