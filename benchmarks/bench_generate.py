@@ -33,7 +33,8 @@ from repro.configs import get_config, reduce_for_smoke
 from repro.core import InferenceEngine
 from repro.core.scheduler import pctl
 from repro.models import build_model
-from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           HTTPStatusError)
 
 
 def _build_engine(max_len: int = 64, max_batch: int = 8) -> InferenceEngine:
@@ -49,21 +50,41 @@ def _build_engine(max_len: int = 64, max_batch: int = 8) -> InferenceEngine:
 def _stream_round(host: str, port: int, clients: int, per_client: int,
                   max_new_tokens: int):
     """Open loop: every client streams request after request; returns
-    (elapsed_s, tokens_total, ttfts, gaps, failures)."""
+    (elapsed_s, tokens_total, ttfts, gaps, failures, shed, rejected,
+    evicted).
+
+    Shed (429) and deadline-rejected (504, never admitted) streams are
+    counted SEPARATELY from failures — they are the endpoint doing its
+    job under load — and TTFT / inter-token percentiles cover ADMITTED
+    streams only.  A stream evicted MID-decode by its deadline was
+    admitted (its samples legitimately sit in the percentiles) and is
+    reported as ``evicted``, not subtracted from the admitted count."""
     ttfts: List[float] = []
     gaps: List[float] = []
     failures: List[str] = []
+    shed, rejected, evicted = [0], [0], [0]
     tokens_total = [0]
 
     def one_client(cid: int) -> None:
-        cl = FlexServeClient(host, port)
+        cl = FlexServeClient(host, port, retries=0)   # observe every shed
         try:
             for i in range(per_client):
                 t_send = time.perf_counter()
                 t_last = None
-                for ev in cl.generate_stream(
-                        [1 + cid, 2 + i, 3], max_new_tokens=max_new_tokens,
-                        temperature=0.7, seed=1000 * cid + i):
+                try:
+                    events = cl.generate_stream(
+                        [1 + cid, 2 + i, 3],
+                        max_new_tokens=max_new_tokens,
+                        temperature=0.7, seed=1000 * cid + i)
+                except HTTPStatusError as e:
+                    if e.status == 429:
+                        shed[0] += 1                 # += int: GIL-safe
+                        continue
+                    if e.status == 504:
+                        rejected[0] += 1
+                        continue
+                    raise
+                for ev in events:
                     now = time.perf_counter()
                     if ev["event"] == "token":
                         if t_last is None:
@@ -74,6 +95,8 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
                         tokens_total[0] += 1
                     elif ev["event"] == "error":
                         failures.append(ev["error"])
+                    elif ev.get("finish_reason") == "deadline":
+                        evicted[0] += 1              # admitted, then cut
                     elif ev["token_count"] != max_new_tokens:
                         failures.append(
                             f"truncated stream: {ev['token_count']} "
@@ -85,7 +108,8 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
     with concurrent.futures.ThreadPoolExecutor(clients) as ex:
         for f in [ex.submit(one_client, c) for c in range(clients)]:
             f.result()
-    return time.perf_counter() - t0, tokens_total[0], ttfts, gaps, failures
+    return (time.perf_counter() - t0, tokens_total[0], ttfts, gaps,
+            failures, shed[0], rejected[0], evicted[0])
 
 
 def run(clients: int = 4, per_client: int = 6,
@@ -97,17 +121,21 @@ def run(clients: int = 4, per_client: int = 6,
     try:
         # one warm round compiles prefill/decode buckets off the clock
         _stream_round(host, port, 1, 1, max_new_tokens)
-        dt, tokens, ttfts, gaps, failures = _stream_round(
-            host, port, clients, per_client, max_new_tokens)
+        (dt, tokens, ttfts, gaps, failures, shed, rejected,
+         evicted) = _stream_round(host, port, clients, per_client,
+                                  max_new_tokens)
         if failures:
             raise RuntimeError(f"{len(failures)} failed streams: "
                                f"{failures[:3]}")
         ttfts.sort()
         gaps.sort()
         n_streams = clients * per_client
+        admitted = n_streams - shed - rejected
         emit(f"gen_stream_c{clients}", dt / n_streams * 1e6,
              f"tokens_per_s={tokens / dt:.1f} "
              f"streams_per_s={n_streams / dt:.2f} "
+             f"admitted={admitted} shed_429={shed} "
+             f"deadline_504={rejected} deadline_evicted={evicted} "
              f"ttft_p50_ms={1e3 * pctl(ttfts, 0.5):.1f} "
              f"ttft_p95_ms={1e3 * pctl(ttfts, 0.95):.1f} "
              f"itl_p50_ms={1e3 * pctl(gaps, 0.5):.2f} "

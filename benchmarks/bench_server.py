@@ -1,7 +1,7 @@
 """REST endpoint throughput: concurrent clients against one FlexServe
 endpoint.
 
-Two scenarios:
+Three scenarios:
 
   * rest_throughput_w{N}     — single-endpoint scaling sweep (coalescing
     on, N client threads, open loop).
@@ -12,6 +12,18 @@ Two scenarios:
     /metrics.  The coalesced path must show rows/forward > 1 and a clear
     req/s win — the paper's flexible-batching claim measured at the REST
     boundary.
+  * rest_overload_4x         — OPEN-LOOP arrivals at ~4x the endpoint's
+    measured closed-loop capacity against a tight admission budget.
+    Requests are counted HONESTLY: admitted vs shed (429) vs
+    deadline-dropped (504) vs erred, and latency percentiles are
+    computed over ADMITTED requests only (a shed request has no service
+    latency — folding its fast rejection into the percentiles would
+    flatter the tail).  The scenario passes when all excess load is shed,
+    zero admitted requests fail, and admitted p95 stays bounded by the
+    queue budget instead of growing with the run.
+
+Bench clients run with ``retries=0`` so every shed is observed, not
+papered over by the client's backoff.
 
 The comparison model is a deep-but-narrow 4-member ensemble: many small
 ops, so each forward's cost is dominated by fixed dispatch overhead rather
@@ -38,8 +50,10 @@ import numpy as np
 from benchmarks.common import emit
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import Ensemble, EnsembleMember, ModelRegistry
+from repro.core.scheduler import pctl
 from repro.models import build_model
-from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           HTTPStatusError)
 
 
 def _build_members(n_members: int = 2, deep_narrow: bool = False):
@@ -73,7 +87,7 @@ def _stream_round(host, port, payload, clients: int,
     persistent connection.  Returns aggregate req/s over the round."""
 
     def stream(_):
-        cl = FlexServeClient(host, port)
+        cl = FlexServeClient(host, port, retries=0)
         for _ in range(per_client):
             cl.infer(payload)
         cl.close()
@@ -82,6 +96,124 @@ def _stream_round(host, port, payload, clients: int,
     with concurrent.futures.ThreadPoolExecutor(clients) as ex:
         list(ex.map(stream, range(clients)))
     return clients * per_client / (time.perf_counter() - t0)
+
+
+def open_loop_round(host, port, payload, *, rate_rps: float, n_req: int,
+                    n_workers: int = 12, priority=None, deadline_ms=None):
+    """Fixed-schedule OPEN-LOOP load: arrivals at ``rate_rps`` regardless
+    of completions (a worker pool pulls slots off one shared schedule, so
+    a blocked worker does not pause the arrival process).  Returns a dict
+    of honest per-outcome accounting; percentiles are over ADMITTED
+    requests only."""
+    lat_ok, shed, missed, errs = [], [], [], []
+    lock = threading.Lock()
+    interval = 1.0 / rate_rps
+    start = time.perf_counter() + 0.1
+    slip = [0.0]
+
+    def worker(indices):
+        cl = FlexServeClient(host, port, retries=0)
+        for i in indices:
+            wake = start + i * interval
+            d = wake - time.perf_counter()
+            if d > 0:
+                time.sleep(d)
+            else:
+                with lock:
+                    slip[0] = max(slip[0], -d)
+            t = time.perf_counter()
+            try:
+                cl.infer(payload, priority=priority,
+                         deadline_ms=deadline_ms)
+                with lock:
+                    lat_ok.append(time.perf_counter() - t)
+            except HTTPStatusError as e:
+                with lock:
+                    (shed if e.status == 429 else
+                     missed if e.status == 504 else errs).append(e.status)
+            except (RuntimeError, OSError) as e:
+                with lock:
+                    errs.append(str(e))
+        cl.close()
+
+    threads = [threading.Thread(target=worker,
+                                args=(range(w, n_req, n_workers),),
+                                daemon=True)
+               for w in range(n_workers)]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    lat_ok.sort()
+    return {"elapsed_s": elapsed, "admitted": len(lat_ok),
+            "shed": len(shed), "deadline": len(missed),
+            "erred": len(errs),
+            "admitted_p50_s": pctl(lat_ok, 0.50),
+            "admitted_p95_s": pctl(lat_ok, 0.95),
+            "max_schedule_slip_s": slip[0]}
+
+
+def run_overload(clients: int = 8, rate_factor: float = 4.0,
+                 duration_s: float = 2.0, max_queue: int = 8) -> None:
+    """Overload scenario: open loop at ``rate_factor`` x measured
+    closed-loop capacity against a ``max_queue``-row admission budget.
+    Emits one row with the honest outcome split; raises if any admitted
+    request failed (the acceptance bar: shed, don't break)."""
+    registry, members = _build_members(2, deep_narrow=True)
+    app = FlexServeApp(registry, Ensemble(members, max_batch=16),
+                       coalesce=True, max_wait_ms=2.0, max_queue=max_queue,
+                       default_deadline_ms=10_000)
+    srv = FlexServeServer(app).start()
+    host, port = srv.address
+    payload = {"tokens": np.ones((1, 8), np.int32).tolist()}
+    try:
+        # the worker pool must exceed the admission budget, or blocking
+        # clients cap the in-flight depth below the shed threshold and the
+        # "open loop" degenerates to a closed loop that never overloads
+        n_workers = max(clients, 2 * max_queue + 4)
+        # sustainable capacity = closed-loop throughput with the admission
+        # budget exactly full (admitted work can never run deeper than the
+        # budget); the probe client RETRIES the rare boundary shed so the
+        # estimate reflects service rate, not rejection rate.  Coalescing
+        # throughput grows with concurrency, so a shallower probe would
+        # underestimate capacity and "4x" would not actually overload.
+        probe_workers = max(max_queue, 2)
+        warm = FlexServeClient(host, port, retries=6, backoff_s=0.005)
+        _warm_buckets(warm, app.ensemble.batch_buckets.sizes, 8)
+        probe = 12 * probe_workers
+        t0 = time.perf_counter()
+        with concurrent.futures.ThreadPoolExecutor(probe_workers) as ex:
+            list(ex.map(lambda _: warm.infer(payload), range(probe)))
+        cap_rps = probe / (time.perf_counter() - t0)
+        warm.close()
+
+        rate = rate_factor * cap_rps
+        n_req = min(max(40, int(rate * duration_s)), 1500)
+        out = open_loop_round(host, port, payload, rate_rps=rate,
+                              n_req=n_req, n_workers=n_workers)
+        m = FlexServeClient(host, port).metrics()
+        plane = m["admission"]["planes"]["infer"]
+        if out["erred"]:
+            raise RuntimeError(
+                f"{out['erred']} admitted-or-sent requests FAILED under "
+                f"overload (only 429/504 rejections are acceptable)")
+        if out["shed"] + out["deadline"] == 0:
+            raise RuntimeError(
+                f"overload at {rate:.0f} rps shed nothing — the admission "
+                f"budget ({max_queue}) never engaged")
+        emit(f"rest_overload_{rate_factor:.0f}x",
+             out["elapsed_s"] / n_req * 1e6,
+             f"offered_rps={rate:.1f} capacity_rps={cap_rps:.1f} "
+             f"admitted={out['admitted']} shed_429={out['shed']} "
+             f"deadline_504={out['deadline']} erred={out['erred']} "
+             f"admitted_p50_ms={1e3 * out['admitted_p50_s']:.1f} "
+             f"admitted_p95_ms={1e3 * out['admitted_p95_s']:.1f} "
+             f"queue_high_water={plane['high_water']} "
+             f"slip_ms={1e3 * out['max_schedule_slip_s']:.0f}")
+    finally:
+        srv.stop()
 
 
 def run() -> None:
@@ -144,3 +276,30 @@ def run() -> None:
          f"rows_per_forward={rows_per_fwd:.2f} "
          f"speedup={med['coalesce'] / med['lock']:.2f}x "
          f"wait_p95_ms={wait_p95:.1f}")
+
+    # --- scenario 3: overload — shed excess, keep admitted latency bounded ---
+    run_overload()
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scenario", choices=("all", "overload"),
+                    default="all")
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--rate-factor", type=float, default=4.0)
+    ap.add_argument("--duration-s", type=float, default=2.0)
+    ap.add_argument("--max-queue", type=int, default=8)
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    if args.scenario == "overload":
+        run_overload(clients=args.clients, rate_factor=args.rate_factor,
+                     duration_s=args.duration_s, max_queue=args.max_queue)
+    else:
+        run()
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

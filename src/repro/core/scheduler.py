@@ -18,6 +18,19 @@ reproduces exactly regardless of what rides next to it.
 Requests may attach a ``sink`` — called once per generated token from the
 driver — which is what the streaming front-end builds on.
 
+Request-plane integration: a request may carry a ``ctx`` (the serving
+layer's ``RequestContext``) read duck-typed here — ``ctx.priority`` routes
+it into one of two pending deques (interactive / bulk) drained with a
+weighted round-robin so interactive traffic overtakes bulk without
+starving it, and ``ctx.expired()`` is checked at every hand-off: an
+expired request is dropped BEFORE its prefill (finish reason
+``"deadline"``) and an expired active slot is evicted at the next tick.
+``max_pending`` bounds the pending deques (``SchedulerBusy`` instead of
+unbounded growth).  A ``paused`` request (stalled stream consumer) is
+PREEMPTED: its slot is freed for other traffic while it parks, and
+``resume()`` re-admits it by re-prefilling prompt+output — vLLM-style
+recompute preemption.
+
 Slot insertion is family-agnostic: for each state leaf, the batch axis is
 located by comparing the slot-state shape against the pool-state shape.
 """
@@ -44,6 +57,10 @@ from repro.core.sampling import SamplingParams, TokenSampler
 TokenSink = Callable[["Request", Optional[int], bool], None]
 
 
+class SchedulerBusy(RuntimeError):
+    """Pending deque at its bound; the serving layer sheds this as 429."""
+
+
 @dataclass
 class Request:
     req_id: int
@@ -53,9 +70,12 @@ class Request:
     extras: Optional[Dict[str, Any]] = None
     sampling: Optional[SamplingParams] = None
     sink: Optional[TokenSink] = None
+    ctx: Optional[Any] = None           # serving RequestContext (duck-typed)
     output: List[int] = field(default_factory=list)
     done: bool = False
     cancelled: bool = False
+    paused: bool = False                # stalled consumer: preempt the slot
+    pause_count: int = 0
     finish_reason: Optional[str] = None
     error: Optional[BaseException] = None
     submitted_at: float = 0.0
@@ -63,6 +83,13 @@ class Request:
     last_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     sampler: Optional[TokenSampler] = None
+
+    @property
+    def priority(self) -> str:
+        return getattr(self.ctx, "priority", None) or "interactive"
+
+    def expired(self, now: float) -> bool:
+        return self.ctx is not None and self.ctx.expired(now)
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -111,12 +138,22 @@ _WINDOW = 4096                  # bounded stat windows (trimmed to half)
 
 
 class ContinuousBatchingScheduler:
-    def __init__(self, engine: InferenceEngine, num_slots: int = 4):
+    def __init__(self, engine: InferenceEngine, num_slots: int = 4, *,
+                 max_pending: Optional[int] = None,
+                 interactive_weight: int = 4):
         self.engine = engine
         self.num_slots = num_slots
+        self.max_pending = max_pending
+        self.interactive_weight = max(1, interactive_weight)
         self.state = engine.new_state(num_slots)
         self.slots: List[Optional[Request]] = [None] * num_slots
-        self.queue: Deque[Request] = collections.deque()
+        self.queue: Deque[Request] = collections.deque()       # interactive
+        self.bulk_queue: Deque[Request] = collections.deque()
+        self.parked: List[Request] = []      # paused (preempted) requests
+        # retirement path: pausing is disabled while draining for an
+        # engine swap, so every in-flight stream can actually finish
+        self.preempt_enabled = True
+        self._rr_credit = 0                  # weighted-dequeue state
         self._next_id = itertools.count()
         self._last_token = np.zeros((num_slots,), np.int32)
         self._insert = jax.jit(insert_slot, static_argnums=(2,))
@@ -126,6 +163,9 @@ class ContinuousBatchingScheduler:
         self.completed_total = 0
         self.steps = 0
         self.cancelled_total = 0
+        self.deadline_total = 0
+        self.pauses_total = 0
+        self.pending_high_water = 0
         # ascending-insert stat windows, mutated only by the driving thread
         self.latency_window: List[float] = []
         self.ttft_window: List[float] = []
@@ -137,34 +177,68 @@ class ContinuousBatchingScheduler:
                eos_id: Optional[int] = None,
                extras: Optional[Dict[str, Any]] = None,
                sampling: Optional[SamplingParams] = None,
-               sink: Optional[TokenSink] = None) -> Request:
+               sink: Optional[TokenSink] = None,
+               ctx: Optional[Any] = None) -> Request:
         """Enqueue one prompt.  ``sampling`` (when given) carries the
         decode config — its max_new_tokens/eos_id override the legacy
-        positional knobs — and every request gets its own sampler."""
+        positional knobs — and every request gets its own sampler.
+        ``ctx`` routes the request into its priority class's deque; a full
+        pending deque raises SchedulerBusy instead of growing unboundedly."""
+        if self.max_pending is not None and self.pending >= self.max_pending:
+            raise SchedulerBusy(
+                f"pending deque at its bound ({self.pending}"
+                f"/{self.max_pending})")
         if sampling is None:
             sampling = SamplingParams(max_new_tokens=max_new_tokens,
                                       eos_id=eos_id)
         req = Request(next(self._next_id), list(prompt),
                       sampling.max_new_tokens, sampling.eos_id,
-                      extras, sampling, sink)
+                      extras, sampling, sink, ctx)
         req.sampler = sampling.sampler()
         req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+        self._queue_for(req).append(req)
+        self.pending_high_water = max(self.pending_high_water, self.pending)
         return req
 
+    def _queue_for(self, req: Request) -> Deque[Request]:
+        return self.bulk_queue if req.priority == "bulk" else self.queue
+
     def cancel(self, req: Request) -> bool:
-        """Abandon a request: a queued one is finalized immediately, an
-        active one is evicted (slot freed) at the next scheduler tick.
-        Returns whether there was anything left to cancel."""
+        """Abandon a request: a queued or parked one is finalized
+        immediately, an active one is evicted (slot freed) at the next
+        scheduler tick.  Returns whether there was anything left to
+        cancel."""
         if req.done:
             return False
         req.cancelled = True
+        for q in (self.queue, self.bulk_queue, self.parked):
+            try:
+                q.remove(req)
+            except ValueError:
+                continue
+            self._finish(req, "cancelled", time.perf_counter())
+            self._notify(req, None)
+            return True
+        return True                        # active in a slot: reaped in step()
+
+    def pause(self, req: Request) -> None:
+        """Request preemption: the slot is parked at the next tick (the
+        stalled stream stops costing decode steps)."""
+        if not req.done:
+            req.paused = True
+
+    def resume(self, req: Request) -> bool:
+        """Un-park a preempted request: it re-enters the FRONT of its
+        priority deque (it already waited) and is re-admitted by
+        re-prefilling prompt + output-so-far (recompute preemption)."""
+        req.paused = False
         try:
-            self.queue.remove(req)
+            self.parked.remove(req)
         except ValueError:
-            return True                    # active in a slot: reaped in step()
-        self._finish(req, "cancelled", time.perf_counter())
-        self._notify(req, None)
+            return False      # never actually parked (flag raced) or done
+        if req.done:
+            return False
+        self._queue_for(req).appendleft(req)
         return True
 
     @property
@@ -173,17 +247,18 @@ class ContinuousBatchingScheduler:
 
     @property
     def pending(self) -> int:
-        return len(self.queue)
+        return len(self.queue) + len(self.bulk_queue)
 
     def idle(self) -> bool:
-        return self.active == 0 and not self.queue
+        return self.active == 0 and not self.queue and not self.bulk_queue
 
     # --- one scheduler tick ------------------------------------------------------
 
     def step(self) -> List[Request]:
-        """Reap cancellations + admit-from-queue + one decode step.
-        Returns every request that finished during this tick."""
-        finished = self._reap_cancelled()
+        """Reap cancellations/pauses/expiries + admit-from-queue + one
+        decode step.  Returns every request that finished during this
+        tick."""
+        finished = self._reap()
         self._admit(finished)
         if self.active == 0:
             return finished
@@ -226,48 +301,137 @@ class ContinuousBatchingScheduler:
 
     # --- admission -----------------------------------------------------------------
 
+    def _pop_next(self) -> Optional[Request]:
+        """Weighted round-robin between the priority deques: while BOTH
+        classes wait, interactive wins ``interactive_weight`` admissions
+        per bulk admission — it overtakes a bulk backlog without starving
+        it.  The credit only accrues against waiting bulk work; a long
+        interactive-only stretch must not bank credit that would hand the
+        next bulk arrival an immediate queue-jump."""
+        hi, lo = self.queue, self.bulk_queue
+        if not lo:
+            self._rr_credit = 0
+            return hi.popleft() if hi else None
+        if hi and self._rr_credit < self.interactive_weight:
+            self._rr_credit += 1
+            return hi.popleft()
+        self._rr_credit = 0
+        return lo.popleft()
+
     def _admit(self, finished: List[Request]) -> None:
         for b in range(self.num_slots):
-            if self.slots[b] is not None or not self.queue:
+            if self.slots[b] is not None:
                 continue
-            req = self.queue.popleft()
-            slot_state = self.engine.new_state(1)
-            # bucket the prompt length so admissions reuse jit specializations
-            S = self.engine.seq_buckets.bucket_for(len(req.prompt))
-            tokens = np.zeros((1, S), np.int32)
-            tokens[0, :len(req.prompt)] = req.prompt
-            batch = {
-                "tokens": jnp.asarray(tokens),
-                "lengths": jnp.asarray([len(req.prompt)], np.int32),
-            }
-            if req.extras:
-                batch.update({k: jnp.asarray(np.asarray(v)[None])
-                              for k, v in req.extras.items()})
-            logits, slot_state = self.engine.prefill(batch, slot_state)
-            now = time.perf_counter()
-            first = req.sampler.sample(np.asarray(logits)[0])     # (1, V)
-            self._record_token(req, first, now)
-            reason = self._finish_reason(req, first)
-            if reason is not None:       # stop/budget hit on the very first
-                self._finish(req, reason, now)
-                finished.append(req)
-            else:
-                self.state = self._insert(self.state, slot_state, b)
-                self.slots[b] = req
-                self._last_token[b] = first
-            self._notify(req, first)
+            while True:
+                req = self._pop_next()
+                if req is None:
+                    return
+                now = time.perf_counter()
+                if req.expired(now):
+                    # dropped BEFORE its prefill forward: the deadline is
+                    # honored at the hand-off, not after the work is spent
+                    self.deadline_total += 1
+                    self._finish(req, "deadline", now)
+                    finished.append(req)
+                    self._notify(req, None)
+                    continue
+                if self._prefill_into(req, b, finished):
+                    break
+
+    def _prefill_into(self, req: Request, b: int,
+                      finished: List[Request]) -> bool:
+        """Prefill ``req`` (prompt + any output decoded before a pause —
+        recompute preemption) into slot ``b``.  Returns False only when
+        the seed no longer fits a sequence bucket (resumed request grew
+        past max_len): the request fails and the slot stays free."""
+        seed = req.prompt + req.output
+        try:
+            S = self.engine.seq_buckets.bucket_for(len(seed))
+        except ValueError as err:
+            req.error = err
+            self._finish(req, "error", time.perf_counter())
+            finished.append(req)
+            self._notify(req, None)
+            return False
+        slot_state = self.engine.new_state(1)
+        tokens = np.zeros((1, S), np.int32)
+        tokens[0, :len(seed)] = seed
+        batch = {
+            "tokens": jnp.asarray(tokens),
+            "lengths": jnp.asarray([len(seed)], np.int32),
+        }
+        if req.extras:
+            batch.update({k: jnp.asarray(np.asarray(v)[None])
+                          for k, v in req.extras.items()})
+        logits, slot_state = self.engine.prefill(batch, slot_state)
+        now = time.perf_counter()
+        first = req.sampler.sample(np.asarray(logits)[0])     # (1, V)
+        self._record_token(req, first, now)
+        reason = self._finish_reason(req, first)
+        if reason is not None:       # stop/budget hit on the very first
+            self._finish(req, reason, now)
+            finished.append(req)
+        else:
+            self.state = self._insert(self.state, slot_state, b)
+            self.slots[b] = req
+            self._last_token[b] = first
+        self._notify(req, first)
+        return True
 
     # --- internals -------------------------------------------------------------
 
-    def _reap_cancelled(self) -> List[Request]:
+    def _reap(self) -> List[Request]:
+        """Evict cancelled, paused (preempted, NOT finished), and
+        deadline-expired slot occupants before the next decode step."""
         reaped = []
         now = time.perf_counter()
         for b, req in enumerate(self.slots):
-            if req is not None and req.cancelled:
+            if req is None:
+                continue
+            if req.cancelled:
                 self.slots[b] = None
                 self._finish(req, "cancelled", now)
                 self._notify(req, None)
                 reaped.append(req)
+            elif req.paused:
+                if not self.preempt_enabled:
+                    req.paused = False       # retiring: decode in place
+                else:
+                    self.slots[b] = None
+                    self.parked.append(req)
+                    req.pause_count += 1
+                    self.pauses_total += 1
+            elif req.expired(now):
+                self.slots[b] = None
+                self.deadline_total += 1
+                self._finish(req, "deadline", now)
+                self._notify(req, None)
+                reaped.append(req)
+        reaped.extend(self.reap_parked_expired(now))
+        return reaped
+
+    def reap_parked_expired(self, now: Optional[float] = None
+                            ) -> List[Request]:
+        """Deadline-drop parked (preempted) requests: a stalled stream
+        past its deadline must not pin its admission budget until the
+        socket times out.  Called from step() AND from the idle driver
+        loop — a parked request keeps the scheduler idle(), so step()
+        alone would never scan it."""
+        if not self.parked:
+            return []
+        now = now if now is not None else time.perf_counter()
+        reaped, still = [], []
+        for req in self.parked:
+            if req.done:
+                continue                   # cancelled elsewhere
+            if req.expired(now):
+                self.deadline_total += 1
+                self._finish(req, "deadline", now)
+                self._notify(req, None)
+                reaped.append(req)
+            else:
+                still.append(req)
+        self.parked = still
         return reaped
 
     def _finish_reason(self, req: Request, token: int) -> Optional[str]:
@@ -325,8 +489,12 @@ class SchedulerService:
     device lock.
     """
 
-    def __init__(self, engine: InferenceEngine, num_slots: int = 4):
-        self.scheduler = ContinuousBatchingScheduler(engine, num_slots)
+    def __init__(self, engine: InferenceEngine, num_slots: int = 4, *,
+                 max_pending: Optional[int] = None,
+                 interactive_weight: int = 4):
+        self.scheduler = ContinuousBatchingScheduler(
+            engine, num_slots, max_pending=max_pending,
+            interactive_weight=interactive_weight)
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._events: Dict[int, threading.Event] = {}
@@ -345,6 +513,7 @@ class SchedulerService:
                         max_new_tokens: int = 32,
                         eos_id: Optional[int] = None,
                         sampling: Optional[SamplingParams] = None,
+                        ctx: Optional[Any] = None,
                         timeout: Optional[float] = None) -> GenerationResult:
         """Enqueue every prompt as its own slot-admissible request and block
         until all of them finish; mirrors ``engine.generate``'s result.
@@ -361,10 +530,18 @@ class SchedulerService:
         with self._lock:
             if self._closed or self._retiring:
                 raise RuntimeError("scheduler service is closed")
-            steps0 = self.scheduler.steps
+            s = self.scheduler
+            if (s.max_pending is not None
+                    and s.pending + len(prompts) > s.max_pending):
+                # all-or-nothing: shedding half a multi-prompt request
+                # would leave the caller with an un-awaitable remainder
+                raise SchedulerBusy(
+                    f"pending deque cannot take {len(prompts)} more "
+                    f"({s.pending}/{s.max_pending})")
+            steps0 = s.steps
             pairs: List[Tuple[Request, threading.Event]] = []
             for i, p in enumerate(prompts):
-                req = self.scheduler.submit(p, sampling=sampling.for_row(i))
+                req = s.submit(p, sampling=sampling.for_row(i), ctx=ctx)
                 ev = threading.Event()
                 self._events[req.req_id] = ev
                 pairs.append((req, ev))
@@ -386,7 +563,8 @@ class SchedulerService:
 
     def submit_request(self, prompt: Sequence[int], *,
                        sampling: SamplingParams,
-                       sink: TokenSink) -> Request:
+                       sink: TokenSink,
+                       ctx: Optional[Any] = None) -> Request:
         """Admit one streaming request; its ``sink`` fires per token from
         the driver thread (it must never block).  The caller observes
         completion through the sink's ``done`` flag."""
@@ -394,7 +572,8 @@ class SchedulerService:
         with self._lock:
             if self._closed or self._retiring:
                 raise RuntimeError("scheduler service is closed")
-            req = self.scheduler.submit(prompt, sampling=sampling, sink=sink)
+            req = self.scheduler.submit(prompt, sampling=sampling,
+                                        sink=sink, ctx=ctx)
             self._work.notify()
             return req
 
@@ -410,15 +589,44 @@ class SchedulerService:
             self._work.notify()
             return live
 
+    def pause(self, req: Request) -> None:
+        """Preempt a request's slot at the next tick (stalled consumer)."""
+        with self._lock:
+            self.scheduler.pause(req)
+
+    def resume(self, req: Request) -> bool:
+        """Un-park a preempted request; it re-prefills prompt+output and
+        continues decoding.  Returns whether a parked request was found."""
+        with self._lock:
+            out = self.scheduler.resume(req)
+            self._work.notify()
+            return out
+
+    @property
+    def retiring(self) -> bool:
+        return self._retiring
+
     def begin_retire(self) -> None:
         """Refuse NEW submissions from now on (synchronous RuntimeError,
         which callers route to a replacement service).  Set BEFORE
         draining: every submit either landed first — and drain() waits
         for it — or raises and is retried elsewhere.  Closes the window
         where a request could slip into a scheduler that is about to be
-        torn down."""
+        torn down.
+
+        Backpressure is suspended for the drain: preemption is disabled
+        and any parked (stall-paused) request is resumed, so every
+        in-flight stream decodes to completion on the OLD engine (its
+        event queue force-accepts during retirement — growth is bounded
+        by the request's remaining token budget, and a swap must not
+        truncate streams)."""
         with self._lock:
             self._retiring = True
+            s = self.scheduler
+            s.preempt_enabled = False
+            for req in list(s.parked):
+                s.resume(req)
+            self._work.notify()
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every admitted request has finished (engine
@@ -426,7 +634,8 @@ class SchedulerService:
         deadline = None if timeout is None else time.monotonic() + timeout
         while True:
             with self._lock:
-                if self._closed or self.scheduler.idle():
+                if self._closed or (self.scheduler.idle()
+                                    and not self.scheduler.parked):
                     return True
             if deadline is not None and time.monotonic() >= deadline:
                 return False
@@ -440,9 +649,15 @@ class SchedulerService:
             itl = sorted(s.itl_window)
             return {
                 "steps": s.steps, "active_slots": s.active,
-                "pending": s.pending, "num_slots": s.num_slots,
+                "pending": s.pending,
+                "pending_high_water": s.pending_high_water,
+                "max_pending": s.max_pending,
+                "parked": len(s.parked),
+                "pauses": s.pauses_total,
+                "num_slots": s.num_slots,
                 "completed": s.completed_total,
                 "cancelled": s.cancelled_total,
+                "deadline_missed": s.deadline_total,
                 "request_latency_p50_ms": 1e3 * pctl(lat, 0.50),
                 "request_latency_p95_ms": 1e3 * pctl(lat, 0.95),
                 "ttft_p50_ms": 1e3 * pctl(ttft, 0.50),
@@ -462,7 +677,8 @@ class SchedulerService:
         waiters get the error, streaming sinks get a terminal event."""
         s = self.scheduler
         now = time.perf_counter()
-        for req in list(s.queue) + [r for r in s.slots if r is not None]:
+        for req in (list(s.queue) + list(s.bulk_queue) + list(s.parked)
+                    + [r for r in s.slots if r is not None]):
             if req.done:
                 continue
             req.error = err
@@ -473,12 +689,19 @@ class SchedulerService:
             ev.set()
         self._events.clear()
         s.queue.clear()
+        s.bulk_queue.clear()
+        s.parked.clear()
         s.slots = [None] * s.num_slots
 
     def _run(self) -> None:
         while True:
             with self._lock:
                 while not self._closed and self.scheduler.idle():
+                    # parked requests keep the scheduler idle; their
+                    # deadlines are still enforced on this slow tick
+                    for req in self.scheduler.reap_parked_expired():
+                        if req.req_id in self._events:
+                            self._events.pop(req.req_id).set()
                     self._work.wait(timeout=0.1)
                 if self._closed:
                     self._fail_in_flight(RuntimeError(

@@ -32,7 +32,9 @@ from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
 
 def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               max_batch: int = 8, full: bool = False,
-              seed: int = 0, num_slots: int = 4) -> FlexServeApp:
+              seed: int = 0, num_slots: int = 4,
+              max_queue: int = 64,
+              default_deadline_ms=None) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -55,13 +57,16 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
             engine = InferenceEngine(model, params, max_len=max_len,
                                      max_batch=max_batch)
     ensemble = Ensemble(members, max_batch=max_batch)
-    return FlexServeApp(registry, ensemble, engine, num_slots=num_slots)
+    return FlexServeApp(registry, ensemble, engine, num_slots=num_slots,
+                        max_queue=max_queue,
+                        default_deadline_ms=default_deadline_ms)
 
 
 def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     max_len: int = 256, max_batch: int = 8,
                     full: bool = False, seed: int = 0,
-                    num_slots: int = 4) -> FlexServeApp:
+                    num_slots: int = 4, max_queue: int = 64,
+                    default_deadline_ms=None) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
     generation engine is ALSO store-versioned: the first decode-capable
@@ -92,7 +97,9 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
             engine_member = reg_name
     manager = ModelManager(store, max_batch=max_batch)
     manager.bootstrap(member_names)
-    app = FlexServeApp(manager=manager, num_slots=num_slots)
+    app = FlexServeApp(manager=manager, num_slots=num_slots,
+                       max_queue=max_queue,
+                       default_deadline_ms=default_deadline_ms)
     if engine_member is not None and app.generation is not None:
         res = manager.load_engine(engine_member)
         print(f"[serve] generation engine {res['engine']} "
@@ -111,6 +118,13 @@ def main(argv=None) -> int:
     ap.add_argument("--max-batch", type=int, default=8)
     ap.add_argument("--num-slots", type=int, default=4,
                     help="continuous-batching decode slots per engine")
+    ap.add_argument("--max-queue", type=int, default=64,
+                    help="admission budget (rows/prompts) per plane; "
+                         "excess load is shed as 429 + Retry-After")
+    ap.add_argument("--default-deadline-ms", type=float, default=None,
+                    help="deadline applied to requests that don't carry "
+                         "one; past-deadline requests drop as 504 before "
+                         "costing a forward pass")
     ap.add_argument("--model-store", default=None, metavar="DIR",
                     help="versioned model store directory; enables the "
                          "lifecycle admin API and hot swaps")
@@ -119,7 +133,8 @@ def main(argv=None) -> int:
 
     kw = dict(num_classes=args.num_classes, max_len=args.max_len,
               max_batch=args.max_batch, full=args.full,
-              num_slots=args.num_slots)
+              num_slots=args.num_slots, max_queue=args.max_queue,
+              default_deadline_ms=args.default_deadline_ms)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:

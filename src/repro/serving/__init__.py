@@ -1,4 +1,6 @@
-from repro.serving.client import FlexServeClient
+from repro.serving.admission import (AdmissionController, DeadlineError,
+                                     RequestContext, ShedError, make_context)
+from repro.serving.client import FlexServeClient, HTTPStatusError
 from repro.serving.coalesce import BatchCoalescer, CoalesceError
 from repro.serving.generate import (GenerationError, GenerationService,
                                     GenerationStream)
@@ -8,7 +10,10 @@ from repro.serving.modelstore import ModelStore, StoreError
 from repro.serving.server import FlexServeApp, FlexServeServer
 
 __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
-           "BatchCoalescer", "CoalesceError", "ModelStore", "StoreError",
+           "HTTPStatusError", "BatchCoalescer", "CoalesceError",
+           "AdmissionController", "RequestContext", "ShedError",
+           "DeadlineError", "make_context",
+           "ModelStore", "StoreError",
            "ModelManager", "LifecycleError", "default_factory",
            "default_engine_factory", "GenerationError", "GenerationService",
            "GenerationStream"]

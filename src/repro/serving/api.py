@@ -12,6 +12,28 @@ POST /v1/detect    {"inputs": {...}, "positive_class": 3, "policy": "or",
 ``target`` (optional) names a version alias maintained by the lifecycle
 manager; requests without one hit the default ("stable") alias.
 
+Request plane (every inference route; all fields optional):
+
+    "priority":    "interactive" (default) | "bulk".  Bulk may only
+                   occupy a fraction of each queue's budget, so under
+                   overload bulk sheds first (cheapest-first rejection)
+                   and interactive admissions overtake a bulk backlog
+                   (weighted dequeue).
+    "deadline_ms": per-request latency budget from arrival.  A request
+                   past its deadline is dropped at the next hand-off
+                   (before it costs a forward pass) -> 504.
+    "client":      free-form client tag (observability).
+    "trace_id":    request id echoed in stream terminals (default
+                   server-generated).
+
+    The same facts travel as headers when a body field is awkward:
+    ``X-FlexServe-Priority``, ``X-FlexServe-Deadline-Ms``,
+    ``X-FlexServe-Client``, ``X-Request-Id`` (body wins).
+
+    Overload responses: 429 {"error": ...} with a ``Retry-After``
+    seconds header (may be fractional) when a queue's budget is full;
+    504 {"error": ...} on a missed deadline.
+
 POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16,
                     "temperature"?: 0.8, "top_k"?: 40, "top_p"?: 0.95,
                     "seed"?: 7, "stop"?: [50256], "eos_id"?: 2,
@@ -88,10 +110,14 @@ from repro.core.sampling import SamplingError, SamplingParams
 
 
 class ApiError(Exception):
-    def __init__(self, status: int, message: str):
+    """Route-layer failure; ``headers`` carries extras like Retry-After."""
+
+    def __init__(self, status: int, message: str,
+                 headers: Optional[Dict[str, str]] = None):
         super().__init__(message)
         self.status = status
         self.message = message
+        self.headers = headers or {}
 
 
 class StreamingResponse:

@@ -15,15 +15,43 @@ response as the server flushes each token.  The iterator must be consumed
 to the terminal ("done"/"error") event to keep the connection reusable;
 ``close()`` abandons a stream mid-flight (the server notices the
 disconnect and cancels the request).
+
+Resilience: the endpoint sheds overload as 429 (+ ``Retry-After``) and
+briefly 503s during hot swaps/startup.  Both are REJECTIONS — the server
+did no work — so the client retries them with capped exponential backoff
+plus jitter, honoring the server's ``Retry-After`` hint when present.
+Delivery metadata rides on the response object (``resp.attempts``).
+Probe routes (``health``/``healthz``) never retry: they exist to OBSERVE
+the 503.  A request that exhausts its retries raises ``HTTPStatusError``
+(a RuntimeError carrying ``.status`` and ``.retry_after_s``).
 """
 
 from __future__ import annotations
 
 import json
+import random
 import socket
 import threading
+import time
 import urllib.parse
 from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
+
+
+class HTTPStatusError(RuntimeError):
+    """Non-200 response after any retries; carries the status code."""
+
+    def __init__(self, status: int, message: str,
+                 retry_after_s: Optional[float] = None):
+        super().__init__(message)
+        self.status = status
+        self.retry_after_s = retry_after_s
+
+
+class Response(dict):
+    """A route's JSON payload plus client-side delivery metadata
+    (``attempts`` — how many sends it took, 1 when nothing was shed)."""
+
+    attempts: int = 1
 
 
 class _Connection:
@@ -41,8 +69,10 @@ class _Connection:
         except OSError:
             pass
 
-    def _send_and_head(self, request: bytes) -> Tuple[int, int, bool]:
-        """Send + parse the response head -> (status, length, chunked)."""
+    def _send_and_head(self, request: bytes
+                       ) -> Tuple[int, int, bool, Optional[float]]:
+        """Send + parse the response head ->
+        (status, length, chunked, retry_after_s)."""
         self.sock.sendall(request)
         status_line = self.rfile.readline(65537)
         if not status_line:
@@ -51,7 +81,7 @@ class _Connection:
         if len(parts) < 2 or not parts[0].startswith(b"HTTP/"):
             raise ConnectionError(f"malformed status line {status_line!r}")
         status = int(parts[1])
-        length, chunked = 0, False
+        length, chunked, retry_after = 0, False, None
         while True:
             h = self.rfile.readline(65537)
             if h in (b"\r\n", b"\n", b""):
@@ -62,27 +92,36 @@ class _Connection:
                 length = int(val)
             elif key == b"transfer-encoding":
                 chunked = b"chunked" in val.lower()
-        return status, length, chunked
+            elif key == b"retry-after":
+                try:
+                    retry_after = float(val)
+                except ValueError:
+                    pass                  # HTTP-date form: ignore the hint
+        return status, length, chunked, retry_after
 
-    def roundtrip(self, request: bytes) -> Tuple[int, bytes]:
-        status, length, chunked = self._send_and_head(request)
+    def roundtrip(self, request: bytes
+                  ) -> Tuple[int, bytes, Optional[float]]:
+        status, length, chunked, retry_after = self._send_and_head(request)
         if chunked:
-            return status, b"".join(self.read_chunks())
-        return status, self.rfile.read(length) if length else b""
+            return status, b"".join(self.read_chunks()), retry_after
+        return (status, self.rfile.read(length) if length else b"",
+                retry_after)
 
-    def stream(self, request: bytes) -> Tuple[int, Iterator[bytes]]:
-        """-> (status, iterator of newline-delimited body records).
+    def stream(self, request: bytes
+               ) -> Tuple[int, Iterator[bytes], Optional[float]]:
+        """-> (status, iterator of newline-delimited body records,
+        retry_after_s).
 
         A chunked response is parsed chunk by chunk as the server flushes
         (this is what makes client-side streaming real: each record is
         yielded the moment its chunk arrives); a Content-Length response
         degenerates to a single record.
         """
-        status, length, chunked = self._send_and_head(request)
+        status, length, chunked, retry_after = self._send_and_head(request)
         if not chunked:
             body = self.rfile.read(length) if length else b""
-            return status, iter([body] if body else [])
-        return status, self._iter_records()
+            return status, iter([body] if body else []), retry_after
+        return status, self._iter_records(), retry_after
 
     def read_chunks(self) -> Iterator[bytes]:
         """Decode chunked transfer encoding: size-line, payload, CRLF,
@@ -121,8 +160,14 @@ class _Connection:
 
 class FlexServeClient:
     def __init__(self, host: str = "127.0.0.1", port: int = 8000,
-                 timeout: float = 60.0):
+                 timeout: float = 60.0, *, retries: int = 3,
+                 backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+                 retry_statuses: Sequence[int] = (429, 503)):
         self.host, self.port, self.timeout = host, port, timeout
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.max_backoff_s = max_backoff_s
+        self.retry_statuses = tuple(retry_statuses)
         self._local = threading.local()
 
     def _conn(self) -> _Connection:
@@ -148,14 +193,13 @@ class FlexServeClient:
                 f"Content-Length: {len(body)}\r\n"
                 f"\r\n").encode("latin-1") + body
 
-    def _request(self, method: str, path: str,
-                 payload: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        request = self._raw_request(method, path, payload)
+    def _roundtrip_once(self, request: bytes
+                        ) -> Tuple[int, bytes, Optional[float]]:
+        """One send with the stale-keep-alive reconnect, no status retry."""
         for attempt in (0, 1):
             fresh = getattr(self._local, "conn", None) is None
             try:
-                status, raw = self._conn().roundtrip(request)
-                break
+                return self._conn().roundtrip(request)
             except socket.timeout:
                 # The server may still be processing; resending would
                 # execute a non-idempotent POST twice.  Never retry.
@@ -168,20 +212,51 @@ class FlexServeClient:
                 # connection failing is a real error.
                 if attempt or fresh:
                     raise
-        data = json.loads(raw or b"{}")
-        if status != 200:
-            raise RuntimeError(
-                f"{method} {path} -> {status}: "
-                f"{data.get('error', data)}")
-        return data
+        raise ConnectionError("unreachable")
+
+    def _backoff_delay(self, attempt: int,
+                       retry_after: Optional[float]) -> float:
+        """Server hint when given, else capped exponential; jittered so a
+        shed herd does not return in lockstep.  Never sleeps less than
+        the hint, never more than ``max_backoff_s`` (the jitter is capped
+        too — 'capped' must mean the number in the constructor)."""
+        base = (retry_after if retry_after is not None
+                else self.backoff_s * (2 ** (attempt - 1)))
+        base = min(base, self.max_backoff_s)
+        return min(base + random.uniform(0, base / 2), self.max_backoff_s)
+
+    def _request(self, method: str, path: str,
+                 payload: Optional[Dict[str, Any]] = None, *,
+                 retries: Optional[int] = None) -> Response:
+        request = self._raw_request(method, path, payload)
+        retries = self.retries if retries is None else retries
+        attempts = 0
+        while True:
+            status, raw, retry_after = self._roundtrip_once(request)
+            attempts += 1
+            if status in self.retry_statuses and attempts <= retries:
+                # 429/503 are rejections (no server-side work happened):
+                # resending cannot double-execute the POST
+                time.sleep(self._backoff_delay(attempts, retry_after))
+                continue
+            data = json.loads(raw or b"{}")
+            if status != 200:
+                raise HTTPStatusError(
+                    status,
+                    f"{method} {path} -> {status}: "
+                    f"{data.get('error', data)}", retry_after)
+            resp = Response(data)
+            resp.attempts = attempts
+            return resp
 
     def health(self) -> Dict[str, Any]:
-        return self._request("GET", "/health")
+        return self._request("GET", "/health", retries=0)
 
     def healthz(self) -> Dict[str, Any]:
-        """Readiness probe — raises RuntimeError("... 503 ...") until the
-        endpoint has >=1 loaded model and a live coalescer."""
-        return self._request("GET", "/healthz")
+        """Readiness probe — raises HTTPStatusError("... 503 ...") until
+        the endpoint has >=1 loaded model and a live coalescer.  Never
+        retried: this route exists to observe the 503."""
+        return self._request("GET", "/healthz", retries=0)
 
     def metrics(self) -> Dict[str, Any]:
         return self._request("GET", "/metrics")
@@ -246,33 +321,59 @@ class FlexServeClient:
         return self._request("POST", self._engine_path(name, "rollback"),
                              body)
 
+    @staticmethod
+    def _plane_fields(body: Dict[str, Any], priority, deadline_ms,
+                      client_tag, trace_id) -> Dict[str, Any]:
+        for key, val in (("priority", priority),
+                         ("deadline_ms", deadline_ms),
+                         ("client", client_tag), ("trace_id", trace_id)):
+            if val is not None:
+                body[key] = val
+        return body
+
     def infer(self, inputs: Dict[str, Any], policy: str = "soft_vote",
-              target: Optional[str] = None) -> Dict[str, Any]:
+              target: Optional[str] = None, *,
+              priority: Optional[str] = None,
+              deadline_ms: Optional[float] = None,
+              client_tag: Optional[str] = None,
+              trace_id: Optional[str] = None) -> Dict[str, Any]:
         body: Dict[str, Any] = {"inputs": inputs, "policy": policy}
         if target is not None:
             body["target"] = target
+        self._plane_fields(body, priority, deadline_ms, client_tag,
+                           trace_id)
         return self._request("POST", "/v1/infer", body)
 
     def detect(self, inputs: Dict[str, Any], positive_class: int,
                policy: str = "or", threshold: float = 0.5,
-               target: Optional[str] = None) -> Dict[str, Any]:
+               target: Optional[str] = None, *,
+               priority: Optional[str] = None,
+               deadline_ms: Optional[float] = None,
+               client_tag: Optional[str] = None,
+               trace_id: Optional[str] = None) -> Dict[str, Any]:
         body: Dict[str, Any] = {"inputs": inputs,
                                 "positive_class": positive_class,
                                 "policy": policy, "threshold": threshold}
         if target is not None:
             body["target"] = target
+        self._plane_fields(body, priority, deadline_ms, client_tag,
+                           trace_id)
         return self._request("POST", "/v1/detect", body)
 
     @staticmethod
     def _generate_body(prompts, max_new_tokens, eos_id, *,
                        temperature=None, top_k=None, top_p=None, seed=None,
-                       stop=None, target=None) -> Dict[str, Any]:
+                       stop=None, target=None, priority=None,
+                       deadline_ms=None, client_tag=None,
+                       trace_id=None) -> Dict[str, Any]:
         body: Dict[str, Any] = {"prompts": [list(p) for p in prompts],
                                 "max_new_tokens": max_new_tokens,
                                 "eos_id": eos_id}
         for key, val in (("temperature", temperature), ("top_k", top_k),
                          ("top_p", top_p), ("seed", seed), ("stop", stop),
-                         ("target", target)):
+                         ("target", target), ("priority", priority),
+                         ("deadline_ms", deadline_ms),
+                         ("client", client_tag), ("trace_id", trace_id)):
             if val is not None:
                 body[key] = val
         return body
@@ -301,21 +402,33 @@ class FlexServeClient:
         request = self._raw_request("POST", "/v1/generate", body)
         # eager send: the request is in flight (and errors surface) before
         # the caller pulls the first event; a stale reused keep-alive
-        # connection is re-opened once, exactly like _request
-        for attempt in (0, 1):
-            fresh = getattr(self._local, "conn", None) is None
-            try:
-                status, records = self._conn().stream(request)
-                break
-            except socket.timeout:
-                self.close()
-                raise
-            except (ConnectionError, OSError):
-                self.close()
-                if attempt or fresh:
+        # connection is re-opened once, exactly like _request.  A 429/503
+        # rejection (head known before any event) is retried with the
+        # same backoff policy as unary requests.
+        attempts = 0
+        while True:
+            for attempt in (0, 1):
+                fresh = getattr(self._local, "conn", None) is None
+                try:
+                    status, records, retry_after = \
+                        self._conn().stream(request)
+                    break
+                except socket.timeout:
+                    self.close()
                     raise
-        if status != 200:
-            data = json.loads(b"".join(records) or b"{}")
-            raise RuntimeError(f"POST /v1/generate -> {status}: "
-                               f"{data.get('error', data)}")
-        return (json.loads(record) for record in records)
+                except (ConnectionError, OSError):
+                    self.close()
+                    if attempt or fresh:
+                        raise
+            attempts += 1
+            if status in self.retry_statuses and attempts <= self.retries:
+                for _ in records:          # drain the error body: the
+                    pass                   # connection stays reusable
+                time.sleep(self._backoff_delay(attempts, retry_after))
+                continue
+            if status != 200:
+                data = json.loads(b"".join(records) or b"{}")
+                raise HTTPStatusError(
+                    status, f"POST /v1/generate -> {status}: "
+                            f"{data.get('error', data)}", retry_after)
+            return (json.loads(record) for record in records)

@@ -34,6 +34,7 @@ import numpy as np
 
 from repro.core.batching import BucketSpec
 from repro.core.scheduler import pctl
+from repro.serving.admission import DeadlineError
 
 
 @dataclass
@@ -44,10 +45,14 @@ class _Pending:
     n: int
     enqueued_at: float
     tag: Optional[Hashable] = None
+    ctx: Optional[Any] = None           # RequestContext (deadline/priority)
     event: threading.Event = field(default_factory=threading.Event)
     result: Optional[Dict[str, np.ndarray]] = None
     error: Optional[BaseException] = None
     wait_s: float = 0.0
+
+    def expired(self, now: float) -> bool:
+        return self.ctx is not None and self.ctx.expired(now)
 
     def signature(self):
         """Requests coalesce only when every array agrees on key, trailing
@@ -116,10 +121,10 @@ class BatchCoalescer:
                  boundary_grace_ms: float = 1.5):
         self._forward = forward_fn
         try:
-            self._fwd_takes_tag = len(
-                inspect.signature(forward_fn).parameters) >= 2
+            self._fwd_nparams = len(
+                inspect.signature(forward_fn).parameters)
         except (TypeError, ValueError):   # builtins, odd callables
-            self._fwd_takes_tag = False
+            self._fwd_nparams = 1
         self.buckets = buckets
         self.adaptive = max_wait_ms is None
         self.max_wait_s = (self.ADAPTIVE_CAP_S if self.adaptive
@@ -139,6 +144,11 @@ class BatchCoalescer:
         self._waits: List[float] = []
         self._last_arrival: Optional[float] = None
         self._ewma_gap_s: Optional[float] = None
+        self._pending_rows = 0          # rows enqueued but not yet forwarded
+        self._pending_high = 0
+        self._open_groups = 0
+        self._deadline_dropped = 0
+        self._ewma_fwd_s: Optional[float] = None
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="flexserve-coalescer")
         self._thread.start()
@@ -146,26 +156,37 @@ class BatchCoalescer:
     # --- client side (HTTP handler threads) ----------------------------------
 
     def submit(self, batch: Dict[str, np.ndarray],
-               tag: Optional[Hashable] = None):
+               tag: Optional[Hashable] = None,
+               ctx: Optional[Any] = None):
         """Block until this request's rows have been through a forward;
-        returns the output pytree sliced back to this request's rows."""
+        returns the output pytree sliced back to this request's rows.
+        ``ctx`` (a RequestContext) tightens its group's flush deadline and
+        is honored at dispatch: an entry past its deadline is dropped with
+        DeadlineError BEFORE it costs forward-pass rows."""
         n = next(iter(batch.values())).shape[0]
         if n > self.buckets.sizes[-1]:
             raise ValueError(f"batch of {n} exceeds max bucket "
                              f"{self.buckets.sizes[-1]}")
         now = time.perf_counter()
         entry = _Pending({k: np.asarray(v) for k, v in batch.items()},
-                         n, now, tag)
-        with self._stats_lock:
-            if self._last_arrival is not None:
-                gap = now - self._last_arrival
-                self._ewma_gap_s = (gap if self._ewma_gap_s is None else
-                                    (1 - self._EWMA_ALPHA) * self._ewma_gap_s
-                                    + self._EWMA_ALPHA * gap)
-            self._last_arrival = now
+                         n, now, tag, ctx)
         with self._submit_lock:
             if self._closed:
                 raise CoalesceError("coalescer is closed")
+            # gauges updated only once the entry is certain to enqueue —
+            # a submit racing close() must not inflate queue_depth_rows
+            # forever (nothing would ever decrement it)
+            with self._stats_lock:
+                if self._last_arrival is not None:
+                    gap = now - self._last_arrival
+                    self._ewma_gap_s = (
+                        gap if self._ewma_gap_s is None else
+                        (1 - self._EWMA_ALPHA) * self._ewma_gap_s
+                        + self._EWMA_ALPHA * gap)
+                self._last_arrival = now
+                self._pending_rows += n
+                self._pending_high = max(self._pending_high,
+                                         self._pending_rows)
             self._queue.put(entry)
         entry.event.wait()
         if entry.error is not None:
@@ -216,6 +237,10 @@ class BatchCoalescer:
                 "max_rows_per_batch": self._max_rows_seen,
                 "queue_wait_p50_ms": 1e3 * pctl(waits, 0.50),
                 "queue_wait_p95_ms": 1e3 * pctl(waits, 0.95),
+                "queue_depth_rows": self._pending_rows,
+                "queue_depth_high_water": self._pending_high,
+                "open_groups": self._open_groups,
+                "deadline_dropped": self._deadline_dropped,
                 "adaptive_linger": self.adaptive,
                 "effective_linger_ms": 1e3 * effective_linger,
                 "ewma_interarrival_ms": (1e3 * gap if gap is not None
@@ -252,6 +277,8 @@ class BatchCoalescer:
                         for g in groups.values()), 0.0)
             else:
                 timeout = 0.1                  # idle poll for the sentinel
+            with self._stats_lock:
+                self._open_groups = len(groups)
             try:
                 entry = self._queue.get(timeout=timeout)
             except queue.Empty:
@@ -273,31 +300,79 @@ class BatchCoalescer:
             else:
                 g.entries.append(entry)
                 g.rows += entry.n
+            if entry.ctx is not None and entry.ctx.deadline_s is not None:
+                # a deadline-carrying entry must not rot in a half-filled
+                # group past the moment it could still be served: flush one
+                # forward's worth of time BEFORE the deadline so dispatch
+                # happens while the entry is still live
+                g.deadline = min(g.deadline,
+                                 max(entry.ctx.deadline_s
+                                     - self._fwd_margin_s(), now))
             if g.rows >= self.max_rows:
                 self._execute(groups.pop(sig).entries)
         self._drain_on_close()
 
+    def _fwd_margin_s(self) -> float:
+        """How far ahead of a request deadline a group should flush — one
+        observed forward's worth (EWMA), clamped to [1, 50] ms."""
+        with self._stats_lock:
+            e = self._ewma_fwd_s
+        return min(max(e if e is not None else 0.002, 1e-3), 50e-3)
+
     def _execute(self, group: Sequence[_Pending]) -> None:
         now = time.perf_counter()
+        # deadline hand-off: entries already past their deadline are
+        # dropped HERE — before their rows cost any forward-pass work —
+        # and their handler threads get DeadlineError (504 upstream)
+        expired = [e for e in group if e.expired(now)]
+        group = [e for e in group if not e.expired(now)]
+        # release the expired entries' handler threads NOW — their 504
+        # must not also wait out the surviving group's forward pass
+        expired_rows = sum(e.n for e in expired)
+        for e in expired:
+            e.error = DeadlineError(
+                f"deadline exceeded in coalesce queue after "
+                f"{1e3 * (now - e.enqueued_at):.1f}ms")
+        if expired:
+            with self._stats_lock:
+                self._deadline_dropped += len(expired)
+                self._pending_rows = max(0,
+                                         self._pending_rows - expired_rows)
+            for e in expired:
+                e.event.set()
         rows = sum(e.n for e in group)
         try:
-            merged = {k: np.concatenate([e.batch[k] for e in group])
-                      for k in group[0].batch}
-            out = (self._forward(merged, group[0].tag)
-                   if self._fwd_takes_tag else self._forward(merged))
-            out_np = _tree_to_numpy(out)
-            off = 0
-            for e in group:
-                e.result = _tree_slice(out_np, off, off + e.n)
-                off += e.n
+            if group:
+                merged = {k: np.concatenate([e.batch[k] for e in group])
+                          for k in group[0].batch}
+                t_fwd = time.perf_counter()
+                if self._fwd_nparams >= 3:
+                    out = self._forward(merged, group[0].tag,
+                                        [e.ctx for e in group])
+                elif self._fwd_nparams == 2:
+                    out = self._forward(merged, group[0].tag)
+                else:
+                    out = self._forward(merged)
+                out_np = _tree_to_numpy(out)
+                fwd_s = time.perf_counter() - t_fwd
+                with self._stats_lock:
+                    self._ewma_fwd_s = (
+                        fwd_s if self._ewma_fwd_s is None else
+                        0.8 * self._ewma_fwd_s + 0.2 * fwd_s)
+                off = 0
+                for e in group:
+                    e.result = _tree_slice(out_np, off, off + e.n)
+                    off += e.n
         except BaseException as err:       # noqa: BLE001 — scattered to callers
             for e in group:
                 e.error = err
         finally:
             with self._stats_lock:
-                self._batches += 1
-                self._rows += rows
-                self._max_rows_seen = max(self._max_rows_seen, rows)
+                if group:
+                    self._batches += 1
+                    self._rows += rows
+                    self._max_rows_seen = max(self._max_rows_seen, rows)
+                self._pending_rows = max(0, self._pending_rows - rows)
                 for e in group:
                     e.wait_s = now - e.enqueued_at
                     self._waits.append(e.wait_s)
@@ -316,6 +391,8 @@ class BatchCoalescer:
             if entry is None:
                 continue
             entry.error = err
+            with self._stats_lock:
+                self._pending_rows = max(0, self._pending_rows - entry.n)
             entry.event.set()
 
 

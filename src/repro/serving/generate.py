@@ -28,21 +28,31 @@ after the HTTP handler has parsed it:
     tick; cancellations, TTFT, and inter-token latency are all on
     /metrics.
 
+  * **Backpressure** — each stream's event queue is BOUNDED.  When a
+    stalled consumer lets it fill, the stream's decode slot is PAUSED
+    (preempted — the slot goes to other traffic) instead of buffering
+    tokens unboundedly; when the consumer drains the queue, the missed
+    tokens are replayed from the request's output record and the request
+    resumes via recompute (re-prefill of prompt + output so far).  A
+    consumer that never returns is handled by the existing
+    disconnect-cancellation path, which frees the parked request too.
+
 The token sinks run on each scheduler's driver thread and only ever
-enqueue into per-stream queues — a slow or dead client never stalls
-decoding for the other slots.
+enqueue (never block) into per-stream queues — a slow or dead client
+never stalls decoding for the other slots.
 """
 
 from __future__ import annotations
 
-import queue
+import collections
 import threading
 import time
-from typing import Any, Dict, Iterator, List, Optional, Sequence
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 from repro.core.engine import GenerationResult, InferenceEngine
 from repro.core.sampling import SamplingParams
-from repro.core.scheduler import Request, SchedulerService
+from repro.core.scheduler import Request, SchedulerBusy, SchedulerService
+from repro.serving.admission import RequestContext, ShedError
 
 
 class GenerationError(RuntimeError):
@@ -65,6 +75,43 @@ class _EngineEntry:
         return f"{self.name}@v{self.version}"
 
 
+class _BoundedEvents:
+    """Per-stream event transport with a hard bound.  Token puts FAIL when
+    full (the sink then pauses the slot — backpressure, not buffering);
+    terminal puts always land so a stream can always be closed out."""
+
+    class Empty(Exception):
+        pass
+
+    def __init__(self, bound: int):
+        self._dq: collections.deque = collections.deque()
+        self._bound = max(1, bound)
+        self._cond = threading.Condition()
+        self.high_water = 0
+
+    def put(self, ev: Optional[Dict[str, Any]], *,
+            force: bool = False) -> bool:
+        with self._cond:
+            if not force and len(self._dq) >= self._bound:
+                return False
+            self._dq.append(ev)
+            self.high_water = max(self.high_water, len(self._dq))
+            self._cond.notify()
+            return True
+
+    def get(self, timeout: float) -> Optional[Dict[str, Any]]:
+        with self._cond:
+            if not self._dq:
+                self._cond.wait(timeout)
+            if not self._dq:
+                raise self.Empty
+            return self._dq.popleft()
+
+    def depth(self) -> int:
+        with self._cond:
+            return len(self._dq)
+
+
 class GenerationStream:
     """Handle on one in-flight streaming request.
 
@@ -75,26 +122,60 @@ class GenerationStream:
          "total_ms": ..., "engine": "name@vN"}              (terminal)
     or a terminal {"event": "error", "error": ...} if the engine failed.
     ``cancel()`` abandons the request and frees its decode slot.
+
+    The event queue holds at most ``max_buffered`` token events.  A
+    consumer that stalls past that pauses the request's decode slot (the
+    sink never blocks and never buffers more); when the consumer comes
+    back, ``events()`` replays anything it missed straight from the
+    request's output record and resumes the request.
     """
 
     def __init__(self, service: "GenerationService", entry: _EngineEntry,
-                 sampling: SamplingParams):
+                 sampling: SamplingParams, *,
+                 ctx: Optional[RequestContext] = None,
+                 max_buffered: int = 32,
+                 on_finish: Optional[Callable[[], Any]] = None):
         self._service = service
         self._entry = entry
         self._sampling = sampling
-        self._queue: "queue.Queue[Optional[Dict[str, Any]]]" = queue.Queue()
+        self.ctx = ctx
+        self._queue = _BoundedEvents(max_buffered)
+        self._on_finish = on_finish
+        self._finish_lock = threading.Lock()
         self.request: Optional[Request] = None        # set right after submit
 
     # --- sink: runs on the scheduler driver thread; must never block ---------
 
     def _sink(self, req: Request, token: Optional[int], done: bool) -> None:
         if token is not None:
-            self._queue.put({"event": "token", "token": token,
-                             "index": len(req.output) - 1})
+            ev = {"event": "token", "token": token,
+                  "index": len(req.output) - 1}
+            ok = self._queue.put(ev)
+            if not ok and self._entry.service.retiring:
+                # engine swap draining: backpressure yields to the
+                # zero-truncation guarantee — growth is bounded by the
+                # request's remaining token budget
+                self._queue.put(ev, force=True)
+            elif not ok and not done:
+                # consumer stalled: preempt the slot rather than buffer.
+                # The dropped token stays in req.output and is replayed by
+                # events() before the resume.  Setting the flag directly is
+                # safe — the sink runs ON the driver thread.
+                req.paused = True
+                self._service._stream_paused()
         if done:
-            self._queue.put(self._terminal_event(req))
-            self._queue.put(None)                     # end-of-stream marker
+            self._queue.put(self._terminal_event(req), force=True)
+            self._queue.put(None, force=True)         # end-of-stream marker
+            self._finish_once()
             self._service._finished(req)
+
+    def _finish_once(self) -> None:
+        # a disconnect (handler thread) can race the terminal sink event
+        # (driver thread); the swap under a lock guarantees one caller
+        with self._finish_lock:
+            cb, self._on_finish = self._on_finish, None
+        if cb is not None:
+            cb()
 
     def _terminal_event(self, req: Request) -> Dict[str, Any]:
         if req.finish_reason == "error":
@@ -110,28 +191,85 @@ class GenerationStream:
               "sampling": self._sampling.describe()}
         if req.ttft_s is not None:
             ev["ttft_ms"] = 1e3 * req.ttft_s
+        if req.pause_count:
+            ev["pauses"] = req.pause_count
+        if self.ctx is not None and self.ctx.trace_id:
+            ev["trace_id"] = self.ctx.trace_id
         return ev
 
     # --- consumer side --------------------------------------------------------
 
+    _POLL_S = 0.02
+
     def events(self, timeout: Optional[float] = 120.0
                ) -> Iterator[Dict[str, Any]]:
         """Yield events until the terminal one (inclusive).  ``timeout``
-        bounds the wait for EACH event, not the whole stream."""
+        bounds the wait for EACH event, not the whole stream.  Tokens the
+        bounded queue dropped during a pause are replayed (in order, by
+        index) from the request's output record before the request is
+        resumed, so the consumer sees every token exactly once."""
+        next_idx = 0
+        waited = 0.0
         while True:
+            poll = (self._POLL_S if timeout is None
+                    else min(self._POLL_S, max(timeout - waited, 0.001)))
+            t0 = time.perf_counter()
             try:
-                ev = self._queue.get(timeout=timeout)
-            except queue.Empty:
-                self.cancel()
-                yield {"event": "error",
-                       "error": f"no token within {timeout}s"}
-                return
+                ev = self._queue.get(timeout=poll)
+            except _BoundedEvents.Empty:
+                req = self.request
+                if (req is not None and req.paused and not req.done):
+                    # stalled consumer came back: hand it what the queue
+                    # dropped (req.output only ever grows; the slice is
+                    # safe to read), then put the request back to work
+                    for j in range(next_idx, len(req.output)):
+                        yield {"event": "token", "token": req.output[j],
+                               "index": j, "replayed": True}
+                        next_idx = j + 1
+                    self._entry.service.resume(req)
+                    waited = 0.0
+                    continue
+                waited += time.perf_counter() - t0
+                if timeout is not None and waited >= timeout:
+                    self.cancel()
+                    yield {"event": "error",
+                           "error": f"no token within {timeout}s"}
+                    return
+                continue
+            waited = 0.0
             if ev is None:
                 return
-            yield ev
+            if ev.get("event") == "token":
+                idx = ev["index"]
+                if idx < next_idx:
+                    continue              # duplicate of a replayed token
+                while next_idx < idx:     # gap: dropped while queue full
+                    yield {"event": "token",
+                           "token": self.request.output[next_idx],
+                           "index": next_idx, "replayed": True}
+                    next_idx += 1
+                next_idx = idx + 1
+                yield ev
+            else:
+                if ev.get("event") == "done":
+                    toks = ev.get("tokens") or []
+                    while next_idx < len(toks):   # gap before the terminal
+                        yield {"event": "token", "token": toks[next_idx],
+                               "index": next_idx, "replayed": True}
+                        next_idx += 1
+                yield ev
+
+    def queue_depth(self) -> int:
+        return self._queue.depth()
+
+    @property
+    def queue_high_water(self) -> int:
+        return self._queue.high_water
 
     def cancel(self) -> bool:
-        """Abandon the stream (client went away); frees the decode slot."""
+        """Abandon the stream (client went away); frees the decode slot —
+        including a slot-less parked (paused) request."""
+        self._finish_once()
         if self.request is None:
             return False
         return self._entry.service.cancel(self.request)
@@ -147,15 +285,23 @@ class GenerationService:
 
     def __init__(self, engine: Optional[InferenceEngine] = None, *,
                  num_slots: int = 4, default_alias: str = "stable",
-                 drain_timeout_s: float = 30.0):
+                 drain_timeout_s: float = 30.0,
+                 max_pending: Optional[int] = None,
+                 max_stream_buffer: int = 32):
         self.num_slots = num_slots
         self.default_alias = default_alias
         self.drain_timeout_s = drain_timeout_s
+        # backstop bound on each engine's pending deque; the app-level
+        # AdmissionController sheds earlier (and with better hints), this
+        # keeps a directly-driven service bounded too
+        self.max_pending = (max_pending if max_pending is not None
+                            else max(32, 8 * num_slots))
+        self.max_stream_buffer = max_stream_buffer
         self._lock = threading.Lock()
         self._aliases: Dict[str, _EngineEntry] = {}
         self._stats_lock = threading.Lock()
         self._streams = {"started": 0, "completed": 0, "cancelled": 0,
-                         "failed": 0}
+                         "failed": 0, "deadline": 0, "paused": 0}
         self._swaps = 0
         self._closed = False
         if engine is not None:
@@ -174,7 +320,8 @@ class GenerationService:
         old engine until they finish — the old scheduler is drained, then
         closed, so no in-flight stream is truncated by a swap."""
         service = SchedulerService(engine,
-                                   num_slots=num_slots or self.num_slots)
+                                   num_slots=num_slots or self.num_slots,
+                                   max_pending=self.max_pending)
         entry = _EngineEntry(name, version, service)
         with self._lock:
             if self._closed:
@@ -227,16 +374,21 @@ class GenerationService:
     def generate(self, prompts: Sequence[Sequence[int]],
                  sampling: Optional[SamplingParams] = None, *,
                  alias: Optional[str] = None,
+                 ctx: Optional[RequestContext] = None,
                  timeout: Optional[float] = None) -> GenerationResult:
-        """Blocking all-at-once generation (the legacy response shape)."""
+        """Blocking all-at-once generation (the legacy response shape).
+        ``ctx`` carries priority + deadline into the scheduler's pending
+        deques; a full deque surfaces as ShedError (429 upstream)."""
         sampling = sampling or SamplingParams()
         while True:
             entry = self.entry_for(alias)
             try:
                 return entry.service.submit_and_wait(
-                    prompts, sampling=sampling, timeout=timeout)
+                    prompts, sampling=sampling, ctx=ctx, timeout=timeout)
             except GenerationError:
                 raise
+            except SchedulerBusy as e:
+                raise ShedError(str(e)) from None
             except RuntimeError:
                 # raced an engine swap into the retiring old service: the
                 # alias already points at the replacement — retry there.
@@ -248,19 +400,32 @@ class GenerationService:
 
     def stream(self, prompt: Sequence[int],
                sampling: Optional[SamplingParams] = None, *,
-               alias: Optional[str] = None) -> GenerationStream:
+               alias: Optional[str] = None,
+               ctx: Optional[RequestContext] = None,
+               max_buffered: Optional[int] = None,
+               on_finish: Optional[Callable[[], Any]] = None
+               ) -> GenerationStream:
         """Admit one prompt and return the stream handle immediately;
-        tokens arrive on the handle as the scheduler decodes them."""
+        tokens arrive on the handle as the scheduler decodes them.
+        ``max_buffered`` bounds the stream's event queue (backpressure —
+        see GenerationStream); ``on_finish`` runs exactly once when the
+        stream reaches a terminal event or is cancelled."""
         sampling = sampling or SamplingParams()
         while True:
             entry = self.entry_for(alias)
-            stream = GenerationStream(self, entry, sampling)
+            stream = GenerationStream(
+                self, entry, sampling, ctx=ctx,
+                max_buffered=max_buffered or self.max_stream_buffer,
+                on_finish=on_finish)
             try:
                 stream.request = entry.service.submit_request(
-                    prompt, sampling=sampling, sink=stream._sink)
+                    prompt, sampling=sampling, sink=stream._sink, ctx=ctx)
                 break
             except GenerationError:
                 raise
+            except SchedulerBusy as e:
+                stream._finish_once()
+                raise ShedError(str(e)) from None
             except RuntimeError:
                 # raced an engine swap into the retiring old service: the
                 # alias already points at the replacement — admit there.
@@ -274,9 +439,15 @@ class GenerationService:
 
     def _finished(self, req: Request) -> None:
         key = ("cancelled" if req.finish_reason == "cancelled" else
-               "failed" if req.finish_reason == "error" else "completed")
+               "failed" if req.finish_reason == "error" else
+               "deadline" if req.finish_reason == "deadline" else
+               "completed")
         with self._stats_lock:
             self._streams[key] += 1
+
+    def _stream_paused(self) -> None:
+        with self._stats_lock:
+            self._streams["paused"] += 1
 
     # --- observability / teardown ---------------------------------------------
 
@@ -292,8 +463,11 @@ class GenerationService:
         # /metrics "generate" section shape stable for dashboards — zeroed
         # before the first engine load so scrapers never hit missing keys
         out.update({"steps": 0, "active_slots": 0, "pending": 0,
+                    "pending_high_water": 0,
+                    "max_pending": self.max_pending,
+                    "parked": 0, "pauses": 0,
                     "num_slots": self.num_slots, "completed": 0,
-                    "cancelled": 0,
+                    "cancelled": 0, "deadline_missed": 0,
                     "request_latency_p50_ms": 0.0,
                     "request_latency_p95_ms": 0.0,
                     "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,

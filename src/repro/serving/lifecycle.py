@@ -146,8 +146,14 @@ class ModelManager:
                 f"no alias {alias!r}; available: {self.aliases()}") from None
 
     def forward(self, batch: Dict[str, np.ndarray],
-                alias: Optional[Hashable] = None):
-        """Route one (possibly coalesced) batch to an alias's ensemble."""
+                alias: Optional[Hashable] = None,
+                ctxs: Optional[List[Any]] = None):
+        """Route one (possibly coalesced) batch to an alias's ensemble.
+
+        ``ctxs`` — the RequestContexts the coalescer merged into this
+        batch — feeds per-version traffic accounting with a priority
+        split, so a canary's interactive-vs-bulk exposure is visible (the
+        signal canary auto-promotion will gate on)."""
         alias = alias or self.default_alias
         ens = self.ensemble_for(alias)
         if self._warm_example is None:
@@ -157,12 +163,19 @@ class ModelManager:
                                   for k, v in batch.items()}
         active = self._active.get(alias, {})
         rows = next(iter(batch.values())).shape[0]
+        interactive = sum(1 for c in (ctxs or [])
+                          if getattr(c, "priority", None) != "bulk")
+        bulk = len(ctxs or []) - interactive
         with self._stats_lock:
             for name, version in active.items():
                 t = self._version_traffic.setdefault(
-                    f"{name}@v{version}", {"batches": 0, "rows": 0})
+                    f"{name}@v{version}",
+                    {"batches": 0, "rows": 0,
+                     "interactive_requests": 0, "bulk_requests": 0})
                 t["batches"] += 1
                 t["rows"] += rows
+                t["interactive_requests"] += interactive
+                t["bulk_requests"] += bulk
         return ens.forward(batch)
 
     # --- admin plane ----------------------------------------------------------

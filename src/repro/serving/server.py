@@ -38,6 +38,8 @@ from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
 from repro.core.registry import ModelRegistry
 from repro.serving import api
+from repro.serving.admission import (AdmissionController, DeadlineError,
+                                     RequestContext, ShedError)
 from repro.serving.coalesce import BatchCoalescer
 from repro.serving.generate import GenerationError, GenerationService
 from repro.serving.lifecycle import LifecycleError, ModelManager
@@ -63,7 +65,11 @@ class FlexServeApp:
                  coalesce: bool = True,
                  max_wait_ms: Optional[float] = None,
                  max_coalesce_rows: Optional[int] = None,
-                 num_slots: int = 4):
+                 num_slots: int = 4,
+                 max_queue: int = 64,
+                 bulk_fraction: float = 0.5,
+                 default_deadline_ms: Optional[float] = None,
+                 max_stream_buffer: int = 32):
         if manager is not None and ensemble is not None:
             raise ValueError("pass either a static ensemble or a manager")
         self.manager = manager
@@ -77,6 +83,9 @@ class FlexServeApp:
         self._closing = False
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
+        self.admission = AdmissionController(
+            max_queue=max_queue, bulk_fraction=bulk_fraction,
+            default_deadline_ms=default_deadline_ms)
         self.coalescer: Optional[BatchCoalescer] = None
         self.generation: Optional[GenerationService] = None
         if coalesce and (ensemble is not None or manager is not None):
@@ -86,7 +95,10 @@ class FlexServeApp:
                 self._coalesced_forward, buckets,
                 max_wait_ms=max_wait_ms, max_rows=max_coalesce_rows)
         if coalesce and (engine is not None or manager is not None):
-            self.generation = GenerationService(engine, num_slots=num_slots)
+            self.generation = GenerationService(
+                engine, num_slots=num_slots,
+                max_pending=max(num_slots, max_queue),
+                max_stream_buffer=max_stream_buffer)
             if manager is not None:
                 manager.attach_generation(self.generation)
 
@@ -98,10 +110,12 @@ class FlexServeApp:
                     else None)
         return self._ensemble
 
-    def _coalesced_forward(self, batch, alias):
-        """Coalescer's forward: route one merged group to its target."""
+    def _coalesced_forward(self, batch, alias, ctxs=None):
+        """Coalescer's forward: route one merged group to its target,
+        handing the group's RequestContexts to the lifecycle manager's
+        per-version traffic accounting."""
         if self.manager is not None:
-            return self.manager.forward(batch, alias)
+            return self.manager.forward(batch, alias, ctxs)
         return self._ensemble.forward(batch)
 
     def close(self) -> None:
@@ -133,13 +147,13 @@ class FlexServeApp:
 
     # --- route handlers ------------------------------------------------------
 
-    def handle(self, method: str, path: str,
-               body: bytes) -> Dict[str, Any]:
+    def handle(self, method: str, path: str, body: bytes,
+               headers: Optional[Dict[str, str]] = None) -> Dict[str, Any]:
         with self._stats_lock:
             self.request_count += 1
         t0 = time.perf_counter()
         try:
-            return self._route(method, path, body)
+            return self._route(method, path, body, headers, t0)
         finally:
             dt = time.perf_counter() - t0
             with self._stats_lock:
@@ -150,8 +164,9 @@ class FlexServeApp:
                 st["total_s"] += dt
                 st["max_s"] = max(st["max_s"], dt)
 
-    def _route(self, method: str, path: str,
-               body: bytes) -> Dict[str, Any]:
+    def _route(self, method: str, path: str, body: bytes,
+               headers: Optional[Dict[str, str]] = None,
+               arrival: Optional[float] = None) -> Dict[str, Any]:
         if method == "GET" and path == "/health":
             return {"status": "ok", "requests": self.request_count}
         if method == "GET" and path == "/healthz":
@@ -171,12 +186,39 @@ class FlexServeApp:
             return self._engine_admin(method, path[len("/v1/engines/"):],
                                       body)
         if method == "POST" and path == "/v1/infer":
-            return self._infer(api.parse_request(body))
+            req = api.parse_request(body)
+            return self._infer(req, self._context(req, headers, arrival))
         if method == "POST" and path == "/v1/detect":
-            return self._detect(api.parse_request(body))
+            req = api.parse_request(body)
+            return self._detect(req, self._context(req, headers, arrival))
         if method == "POST" and path == "/v1/generate":
-            return self._generate(api.parse_request(body))
+            req = api.parse_request(body)
+            return self._generate(req, self._context(req, headers, arrival))
         raise api.ApiError(404, f"no route {method} {path}")
+
+    # --- request plane --------------------------------------------------------
+
+    def _context(self, req: Dict[str, Any],
+                 headers: Optional[Dict[str, str]],
+                 arrival: Optional[float]) -> RequestContext:
+        try:
+            return self.admission.context(req, headers, arrival_s=arrival)
+        except ValueError as e:
+            raise api.ApiError(400, str(e)) from None
+
+    @staticmethod
+    def _shed_to_api(e: ShedError) -> api.ApiError:
+        return api.ApiError(
+            429, str(e),
+            headers={"Retry-After": format(e.retry_after_s, ".3f")})
+
+    def _admit(self, plane: str, ctx: RequestContext, cost: int):
+        try:
+            return self.admission.admit(plane, ctx, cost)
+        except ShedError as e:
+            raise self._shed_to_api(e) from None
+        except DeadlineError as e:
+            raise api.ApiError(504, str(e)) from None
 
     def _metrics(self) -> Dict[str, Any]:
         with self._stats_lock:
@@ -198,6 +240,7 @@ class FlexServeApp:
             out["lifecycle"] = self.manager.stats()
         if self.generation is not None:
             out["generate"] = self.generation.stats()
+        out["admission"] = self.admission.stats()
         return out
 
     # --- lifecycle admin surface ---------------------------------------------
@@ -314,44 +357,57 @@ class FlexServeApp:
             raise api.ApiError(503, "no ensemble deployed on this endpoint")
         return self._ensemble
 
-    def _ensemble_logits(self, batch,
-                         alias: Optional[str]) -> Dict[str, np.ndarray]:
+    def _ensemble_logits(self, batch, alias: Optional[str],
+                         ctx: RequestContext) -> Dict[str, np.ndarray]:
         """One forward's worth of per-member logits for this request's rows —
         coalesced with concurrent requests (of the same signature AND the
-        same alias target) when the coalescer is on."""
+        same alias target) when the coalescer is on.  Admission is charged
+        per ROW; a missed deadline surfaces as 504, a full queue as 429."""
         ens = self._require_ensemble(alias)
+        rows = next(iter(batch.values())).shape[0]
+        ticket = self._admit("infer", ctx, rows)
         try:
             if self.coalescer is not None:
-                return self.coalescer.submit(batch, tag=alias)
+                return self.coalescer.submit(batch, tag=alias, ctx=ctx)
             with self.device_lock:
+                if ctx.expired():
+                    raise DeadlineError(
+                        "deadline exceeded waiting for the device lock")
                 if self.manager is not None:
-                    return self.manager.forward(batch, alias)
+                    return self.manager.forward(batch, alias, [ctx])
                 return ens.forward(batch)
+        except DeadlineError as e:
+            self.admission.deadline_miss(
+                "infer", "coalesce" if self.coalescer is not None
+                else "device_lock")
+            raise api.ApiError(504, str(e)) from None
         except LifecycleError as e:
             raise api.ApiError(404, str(e)) from None
         except KeyError as e:
             raise api.ApiError(400, str(e)) from None
         except ValueError as e:
             raise api.ApiError(400, str(e)) from None
+        finally:
+            ticket.release()
 
-    def _infer(self, req) -> Dict[str, Any]:
+    def _infer(self, req, ctx: RequestContext) -> Dict[str, Any]:
         alias = req.get("target")
         ens = self._require_ensemble(alias)
         batch = api.inputs_to_batch(req.get("inputs", {}))
         policy = req.get("policy", "soft_vote")
-        logits = self._ensemble_logits(batch, alias)
+        logits = self._ensemble_logits(batch, alias, ctx)
         try:
             return ens.respond_from_logits(logits, policy=policy)
         except (KeyError, ValueError) as e:
             raise api.ApiError(400, str(e)) from None
 
-    def _detect(self, req) -> Dict[str, Any]:
+    def _detect(self, req, ctx: RequestContext) -> Dict[str, Any]:
         alias = req.get("target")
         ens = self._require_ensemble(alias)
         batch = api.inputs_to_batch(req.get("inputs", {}))
         if "positive_class" not in req:
             raise api.ApiError(400, "'positive_class' is required")
-        logits = self._ensemble_logits(batch, alias)
+        logits = self._ensemble_logits(batch, alias, ctx)
         out = ens.detect_from_logits(
             logits, positive_class=int(req["positive_class"]),
             threshold=float(req.get("threshold", 0.5)),
@@ -362,38 +418,55 @@ class FlexServeApp:
         resp["policy"] = req.get("policy", "or")
         return resp
 
-    def _generate(self, req):
+    def _generate(self, req, ctx: RequestContext):
         prompts = req.get("prompts")
         if not prompts or not isinstance(prompts, list):
             raise api.ApiError(400, "'prompts' must be a list of token lists")
         sampling = api.parse_sampling(req)
         alias = req.get("target")
         if req.get("stream"):
-            return self._generate_stream(prompts, sampling, alias)
+            return self._generate_stream(prompts, sampling, alias, ctx)
+        ticket = self._admit("generate", ctx, len(prompts))
         try:
             if self.generation is not None and (self.generation.ready
                                                 or alias is not None):
                 res = self.generation.generate(prompts, sampling,
-                                               alias=alias)
+                                               alias=alias, ctx=ctx)
             elif self.engine is not None:
                 if alias is not None:
                     raise api.ApiError(
                         400, "per-request 'target' aliases need a "
                              "generation service on this endpoint")
                 with self.device_lock:
+                    if ctx.expired():
+                        self.admission.deadline_miss("generate",
+                                                     "device_lock")
+                        raise api.ApiError(
+                            504, "deadline exceeded waiting for the "
+                                 "device lock")
                     res = self.engine.generate(prompts, sampling=sampling)
             else:
                 raise api.ApiError(503, "no generation engine deployed")
+        except ShedError as e:
+            raise self._shed_to_api(e) from None
         except GenerationError as e:
             raise api.ApiError(404, str(e)) from None
         except (ValueError, TypeError) as e:
             raise api.ApiError(400, str(e)) from None
+        finally:
+            ticket.release()
+        if res.finish_reasons and all(r == "deadline"
+                                      for r in res.finish_reasons):
+            self.admission.deadline_miss("generate", "scheduler")
+            raise api.ApiError(
+                504, f"deadline exceeded before decode "
+                     f"({ctx.trace_id or 'request'})")
         return {"outputs": res.tokens, "steps": res.steps,
                 "prompt_lengths": res.prompt_lengths,
                 "finish_reasons": res.finish_reasons}
 
-    def _generate_stream(self, prompts, sampling,
-                         alias) -> api.StreamingResponse:
+    def _generate_stream(self, prompts, sampling, alias,
+                         ctx: RequestContext) -> api.StreamingResponse:
         if self.generation is None or not (self.generation.ready
                                            or alias is not None):
             raise api.ApiError(
@@ -402,20 +475,37 @@ class FlexServeApp:
         if len(prompts) != 1:
             raise api.ApiError(
                 400, "streaming supports exactly one prompt per request")
+        ticket = self._admit("generate", ctx, 1)
         try:
+            # the ticket's budget hold lives as long as the stream: it is
+            # released by the terminal event or by disconnect-cancellation
             stream = self.generation.stream(prompts[0], sampling,
-                                            alias=alias)
+                                            alias=alias, ctx=ctx,
+                                            on_finish=ticket.release)
+        except ShedError as e:
+            ticket.release()
+            raise self._shed_to_api(e) from None
         except GenerationError as e:
+            ticket.release()
             raise api.ApiError(404, str(e)) from None
         except (ValueError, TypeError) as e:
+            ticket.release()
             raise api.ApiError(400, str(e)) from None
+        except BaseException:
+            ticket.release()
+            raise
         return api.StreamingResponse(stream.events(),
                                      on_disconnect=stream.cancel)
 
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            409: "Conflict", 500: "Internal Server Error",
-            503: "Service Unavailable"}
+            409: "Conflict", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable",
+            504: "Gateway Timeout"}
+
+# request-plane headers the lean parser captures (already lowercase)
+_PLANE_HEADERS = (b"x-flexserve-priority", b"x-flexserve-deadline-ms",
+                  b"x-flexserve-client", b"x-request-id")
 
 
 def make_handler(app: FlexServeApp):
@@ -450,6 +540,7 @@ def make_handler(app: FlexServeApp):
             method, path = parts[0].decode("latin-1"), \
                 parts[1].decode("latin-1")
             length, keep = 0, True
+            plane: Optional[Dict[str, str]] = None
             while True:
                 h = self.rfile.readline(65537)
                 if h in (b"\r\n", b"\n", b""):
@@ -465,23 +556,33 @@ def make_handler(app: FlexServeApp):
                         return False
                 elif key == b"connection":
                     keep = b"close" not in val.lower()
+                elif key in _PLANE_HEADERS:
+                    if plane is None:
+                        plane = {}
+                    plane[key.decode("latin-1")] = \
+                        val.strip().decode("latin-1")
             body = self.rfile.read(length) if length else b""
+            extra = None
             try:
-                status, payload = 200, app.handle(method, path, body)
+                status, payload = 200, app.handle(method, path, body, plane)
             except api.ApiError as e:
-                status, payload = e.status, {"error": e.message}
+                status, payload, extra = e.status, {"error": e.message}, \
+                    e.headers
             except Exception as e:          # noqa: BLE001 — server boundary
                 status, payload = 500, {"error": f"{type(e).__name__}: {e}"}
             if isinstance(payload, api.StreamingResponse):
                 return self._stream_reply(payload, keep)
             data = api.encode_response(payload)
-            self._reply(status, data, keep)
+            self._reply(status, data, keep, extra)
             return keep
 
-        def _reply(self, status: int, data: bytes, keep: bool) -> None:
+        def _reply(self, status: int, data: bytes, keep: bool,
+                   extra: Optional[Dict[str, str]] = None) -> None:
+            lines = "".join(f"{k}: {v}\r\n" for k, v in (extra or {}).items())
             head = (f"HTTP/1.1 {status} {_REASONS.get(status, '')}\r\n"
                     f"Content-Type: application/json\r\n"
                     f"Content-Length: {len(data)}\r\n"
+                    f"{lines}"
                     f"Connection: {'keep-alive' if keep else 'close'}\r\n"
                     f"\r\n").encode("latin-1")
             self.wfile.write(head + data)     # one syscall, one segment
