@@ -116,11 +116,14 @@ def run(clients: int = 4, per_client: int = 6,
         max_new_tokens: int = 16) -> None:
     engine = _build_engine()
     app = FlexServeApp(engine=engine, num_slots=4)
+    # pre-compile the decode data path (fused step, batched-prefill group
+    # buckets, slot scatter) so no measured stream pays compile latency
+    app.generation.entry_for().service.warm()
     srv = FlexServeServer(app).start()
     host, port = srv.address
     try:
-        # one warm round compiles prefill/decode buckets off the clock
-        _stream_round(host, port, 1, 1, max_new_tokens)
+        # one warm round covers the HTTP path at measurement concurrency
+        _stream_round(host, port, clients, 1, max_new_tokens)
         (dt, tokens, ttfts, gaps, failures, shed, rejected,
          evicted) = _stream_round(host, port, clients, per_client,
                                   max_new_tokens)
@@ -140,6 +143,22 @@ def run(clients: int = 4, per_client: int = 6,
              f"ttft_p95_ms={1e3 * pctl(ttfts, 0.95):.1f} "
              f"itl_p50_ms={1e3 * pctl(gaps, 0.5):.2f} "
              f"itl_p95_ms={1e3 * pctl(gaps, 0.95):.2f}")
+        # server-side decode-tick breakdown (device-resident data path):
+        # host vs device ms per tick and the device->host bytes per tick
+        # on the sampling path — num_slots int32s, never the logits
+        probe = FlexServeClient(host, port)
+        decode = probe.metrics()["generate"]["decode"]
+        probe.close()
+        emit(f"gen_decode_breakdown_c{clients}", 0.0,
+             f"device_sampling={decode['device_sampling']} "
+             f"ticks={decode['ticks']} "
+             f"host_ms_p50={decode['host_ms_p50']:.3f} "
+             f"device_ms_p50={decode['device_ms_p50']:.3f} "
+             f"prefill_ms_p50={decode['prefill_ms_p50']:.3f} "
+             f"transfer_bytes_per_tick_p50="
+             f"{decode['transfer_bytes_per_tick_p50']:.0f} "
+             f"prefill_rows_per_forward="
+             f"{decode['prefill_requests'] / max(decode['prefill_forwards'], 1):.2f}")
     finally:
         srv.stop()
 

@@ -1,47 +1,239 @@
-"""Continuous batching vs static batching (beyond-paper production
-extension): mixed-length request streams; derived = decode-step savings."""
+"""Continuous-batching decode data path: device-resident sampling vs the
+host reference, batched prefill, and the per-tick host/device breakdown.
+
+Scenarios (median-of-rounds — this is a noisy 2-core box):
+
+  decode_device_sampling / decode_host_sampling / decode_prechange
+      The same mixed stochastic workload (heterogeneous temperature /
+      top_k / top_p / seed across requests) decoded three ways: the
+      device-resident path (fused on-device sampler + batched prefill),
+      the host-sampler ablation (batched prefill, numpy ``TokenSampler``
+      per slot), and the PRE-CHANGE baseline (host sampler + one prefill
+      forward per admitted request, ``max_prefill_batch=1``).  Derived
+      columns carry decode tokens/s plus the per-tick breakdown the
+      scheduler now accounts: ``host_ms`` / ``device_ms`` p50 and
+      device→host ``transfer_bytes`` per tick — the device path ships
+      ``num_slots`` int32s where the host paths ship the full
+      ``(num_slots, vocab)`` logits.
+
+  continuous_batching_8req / static_batching_8req
+      The original mixed-budget comparison; derived = decode-step
+      savings.
+
+Functional self-checks (raise on violation, recorded as junit testcases
+with ``--junit``, which is how CI keeps this path from rotting):
+  * per decode tick, the device path's sampling transfer is exactly
+    ``num_slots * 4`` bytes;
+  * batched prefill admits >=2 queued same-bucket requests per forward;
+  * both paths decode identical GREEDY streams.
+
+CLI smoke:  PYTHONPATH=src:. python -m benchmarks.bench_scheduler \
+                --rounds 2 --junit junit-bench-scheduler.xml
+"""
 
 from __future__ import annotations
 
+import argparse
 import time
+from typing import List, Optional, Tuple
 
 import jax
+import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import ContinuousBatchingScheduler, InferenceEngine
+from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
+                        SamplingParams)
+from repro.core.scheduler import pctl
 from repro.models import build_model
 
+_CHECKS: List[Tuple[str, Optional[str]]] = []   # (name, failure or None)
 
-def run() -> None:
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    _CHECKS.append((name, None if ok else detail))
+    if not ok:
+        raise RuntimeError(f"bench_scheduler self-check {name}: {detail}")
+
+
+def _build_engine() -> InferenceEngine:
     cfg = reduce_for_smoke(get_config("h2o-danube-1.8b"))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = InferenceEngine(model, params, max_len=96, max_batch=4)
+    return InferenceEngine(model, params, max_len=96, max_batch=8)
 
-    # 8 requests with very different output budgets
+
+def _workload(n_req: int, budget: int) -> List[Tuple[List[int],
+                                                     SamplingParams]]:
+    """Mixed stochastic sampling: every request different temps/filters,
+    all seeded so both paths decode a deterministic stream."""
+    out = []
+    for i in range(n_req):
+        prompts = [1 + i, 2 + (i % 3), 3]
+        params = SamplingParams(
+            temperature=0.7 + 0.1 * (i % 4), seed=100 + i,
+            top_k=(8 if i % 3 == 0 else 0),
+            top_p=(0.9 if i % 3 == 1 else 1.0),
+            max_new_tokens=budget)
+        out.append((prompts, params))
+    return out
+
+
+def _decode_round(engine: InferenceEngine, device_sampling: bool,
+                  n_req: int, budget: int, num_slots: int,
+                  max_prefill_batch: Optional[int] = None):
+    sched = ContinuousBatchingScheduler(
+        engine, num_slots=num_slots, device_sampling=device_sampling,
+        max_prefill_batch=max_prefill_batch)
+    for prompt, params in _workload(n_req, budget):
+        sched.submit(prompt, sampling=params)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(r.output) for r in done)
+    return sched, tokens, dt
+
+
+def _decode_scenario(engine: InferenceEngine, label: str,
+                     device_sampling: bool, *, rounds: int,
+                     n_req: int = 16, budget: int = 12, num_slots: int = 8,
+                     max_prefill_batch: Optional[int] = None):
+    samples = []
+    for _ in range(rounds):
+        sched, tokens, dt = _decode_round(engine, device_sampling,
+                                          n_req, budget, num_slots,
+                                          max_prefill_batch)
+        samples.append((dt / max(tokens, 1), sched))
+    samples.sort(key=lambda s: s[0])
+    best_tps = 1.0 / samples[0][0]                # for noise-robust checks
+    per_tok, sched = samples[len(samples) // 2]   # median round AND its
+    host_ms = sorted(sched.host_ms_window)        # scheduler's breakdown
+    dev_ms = sorted(sched.device_ms_window)
+    xfer = sorted(sched.tick_transfer_window)
+    emit(label, per_tok * 1e6,
+         f"tokens_per_s={1.0 / per_tok:.1f};rounds={rounds};"
+         f"host_ms_p50={pctl(host_ms, 0.5):.3f};"
+         f"device_ms_p50={pctl(dev_ms, 0.5):.3f};"
+         f"transfer_bytes_per_tick_p50={pctl(xfer, 0.5):.0f};"
+         f"prefill_forwards={sched.prefill_forwards};"
+         f"prefill_requests={sched.prefill_requests}")
+    return sched, 1.0 / per_tok, best_tps
+
+
+def run(rounds: int = 3) -> None:
+    engine = _build_engine()
+
+    # warm every compile off the clock with one throwaway round of each
+    # path at the MEASURED shape (16 requests / 8 slots hits the same
+    # prefill group bucket, fused step, and scatter the scenarios use)
+    _decode_round(engine, True, 16, 2, 8)
+    _decode_round(engine, False, 16, 2, 8)
+    _decode_round(engine, False, 16, 2, 8, 1)
+
+    dev_sched, dev_tps, dev_best = _decode_scenario(
+        engine, "decode_device_sampling", True, rounds=rounds)
+    _, host_tps, _ = _decode_scenario(
+        engine, "decode_host_sampling", False, rounds=rounds)
+    _, pre_tps, pre_best = _decode_scenario(
+        engine, "decode_prechange", False, rounds=rounds,
+        max_prefill_batch=1)
+    emit("decode_device_vs_prechange", 0.0,
+         f"speedup={dev_tps / max(pre_tps, 1e-9):.2f}x;"
+         f"vs_host_sampling={dev_tps / max(host_tps, 1e-9):.2f}x")
+    # best-of-rounds for the hard check: a median can be poisoned by one
+    # contended round on this time-shared 2-core box; the best round is
+    # what the architecture can actually do
+    _check("device_path_beats_prechange_baseline",
+           dev_best > pre_best,
+           f"device best {dev_best:.1f} tok/s <= "
+           f"pre-change best {pre_best:.1f} tok/s")
+
+    # --- functional self-checks ------------------------------------------------
+    per_tick = dev_sched.num_slots * 4
+    _check("device_transfer_is_token_ids_only",
+           dev_sched.tick_transfer_window
+           == [per_tick] * dev_sched.decode_ticks,
+           f"expected {per_tick}B/tick, saw "
+           f"{sorted(set(dev_sched.tick_transfer_window))}")
+    _check("batched_prefill_groups_admissions",
+           dev_sched.prefill_requests > dev_sched.prefill_forwards >= 1,
+           f"{dev_sched.prefill_requests} requests over "
+           f"{dev_sched.prefill_forwards} forwards")
+    greedy = [[1 + i, 2, 3] for i in range(4)]
+    a = ContinuousBatchingScheduler(engine, num_slots=4)
+    b = ContinuousBatchingScheduler(engine, num_slots=4,
+                                    device_sampling=False)
+    ra = [a.submit(p, max_new_tokens=4) for p in greedy]
+    rb = [b.submit(p, max_new_tokens=4) for p in greedy]
+    a.run()
+    b.run()
+    _check("greedy_streams_match_across_paths",
+           [r.output for r in ra] == [r.output for r in rb],
+           "device and host greedy decode diverged")
+
+    # --- continuous vs static batching (original scenario) ---------------------
     budgets = [2, 12, 3, 10, 2, 8, 4, 6]
     prompts = [[i + 1, i + 2, i + 3] for i in range(len(budgets))]
-
-    sched = ContinuousBatchingScheduler(engine, num_slots=4)
-    for p, b in zip(prompts, budgets):
-        sched.submit(p, max_new_tokens=b)
-    t0 = time.perf_counter()
-    sched.run()
-    t_cont = time.perf_counter() - t0
     total_tokens = sum(budgets)
-    emit("continuous_batching_8req", t_cont / total_tokens * 1e6,
-         f"decode_steps={sched.steps};tokens={total_tokens}")
 
-    # static batching: pad every request in a wave to the wave's max budget
-    t0 = time.perf_counter()
-    static_steps = 0
-    for i in range(0, len(prompts), 4):
-        wave_p = prompts[i:i + 4]
-        wave_b = max(budgets[i:i + 4])
-        engine.generate(wave_p, max_new_tokens=wave_b)
-        static_steps += wave_b
-    t_stat = time.perf_counter() - t0
+    cont = []
+    for _ in range(rounds):
+        sched = ContinuousBatchingScheduler(engine, num_slots=4)
+        for p, n in zip(prompts, budgets):
+            sched.submit(p, max_new_tokens=n)
+        t0 = time.perf_counter()
+        sched.run()
+        cont.append((time.perf_counter() - t0, sched.steps))
+    cont.sort()
+    t_cont, steps = cont[len(cont) // 2]
+    emit("continuous_batching_8req", t_cont / total_tokens * 1e6,
+         f"decode_steps={steps};tokens={total_tokens}")
+
+    stat = []
+    for _ in range(rounds):
+        t0 = time.perf_counter()
+        static_steps = 0
+        for i in range(0, len(prompts), 4):
+            wave_b = max(budgets[i:i + 4])
+            engine.generate(prompts[i:i + 4], max_new_tokens=wave_b)
+            static_steps += wave_b
+        stat.append((time.perf_counter() - t0, static_steps))
+    stat.sort()
+    t_stat, static_steps = stat[len(stat) // 2]
     emit("static_batching_8req", t_stat / total_tokens * 1e6,
          f"decode_steps={static_steps};"
-         f"step_savings={static_steps / max(sched.steps, 1):.2f}x")
+         f"step_savings={static_steps / max(steps, 1):.2f}x")
+
+
+def _write_junit(path: str) -> None:
+    import xml.etree.ElementTree as ET
+    suite = ET.Element("testsuite", name="bench_scheduler",
+                       tests=str(len(_CHECKS)),
+                       failures=str(sum(1 for _, f in _CHECKS if f)))
+    for name, failure in _CHECKS:
+        case = ET.SubElement(suite, "testcase", classname="bench_scheduler",
+                             name=name)
+        if failure:
+            ET.SubElement(case, "failure", message=failure)
+    ET.ElementTree(suite).write(path, encoding="unicode",
+                                xml_declaration=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--junit", default=None, metavar="PATH",
+                    help="write the self-check results as junit XML")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    try:
+        run(rounds=args.rounds)
+    finally:
+        if args.junit:
+            _write_junit(args.junit)
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

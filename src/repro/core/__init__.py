@@ -4,7 +4,7 @@ from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.memory import MemoryLedger, tree_bytes
 from repro.core.registry import ModelRegistry
 from repro.core.sampling import (SamplingError, SamplingParams, TokenSampler,
-                                 samplers_for)
+                                 base_key, sample_tokens, samplers_for)
 from repro.core.scheduler import (ContinuousBatchingScheduler, Request,
                                   SchedulerService)
 
@@ -13,5 +13,5 @@ __all__ = [
     "Ensemble", "EnsembleMember", "MemoryLedger", "tree_bytes",
     "ModelRegistry", "ContinuousBatchingScheduler", "Request",
     "SchedulerService", "SamplingError", "SamplingParams", "TokenSampler",
-    "samplers_for",
+    "base_key", "sample_tokens", "samplers_for",
 ]

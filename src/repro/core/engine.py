@@ -5,6 +5,14 @@ the decode state (KV cache / recurrent state), donates it through the jitted
 decode step so caches update in place, and buckets prompt lengths and batch
 sizes so arbitrary client requests hit a bounded jit cache (paper §2.3 on
 XLA terms).
+
+The decode data path is DEVICE-RESIDENT: ``decode_sample`` fuses the
+model's decode step with vectorized per-row sampling (repro.core.sampling)
+into one jitted program, so per tick only the sampled token ids —
+``(batch,)`` int32 — cross device→host, never the ``(batch, vocab)``
+logits.  Per-row sampling settings (temperature / top_k / top_p / rng key)
+are traced ARRAY arguments: heterogeneous requests share the one compiled
+step with no recompiles.
 """
 
 from __future__ import annotations
@@ -18,7 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.batching import BucketSpec, pad_sequences
-from repro.core.sampling import SamplingParams, samplers_for
+from repro.core.sampling import (SamplingParams, base_key, sample_tokens,
+                                 samplers_for)
 from repro.models.build import Model
 
 
@@ -40,6 +49,10 @@ class InferenceEngine:
         self.window = window
         self.batch_buckets = BucketSpec.pow2(max_batch)
         self.seq_buckets = BucketSpec.pow2(max_len, min_size=16)
+        # forward-call accounting (batched prefill shows up as fewer
+        # prefill calls than admitted requests)
+        self.prefill_calls = 0
+        self.decode_calls = 0
 
         kw = {}
         if window is not None:
@@ -50,27 +63,123 @@ class InferenceEngine:
             functools.partial(model.decode, **kw),
             donate_argnums=(2,) if donate_state else ())
 
+        def decode_and_sample(params_, token, state, temp, top_k, top_p,
+                              key, ctr):
+            logits, state = model.decode(params_, token, state, **kw)
+            toks = sample_tokens(logits, temp, top_k, top_p, key, ctr)
+            # returning ctr+1 keeps the token counters DEVICE-RESIDENT
+            # across ticks: steady-state decode uploads nothing
+            return toks, state, ctr + 1
+
+        self._decode_sample = jax.jit(
+            decode_and_sample,
+            donate_argnums=(2,) if donate_state else ())
+        self._sample = jax.jit(sample_tokens)
+        self._state_axes = None
+        self._insert_rows = None
+
     # --- API -----------------------------------------------------------------
 
     def new_state(self, batch: int):
         return self.model.init_state(batch, self.max_len)
 
     def prefill(self, batch: Dict[str, Any], state):
+        self.prefill_calls += 1
         return self._prefill(self.params, batch, state)
 
     def decode(self, token, state):
+        self.decode_calls += 1
         return self._decode(self.params, token, state)
+
+    def decode_sample(self, token, state, samp: Dict[str, Any], ctr):
+        """One fused decode tick: model decode step + on-device sampling.
+        ``samp`` holds the per-row arrays (temperature/top_k/top_p/key),
+        ``ctr`` the per-row token counters.  Returns ``(token_ids (B,)
+        int32 device array, new_state, ctr+1)`` — the ids are the ONLY
+        thing a caller needs to pull to host; ids and counters feed the
+        next tick without leaving the device."""
+        self.decode_calls += 1
+        return self._decode_sample(self.params, token, state,
+                                   samp["temperature"], samp["top_k"],
+                                   samp["top_p"], samp["key"], ctr)
+
+    def sample(self, logits, samp: Dict[str, Any], ctr):
+        """On-device sampling of standalone logits (the prefill first-token
+        path); same per-row contract as ``decode_sample``."""
+        return self._sample(logits, samp["temperature"], samp["top_k"],
+                            samp["top_p"], samp["key"], ctr)
+
+    def decode_cache_size(self) -> Optional[int]:
+        """Compiled-variant count of the fused decode step (None when this
+        jax build has no cache introspection).  Tests pin it flat across
+        ticks with heterogeneous sampling params."""
+        probe = getattr(self._decode_sample, "_cache_size", None)
+        return probe() if callable(probe) else None
+
+    def insert_rows(self, pool_state, group_state, src_rows, write_mask):
+        """One-call slot scatter: copy selected rows of a freshly
+        prefilled GROUP state into selected slots of a pooled decode
+        state.  ``src_rows``/``write_mask`` are dense per-slot vectors:
+        slot b takes group row ``src_rows[b]`` iff ``write_mask[b]`` —
+        one compiled program per group-batch bucket covers every
+        admission pattern.  The jit cache lives on the ENGINE so every
+        scheduler (and warm-up pass) over this engine shares it."""
+        if self._insert_rows is None:
+            batch_axes = self.state_batch_axes()
+
+            def insert(pool_state, group_state, src_rows, write_mask):
+                def one(pool, sub, axis):
+                    if axis is None:       # no batch axis: keep the pool's
+                        return pool
+                    pool_m = jnp.moveaxis(pool, axis, 0)
+                    sub_m = jnp.moveaxis(sub, axis, 0)
+                    picked = jnp.take(sub_m, src_rows, axis=0)
+                    mask = write_mask.reshape(
+                        (-1,) + (1,) * (pool_m.ndim - 1))
+                    out = jnp.where(mask, picked.astype(pool_m.dtype),
+                                    pool_m)
+                    return jnp.moveaxis(out, 0, axis)
+
+                return jax.tree_util.tree_map(one, pool_state, group_state,
+                                              batch_axes)
+
+            self._insert_rows = jax.jit(insert)
+        return self._insert_rows(pool_state, group_state, src_rows,
+                                 write_mask)
+
+    def state_batch_axes(self):
+        """Per-leaf batch-axis pytree of the decode state, found by
+        comparing abstract state shapes at two batch sizes (no
+        allocation).  Some families keep batch off axis 0 — rwkv state
+        leaves are (layers, batch, ...) — so slot scatter can't assume."""
+        if self._state_axes is None:
+            s2 = jax.eval_shape(lambda: self.model.init_state(2,
+                                                              self.max_len))
+            s3 = jax.eval_shape(lambda: self.model.init_state(3,
+                                                              self.max_len))
+            self._state_axes = jax.tree_util.tree_map(
+                lambda a, b: next(
+                    (i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y), None),
+                s2, s3)
+        return self._state_axes
 
     def generate(self, prompts: Sequence[Sequence[int]], *,
                  max_new_tokens: int = 32, eos_id: Optional[int] = None,
                  extras: Optional[Dict[str, Any]] = None,
-                 sampling: Optional[SamplingParams] = None
-                 ) -> GenerationResult:
+                 sampling: Optional[SamplingParams] = None,
+                 device_sampling: bool = True) -> GenerationResult:
         """Generation for a variable-size batch of variable-length prompts
         (greedy by default; ``sampling`` selects per-row temperature /
-        top-k / top-p decoding, each row sampling from its own rng).
-        Batch and prompt length are bucketed; rows beyond the real batch
-        are masked out of the result."""
+        top-k / top-p decoding).  Batch and prompt length are bucketed;
+        rows beyond the real batch are masked out of the result.
+
+        With ``device_sampling`` (default) every step samples on device
+        through the fused decode step — row i of a seeded request draws
+        token j with ``fold_in(PRNGKey(seed + i), j)``, the same stream
+        the continuous-batching scheduler derives, so a request decodes
+        identically here and under slot admission.  ``device_sampling=
+        False`` keeps the numpy ``TokenSampler`` reference path."""
         if sampling is None:
             sampling = SamplingParams(max_new_tokens=max_new_tokens,
                                       eos_id=eos_id)
@@ -85,7 +194,68 @@ class InferenceEngine:
         if extras:
             batch.update({k: _pad_rows(v, B) for k, v in extras.items()})
         logits, state = self.prefill(batch, state)
+        if device_sampling:
+            return self._generate_device(prompts, sampling, logits, state)
+        return self._generate_host(prompts, sampling, logits, state)
 
+    def _generate_device(self, prompts, sampling: SamplingParams,
+                         logits, state) -> GenerationResult:
+        """Device-resident decode loop: per step, only (B,) token ids
+        cross to host (sampled fused with the decode step)."""
+        n = len(prompts)
+        B = logits.shape[0]
+        row_params = [sampling.for_row(i) for i in range(n)]
+        samplers = [p.sampler() for p in row_params]       # is_stop only
+        temps = np.zeros((B,), np.float32)
+        top_ks = np.zeros((B,), np.int32)
+        top_ps = np.ones((B,), np.float32)
+        keys = np.zeros((B, 2), np.uint32)
+        for i, p in enumerate(row_params):
+            temps[i] = p.temperature
+            top_ks[i] = p.top_k
+            top_ps[i] = p.top_p
+            keys[i] = base_key(p.resolve_seed())
+        samp = {"temperature": jnp.asarray(temps),
+                "top_k": jnp.asarray(top_ks),
+                "top_p": jnp.asarray(top_ps),
+                "key": jnp.asarray(keys)}
+        out: List[List[int]] = [[] for _ in range(n)]
+        reasons: List[Optional[str]] = [None] * n
+        done = np.zeros((n,), bool)
+        steps = 0
+        # ctr is uniform across rows: a live row has produced exactly
+        # `step` tokens when token `step` is sampled (done rows ignore it)
+        ctr = jnp.zeros((B,), jnp.int32)
+        tok_dev = self.sample(logits, samp, ctr)
+        ctr = ctr + 1
+        for _ in range(sampling.max_new_tokens):
+            host = np.asarray(tok_dev)                     # (B,) int32
+            for i in range(n):
+                if done[i]:
+                    continue
+                t = int(host[i])
+                out[i].append(t)
+                if samplers[i].is_stop(t):
+                    done[i] = True
+                    reasons[i] = ("eos" if sampling.eos_id is not None
+                                  and t == sampling.eos_id else "stop")
+                elif len(out[i]) >= sampling.max_new_tokens:
+                    done[i] = True
+                    reasons[i] = "length"
+            steps += 1
+            if done.all():
+                break
+            tok_dev, state, ctr = self.decode_sample(tok_dev, state,
+                                                     samp, ctr)
+        return GenerationResult(tokens=out,
+                                prompt_lengths=[len(p) for p in prompts],
+                                steps=steps, finish_reasons=reasons)
+
+    def _generate_host(self, prompts, sampling: SamplingParams,
+                       logits, state) -> GenerationResult:
+        """Reference decode loop: numpy TokenSampler on host logits."""
+        n = len(prompts)
+        B = logits.shape[0]
         samplers = samplers_for(sampling, n)
         out: List[List[int]] = [[] for _ in range(n)]
         reasons: List[Optional[str]] = [None] * n

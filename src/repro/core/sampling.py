@@ -3,22 +3,38 @@
 FlexServe's generate route used to be globally greedy — every caller got
 argmax decoding with no knobs.  ``SamplingParams`` is the per-request
 contract (validated at the API boundary, threaded through the scheduler
-into each decode slot) and ``TokenSampler`` is its per-slot state: one
-numpy ``Generator`` per request, so two requests sharing a coalesced
-decode batch sample independently and a seeded request is reproducible
-regardless of which slot it lands in or what rides next to it.
+into each decode slot).
 
-Sampling happens on the HOST on the logits row the device already
-computed (numpy, float64 accumulation): the decode step stays one jitted
-device program per token for the whole batch, and per-request divergence
-(different temperatures, different rngs) never causes a recompile.
+Sampling runs ON DEVICE, fused into the jitted decode step:
+``sample_tokens`` is a vectorized per-row program over per-row parameter
+arrays (temperature / top_k / top_p / base rng key / token counter), so
+slots with heterogeneous sampling settings share ONE compiled step and
+only the sampled token ids — ``(batch,)`` int32 — ever cross to the host
+per decode tick.  The RNG contract that keeps seeded requests
+reproducible regardless of slot placement, batch neighbors, or
+preemption/resume:
+
+    token j of a request  ~  categorical(fold_in(PRNGKey(seed), j),
+                                         filtered logits of step j)
+
+The key for token j depends only on the request's seed and j, never on
+device-side state threading — a request resumed after recompute
+preemption re-derives the exact same stream.
+
+``TokenSampler`` (numpy, float64 accumulation) remains as the HOST
+reference implementation: greedy agrees exactly with the device path,
+stochastic agrees in distribution (different rng constructions), and the
+property tests in tests/test_device_sampling.py hold the two together.
 """
 
 from __future__ import annotations
 
+import secrets
 from dataclasses import dataclass, field, replace
 from typing import Any, Dict, List, Optional, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -115,6 +131,12 @@ class SamplingParams:
     def sampler(self) -> "TokenSampler":
         return TokenSampler(self)
 
+    def resolve_seed(self) -> int:
+        """Concrete base seed for the device rng: the request's seed when
+        given, fresh entropy otherwise (an unseeded request still needs a
+        definite key — it just isn't reproducible across runs)."""
+        return self.seed if self.seed is not None else secrets.randbits(31)
+
     def describe(self) -> Dict[str, Any]:
         out: Dict[str, Any] = {"temperature": self.temperature,
                                "max_new_tokens": self.max_new_tokens}
@@ -156,7 +178,17 @@ class TokenSampler:
         probs = np.exp(row)
         probs /= probs.sum()
         if p.top_p < 1.0:
-            order = np.argsort(probs)[::-1]
+            # partition-based nucleus: grow a top-k candidate set until it
+            # holds the target mass, then sort only the candidates —
+            # O(V + k log k) instead of a full-vocab O(V log V) argsort
+            V = probs.size
+            k = min(64, V)
+            while True:
+                cand = np.argpartition(probs, V - k)[V - k:]
+                if k == V or probs[cand].sum() >= p.top_p:
+                    break
+                k = min(V, 2 * k)
+            order = cand[np.argsort(probs[cand])[::-1]]
             csum = np.cumsum(probs[order])
             # smallest prefix whose mass reaches top_p (>= keeps >=1 token)
             cut = int(np.searchsorted(csum, p.top_p)) + 1
@@ -175,3 +207,107 @@ class TokenSampler:
 def samplers_for(params: SamplingParams, n: int) -> List[TokenSampler]:
     """One independent sampler per row of an n-prompt request."""
     return [params.for_row(i).sampler() for i in range(n)]
+
+
+# --- device-resident sampling -------------------------------------------------
+#
+# The per-row sampling state the scheduler/engine keep ON DEVICE is four
+# plain arrays (one row per decode slot), so heterogeneous requests are
+# data, not code, and the fused decode step never recompiles:
+#
+#   temperature (B,) f32   <= 0 selects greedy (also the empty-slot value)
+#   top_k       (B,) i32   0 disables
+#   top_p       (B,) f32   1.0 disables
+#   key         (B,2) u32  raw PRNGKey(seed) of the occupying request
+#
+# plus the host-tracked token counter ctr (B,) i32 == number of tokens the
+# request has produced so far (== the index of the token being sampled).
+
+
+def base_key(seed: int) -> np.ndarray:
+    """The request's raw base rng key as host uint32[2] (slot-insertable)."""
+    return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+_BISECT_ITERS = 32          # float32 threshold bisection convergence
+
+
+def _filter_top_k(scaled, top_k):
+    """Mask each row below its top_k-th largest value.  The per-row kth
+    value comes from THRESHOLD BISECTION (count(row >= t) is monotone in
+    t), because XLA's CPU sort is catastrophically slow at vocab scale
+    while 32 vectorized compare-and-count passes are cheap.  Ties at the
+    kth value are kept, matching the host reference."""
+    B, V = scaled.shape
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V).astype(jnp.int32)
+    lo = jnp.min(scaled, axis=-1)            # count(>= lo) == V >= k
+    hi = jnp.max(scaled, axis=-1)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        cnt = jnp.sum(scaled >= mid[:, None], axis=-1)
+        ok = cnt >= k                        # invariant: count(>= lo) >= k
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
+    return jnp.where(scaled < lo[:, None], -jnp.inf, scaled)
+
+
+def _filter_top_p(masked, top_p):
+    """Nucleus mask: keep each row's smallest set of highest-probability
+    tokens reaching mass top_p.  The probability cutoff is bisected the
+    same way (mass(probs >= t) is monotone in t); boundary-probability
+    ties are kept, a superset of the host's sorted prefix."""
+    probs = jax.nn.softmax(masked, axis=-1)
+    B = masked.shape[0]
+    lo = jnp.zeros((B,), masked.dtype)       # mass(>= 0) == 1 >= top_p
+    hi = jnp.ones((B,), masked.dtype)
+
+    def body(_, lh):
+        lo, hi = lh
+        mid = 0.5 * (lo + hi)
+        mass = jnp.sum(jnp.where(probs >= mid[:, None], probs, 0.0),
+                       axis=-1)
+        ok = mass >= top_p
+        return jnp.where(ok, mid, lo), jnp.where(ok, hi, mid)
+
+    lo, _ = jax.lax.fori_loop(0, _BISECT_ITERS, body, (lo, hi))
+    return jnp.where(probs < lo[:, None], -jnp.inf, masked)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, key, ctr):
+    """Vectorized on-device sampling: (B, V) logits + per-row params ->
+    (B,) int32 token ids.
+
+    Three regimes, picked at RUNTIME (lax.cond on the traced params, so
+    one compiled program serves every batch composition):
+      * all rows greedy             -> one batched argmax;
+      * stochastic, no filters      -> categorical on the scaled logits;
+      * any top_k/top_p active      -> bisection-threshold filters first.
+    Greedy rows inside a stochastic batch take their argmax via a
+    where()."""
+    logits = logits.astype(jnp.float32)
+    temperature = temperature.astype(jnp.float32)
+    top_k = top_k.astype(jnp.int32)
+    top_p = top_p.astype(jnp.float32)
+    ctr = ctr.astype(jnp.int32)
+    V = logits.shape[-1]
+    greedy_rows = temperature <= 0.0
+    argmax = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def stochastic():
+        scaled = logits / jnp.maximum(temperature, 1e-6)[:, None]
+        filters_off = jnp.logical_and(
+            jnp.all((top_k <= 0) | (top_k >= V)),
+            jnp.all(top_p >= 1.0))
+        masked = jax.lax.cond(
+            filters_off,
+            lambda: scaled,
+            lambda: _filter_top_p(_filter_top_k(scaled, top_k), top_p))
+        sampled = jax.vmap(
+            lambda k, c, row: jax.random.categorical(
+                jax.random.fold_in(k, c), row))(key, ctr, masked)
+        return jnp.where(greedy_rows, argmax, sampled.astype(jnp.int32))
+
+    return jax.lax.cond(jnp.all(greedy_rows), lambda: argmax, stochastic)

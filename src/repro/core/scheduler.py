@@ -8,12 +8,27 @@ step, and evicted individually on EOS / stop token / token budget /
 cancellation — so the decode batch composition changes every step, exactly
 like vLLM-style serving.
 
-Each request carries its OWN sampling state (``SamplingParams`` +
-per-request rng): the device computes one batched decode step, then every
-occupied slot samples its next token from its own logits row on the host.
-Two requests sharing a decode batch therefore decode with different
-temperatures/seeds without recompiles or cross-talk, and a seeded request
-reproduces exactly regardless of what rides next to it.
+The decode loop is DEVICE-RESIDENT.  Each request carries its OWN
+sampling settings (``SamplingParams``), kept as per-slot parameter arrays
+(temperature / top_k / top_p / base rng key) that ride into ONE fused
+jitted decode-and-sample step: the device computes the batched decode
+step AND every slot's next token, and only the sampled ids — shape
+``(num_slots,)`` int32 — cross to the host per tick, never the
+``(num_slots, vocab)`` logits.  Two requests sharing a decode batch
+decode with different temperatures/seeds without recompiles or
+cross-talk (the params are traced arrays, not constants), and a seeded
+request reproduces exactly regardless of slot placement or preemption:
+token j is drawn with ``fold_in(PRNGKey(seed), j)``, a stateless key
+that survives recompute-resume by construction.  ``device_sampling=
+False`` keeps the numpy ``TokenSampler`` host path as the reference
+implementation (and the benchmark baseline).
+
+Admission is BATCHED: up to one pending request per free slot is popped
+per tick, grouped by prefill signature (sequence bucket + extras
+signature, like the coalescer's sub-queues), and each group runs ONE
+bucketed prefill forward; all resulting slot states land in the pooled
+decode state through one jitted gather-scatter instead of one insert per
+request.
 
 Requests may attach a ``sink`` — called once per generated token from the
 driver — which is what the streaming front-end builds on.
@@ -50,7 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import GenerationResult, InferenceEngine
-from repro.core.sampling import SamplingParams, TokenSampler
+from repro.core.sampling import (SamplingParams, TokenSampler, base_key)
 
 # sink(request, token, done): token is None only for a terminal
 # notification that produced no token (cancellation, driver error)
@@ -83,6 +98,7 @@ class Request:
     last_token_at: Optional[float] = None
     finished_at: Optional[float] = None
     sampler: Optional[TokenSampler] = None
+    base_key: Optional[np.ndarray] = None   # raw uint32[2] device rng key
 
     @property
     def priority(self) -> str:
@@ -112,39 +128,25 @@ def pctl(sorted_vals: Sequence[float], p: float) -> float:
                            int(p * (len(sorted_vals) - 1)))]
 
 
-def _find_batch_axis(pool_shape, slot_shape) -> int:
-    for i, (a, b) in enumerate(zip(pool_shape, slot_shape)):
-        if a != b:
-            return i
-    return 0
-
-
-def insert_slot(pool_state, slot_state, slot: int):
-    """Write a batch=1 state into row ``slot`` of the pooled state."""
-
-    def one(pool, sub):
-        if pool.shape == sub.shape:        # scalar-per-batch edge (B==1 pool)
-            return sub
-        axis = _find_batch_axis(pool.shape, sub.shape)
-        start = [0] * pool.ndim
-        start[axis] = slot
-        return jax.lax.dynamic_update_slice(pool, sub.astype(pool.dtype),
-                                            tuple(start))
-
-    return jax.tree_util.tree_map(one, pool_state, slot_state)
-
-
 _WINDOW = 4096                  # bounded stat windows (trimmed to half)
 
 
 class ContinuousBatchingScheduler:
     def __init__(self, engine: InferenceEngine, num_slots: int = 4, *,
                  max_pending: Optional[int] = None,
-                 interactive_weight: int = 4):
+                 interactive_weight: int = 4,
+                 device_sampling: bool = True,
+                 max_prefill_batch: Optional[int] = None):
         self.engine = engine
         self.num_slots = num_slots
         self.max_pending = max_pending
         self.interactive_weight = max(1, interactive_weight)
+        self.device_sampling = device_sampling
+        # admissions per prefill forward: bounded by the engine's batch
+        # buckets (and optionally tighter)
+        cap = engine.batch_buckets.sizes[-1]
+        self.max_prefill_batch = (min(cap, max_prefill_batch)
+                                  if max_prefill_batch else cap)
         self.state = engine.new_state(num_slots)
         self.slots: List[Optional[Request]] = [None] * num_slots
         self.queue: Deque[Request] = collections.deque()       # interactive
@@ -156,7 +158,20 @@ class ContinuousBatchingScheduler:
         self._rr_credit = 0                  # weighted-dequeue state
         self._next_id = itertools.count()
         self._last_token = np.zeros((num_slots,), np.int32)
-        self._insert = jax.jit(insert_slot, static_argnums=(2,))
+        # per-slot sampling params + token/counter mirrors (host side).
+        # The device copies are re-uploaded only when a slot changes hands
+        # (~bytes, host→device); between admissions the token ids and
+        # counters stay DEVICE-RESIDENT (the fused step returns next
+        # tick's inputs) and the fold_in(key, ctr) rng needs no
+        # device-side key threading at all.
+        self._temps = np.zeros((num_slots,), np.float32)
+        self._top_ks = np.zeros((num_slots,), np.int32)
+        self._top_ps = np.ones((num_slots,), np.float32)
+        self._keys = np.zeros((num_slots, 2), np.uint32)
+        self._ctr = np.zeros((num_slots,), np.int32)  # == len(req.output)
+        self._samp_dev: Optional[Dict[str, Any]] = None
+        self._tok_dev: Optional[Any] = None
+        self._ctr_dev: Optional[Any] = None
         # recent finished requests (bounded — see _finish); completed_total
         # is the lifetime counter
         self.completed: List[Request] = []
@@ -166,6 +181,18 @@ class ContinuousBatchingScheduler:
         self.deadline_total = 0
         self.pauses_total = 0
         self.pending_high_water = 0
+        # decode-tick breakdown + transfer accounting (the acceptance bar:
+        # per tick, ONLY the (num_slots,) token ids cross device→host on
+        # the sampling path)
+        self.decode_ticks = 0
+        self.decode_transfer_bytes = 0       # lifetime, decode ticks only
+        self.prefill_transfer_bytes = 0      # first-token path
+        self.prefill_forwards = 0
+        self.prefill_requests = 0            # admitted through them
+        self.host_ms_window: List[float] = []
+        self.device_ms_window: List[float] = []
+        self.prefill_ms_window: List[float] = []
+        self.tick_transfer_window: List[int] = []   # bytes per decode tick
         # ascending-insert stat windows, mutated only by the driving thread
         self.latency_window: List[float] = []
         self.ttft_window: List[float] = []
@@ -195,6 +222,7 @@ class ContinuousBatchingScheduler:
                       sampling.max_new_tokens, sampling.eos_id,
                       extras, sampling, sink, ctx)
         req.sampler = sampling.sampler()
+        req.base_key = base_key(sampling.resolve_seed())
         req.submitted_at = time.perf_counter()
         self._queue_for(req).append(req)
         self.pending_high_water = max(self.pending_high_water, self.pending)
@@ -258,38 +286,78 @@ class ContinuousBatchingScheduler:
         """Reap cancellations/pauses/expiries + admit-from-queue + one
         decode step.  Returns every request that finished during this
         tick."""
+        t_tick = time.perf_counter()
         finished = self._reap()
-        self._admit(finished)
+        prefill_s = self._admit(finished)
         if self.active == 0:
             return finished
-        token = jnp.asarray(self._last_token)
-        logits, self.state = self.engine.decode(token, self.state)
-        # greedy-only ticks argmax on device and ship num_slots ints; the
-        # full (num_slots, V) logits cross to host only when a stochastic
-        # sampler occupies a slot
-        if all(req is None or req.sampler.params.greedy
-               for req in self.slots):
-            host = None
-            greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        t_dev = time.perf_counter()
+        if self.device_sampling:
+            # fused decode + on-device sampling: ONLY the (num_slots,)
+            # token-id vector crosses to host this tick.  Sampling params,
+            # token ids, and rng counters are uploaded only when a slot
+            # changed hands; steady-state ticks upload nothing.
+            if self._samp_dev is None:
+                self._samp_dev = {
+                    "temperature": jnp.asarray(self._temps),
+                    "top_k": jnp.asarray(self._top_ks),
+                    "top_p": jnp.asarray(self._top_ps),
+                    "key": jnp.asarray(self._keys)}
+                self._tok_dev = jnp.asarray(self._last_token)
+                self._ctr_dev = jnp.asarray(self._ctr)
+            tok_dev, self.state, ctr_dev = self.engine.decode_sample(
+                self._tok_dev, self.state, self._samp_dev, self._ctr_dev)
+            tokens = np.asarray(tok_dev)             # blocks: device sync
+            transfer = tokens.nbytes
+            host = greedy = None
         else:
-            host = np.asarray(logits)                # (num_slots, V)
-            greedy = None
+            token = jnp.asarray(self._last_token)
+            # reference host path: full logits cross when any slot samples
+            logits, self.state = self.engine.decode(token, self.state)
+            if all(req is None or req.sampler.params.greedy
+                   for req in self.slots):
+                host = None
+                greedy = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+                transfer = greedy.nbytes
+            else:
+                host = np.asarray(logits)            # (num_slots, V)
+                greedy = None
+                transfer = host.nbytes
+            tokens = None
+        device_s = time.perf_counter() - t_dev
         self.steps += 1
+        self.decode_ticks += 1
+        self.decode_transfer_bytes += transfer
+        self._push(self.tick_transfer_window, transfer)
         now = time.perf_counter()
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            t = (int(greedy[b]) if host is None
-                 else req.sampler.sample(host[b]))
+            if tokens is not None:
+                t = int(tokens[b])
+            else:
+                t = (int(greedy[b]) if host is None
+                     else req.sampler.sample(host[b]))
             self._record_token(req, t, now)
             reason = self._finish_reason(req, t)
             if reason is not None:
                 self._finish(req, reason, now)
                 finished.append(req)
-                self.slots[b] = None
+                self._free_slot(b)
             else:
                 self._last_token[b] = t
+                self._ctr[b] = len(req.output)
             self._notify(req, t)
+        if self.device_sampling and self._samp_dev is not None:
+            # no slot changed hands: next tick's inputs never leave the
+            # device (a _free_slot above cleared _samp_dev, falling back
+            # to a host re-upload built from the mirrors)
+            self._tok_dev, self._ctr_dev = tok_dev, ctr_dev
+        self._push(self.device_ms_window, 1e3 * device_s)
+        self._push(self.prefill_ms_window, 1e3 * prefill_s)
+        self._push(self.host_ms_window,
+                   1e3 * max(0.0, (time.perf_counter() - t_tick)
+                             - device_s - prefill_s))
         return finished
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -318,67 +386,158 @@ class ContinuousBatchingScheduler:
         self._rr_credit = 0
         return lo.popleft()
 
-    def _admit(self, finished: List[Request]) -> None:
-        for b in range(self.num_slots):
-            if self.slots[b] is not None:
+    def _admit(self, finished: List[Request]) -> float:
+        """Admit up to one pending request per free slot, batching the
+        prefill forwards: popped requests are grouped by prefill signature
+        (sequence bucket + extras signature) and each group runs ONE
+        bucketed forward, with every surviving slot state inserted by one
+        jitted scatter.  Returns seconds spent on prefill forwards."""
+        free = [b for b in range(self.num_slots) if self.slots[b] is None]
+        if not free:
+            return 0.0
+        picked: List[Tuple[Request, int, Tuple]] = []
+        while len(picked) < len(free):
+            req = self._pop_next()
+            if req is None:
+                break
+            now = time.perf_counter()
+            if req.expired(now):
+                # dropped BEFORE its prefill forward: the deadline is
+                # honored at the hand-off, not after the work is spent
+                self.deadline_total += 1
+                self._finish(req, "deadline", now)
+                finished.append(req)
+                self._notify(req, None)
                 continue
-            while True:
-                req = self._pop_next()
-                if req is None:
-                    return
-                now = time.perf_counter()
-                if req.expired(now):
-                    # dropped BEFORE its prefill forward: the deadline is
-                    # honored at the hand-off, not after the work is spent
-                    self.deadline_total += 1
-                    self._finish(req, "deadline", now)
-                    finished.append(req)
-                    self._notify(req, None)
-                    continue
-                if self._prefill_into(req, b, finished):
-                    break
+            seed = req.prompt + req.output
+            try:
+                S = self.engine.seq_buckets.bucket_for(len(seed))
+            except ValueError as err:
+                # no longer fits a sequence bucket (resumed request grew
+                # past max_len): fail it, keep admitting
+                req.error = err
+                self._finish(req, "error", now)
+                finished.append(req)
+                self._notify(req, None)
+                continue
+            picked.append((req, S, self._extras_signature(req)))
+        if not picked:
+            return 0.0
+        groups: Dict[Tuple, List[Request]] = {}
+        for req, S, esig in picked:
+            groups.setdefault((S, esig), []).append(req)
+        prefill_s = 0.0
+        for (S, _), reqs in groups.items():
+            for i in range(0, len(reqs), self.max_prefill_batch):
+                prefill_s += self._prefill_group(
+                    reqs[i:i + self.max_prefill_batch], S, free, finished)
+        return prefill_s
 
-    def _prefill_into(self, req: Request, b: int,
-                      finished: List[Request]) -> bool:
-        """Prefill ``req`` (prompt + any output decoded before a pause —
-        recompute preemption) into slot ``b``.  Returns False only when
-        the seed no longer fits a sequence bucket (resumed request grew
-        past max_len): the request fails and the slot stays free."""
-        seed = req.prompt + req.output
-        try:
-            S = self.engine.seq_buckets.bucket_for(len(seed))
-        except ValueError as err:
-            req.error = err
-            self._finish(req, "error", time.perf_counter())
-            finished.append(req)
-            self._notify(req, None)
-            return False
-        slot_state = self.engine.new_state(1)
-        tokens = np.zeros((1, S), np.int32)
-        tokens[0, :len(seed)] = seed
-        batch = {
-            "tokens": jnp.asarray(tokens),
-            "lengths": jnp.asarray([len(seed)], np.int32),
-        }
-        if req.extras:
-            batch.update({k: jnp.asarray(np.asarray(v)[None])
-                          for k, v in req.extras.items()})
-        logits, slot_state = self.engine.prefill(batch, slot_state)
-        now = time.perf_counter()
-        first = req.sampler.sample(np.asarray(logits)[0])     # (1, V)
-        self._record_token(req, first, now)
-        reason = self._finish_reason(req, first)
-        if reason is not None:       # stop/budget hit on the very first
-            self._finish(req, reason, now)
-            finished.append(req)
+    @staticmethod
+    def _extras_signature(req: Request) -> Tuple:
+        if not req.extras:
+            return ()
+        return tuple(sorted(
+            (k, np.asarray(v).shape, str(np.asarray(v).dtype))
+            for k, v in req.extras.items()))
+
+    def _prefill_group(self, reqs: List[Request], S: int,
+                       free: List[int], finished: List[Request]) -> float:
+        """One bucketed prefill forward for a same-signature group (each
+        request's prompt + any output decoded before a pause — recompute
+        preemption), first tokens sampled on device, and every surviving
+        row inserted into the pooled state by one jitted scatter."""
+        n = len(reqs)
+        B = self.engine.batch_buckets.bucket_for(n)
+        tokens = np.zeros((B, S), np.int32)
+        lengths = np.ones((B,), np.int32)
+        for i, req in enumerate(reqs):
+            seed = req.prompt + req.output
+            tokens[i, :len(seed)] = seed
+            lengths[i] = len(seed)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "lengths": jnp.asarray(lengths)}
+        if reqs[0].extras:
+            for k in reqs[0].extras:
+                stacked = np.stack([np.asarray(r.extras[k]) for r in reqs])
+                if B > n:
+                    pad = [(0, B - n)] + [(0, 0)] * (stacked.ndim - 1)
+                    stacked = np.pad(stacked, pad)
+                batch[k] = jnp.asarray(stacked)
+        t0 = time.perf_counter()
+        group_state = self.engine.new_state(B)
+        logits, group_state = self.engine.prefill(batch, group_state)
+        self.prefill_forwards += 1
+        self.prefill_requests += n
+        if self.device_sampling:
+            samp = {"temperature": np.zeros((B,), np.float32),
+                    "top_k": np.zeros((B,), np.int32),
+                    "top_p": np.ones((B,), np.float32),
+                    "key": np.zeros((B, 2), np.uint32)}
+            ctr = np.zeros((B,), np.int32)
+            for i, req in enumerate(reqs):
+                p = req.sampler.params
+                samp["temperature"][i] = p.temperature
+                samp["top_k"][i] = p.top_k
+                samp["top_p"][i] = p.top_p
+                samp["key"][i] = req.base_key
+                ctr[i] = len(req.output)
+            firsts = np.asarray(self.engine.sample(
+                logits, {k: jnp.asarray(v) for k, v in samp.items()},
+                jnp.asarray(ctr)))
+            self.prefill_transfer_bytes += firsts.nbytes
         else:
-            self.state = self._insert(self.state, slot_state, b)
-            self.slots[b] = req
-            self._last_token[b] = first
-        self._notify(req, first)
-        return True
+            host = np.asarray(logits)                         # (B, V)
+            self.prefill_transfer_bytes += host.nbytes
+            firsts = [reqs[i].sampler.sample(host[i]) for i in range(n)]
+        prefill_s = time.perf_counter() - t0
+        now = time.perf_counter()
+        src_rows = np.zeros((self.num_slots,), np.int32)
+        write_mask = np.zeros((self.num_slots,), bool)
+        landed: List[Tuple[Request, int]] = []
+        for i, req in enumerate(reqs):
+            first = int(firsts[i])
+            self._record_token(req, first, now)
+            reason = self._finish_reason(req, first)
+            if reason is not None:   # stop/budget hit on the very first
+                self._finish(req, reason, now)
+                finished.append(req)
+            else:
+                b = free.pop(0)
+                self.slots[b] = req
+                self._last_token[b] = first
+                self._ctr[b] = len(req.output)
+                p = req.sampler.params
+                self._temps[b] = p.temperature
+                self._top_ks[b] = p.top_k
+                self._top_ps[b] = p.top_p
+                self._keys[b] = req.base_key
+                self._samp_dev = None        # re-upload on the next tick
+                src_rows[b] = i
+                write_mask[b] = True
+                landed.append((req, b))
+        if landed:
+            t1 = time.perf_counter()
+            self.state = self.engine.insert_rows(self.state, group_state,
+                                                 jnp.asarray(src_rows),
+                                                 jnp.asarray(write_mask))
+            prefill_s += time.perf_counter() - t1
+        for req in reqs:                     # every row got its first token
+            self._notify(req, req.output[-1])
+        return prefill_s
 
     # --- internals -------------------------------------------------------------
+
+    def _free_slot(self, b: int) -> None:
+        """Release slot ``b`` and reset its sampling-param row to greedy,
+        so a batch of remaining greedy slots regains the argmax fast path
+        inside the fused step."""
+        self.slots[b] = None
+        self._temps[b] = 0.0
+        self._top_ks[b] = 0
+        self._top_ps[b] = 1.0
+        self._keys[b] = 0
+        self._samp_dev = None
 
     def _reap(self) -> List[Request]:
         """Evict cancelled, paused (preempted, NOT finished), and
@@ -389,7 +548,7 @@ class ContinuousBatchingScheduler:
             if req is None:
                 continue
             if req.cancelled:
-                self.slots[b] = None
+                self._free_slot(b)
                 self._finish(req, "cancelled", now)
                 self._notify(req, None)
                 reaped.append(req)
@@ -397,12 +556,12 @@ class ContinuousBatchingScheduler:
                 if not self.preempt_enabled:
                     req.paused = False       # retiring: decode in place
                 else:
-                    self.slots[b] = None
+                    self._free_slot(b)
                     self.parked.append(req)
                     req.pause_count += 1
                     self.pauses_total += 1
             elif req.expired(now):
-                self.slots[b] = None
+                self._free_slot(b)
                 self.deadline_total += 1
                 self._finish(req, "deadline", now)
                 self._notify(req, None)
@@ -491,10 +650,12 @@ class SchedulerService:
 
     def __init__(self, engine: InferenceEngine, num_slots: int = 4, *,
                  max_pending: Optional[int] = None,
-                 interactive_weight: int = 4):
+                 interactive_weight: int = 4,
+                 device_sampling: bool = True):
         self.scheduler = ContinuousBatchingScheduler(
             engine, num_slots, max_pending=max_pending,
-            interactive_weight=interactive_weight)
+            interactive_weight=interactive_weight,
+            device_sampling=device_sampling)
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._events: Dict[int, threading.Event] = {}
@@ -602,6 +763,39 @@ class SchedulerService:
             self._work.notify()
             return out
 
+    def warm(self, *, seq_lens: Optional[Sequence[int]] = None,
+             group_sizes: Optional[Sequence[int]] = None) -> float:
+        """Pre-compile the decode data path off the hot path: the fused
+        decode step at this pool's width plus, per (seq bucket x group
+        bucket), the batched prefill forward, the on-device first-token
+        sampler, and the slot scatter.  Runs a throwaway scheduler over
+        the SAME engine — every jit cache involved lives on the engine,
+        so live traffic then serves from warm caches instead of paying
+        compile latency mid-stream.  Defaults cover EVERY sequence bucket
+        (a prompt of any admissible length then finds its prefill bucket
+        compiled); pass explicit ``seq_lens`` to thin the grid.  Returns
+        wall seconds spent."""
+        t0 = time.perf_counter()
+        s = self.scheduler
+        if seq_lens is None:
+            seq_lens = s.engine.seq_buckets.sizes
+        if group_sizes is None:
+            group_sizes = [b for b in s.engine.batch_buckets.sizes
+                           if b <= min(s.num_slots, s.max_prefill_batch)]
+        for seq_len in seq_lens:
+            # land in the seq_len bucket while leaving decode headroom in
+            # the cache (a full-bucket prompt + 2 decode steps would write
+            # past max_len on the largest bucket)
+            probe_len = max(1, min(seq_len, s.engine.max_len - 2))
+            for g in group_sizes:
+                tmp = ContinuousBatchingScheduler(
+                    s.engine, s.num_slots,
+                    device_sampling=s.device_sampling)
+                for i in range(g):
+                    tmp.submit([1 + (i % 7)] * probe_len, max_new_tokens=2)
+                tmp.run()
+        return time.perf_counter() - t0
+
     @property
     def retiring(self) -> bool:
         return self._retiring
@@ -647,7 +841,27 @@ class SchedulerService:
             lat = sorted(s.latency_window)
             ttft = sorted(s.ttft_window)
             itl = sorted(s.itl_window)
+            host_ms = sorted(s.host_ms_window)
+            dev_ms = sorted(s.device_ms_window)
+            pre_ms = sorted(s.prefill_ms_window)
+            xfer = sorted(s.tick_transfer_window)
+            decode = {
+                "device_sampling": s.device_sampling,
+                "ticks": s.decode_ticks,
+                "host_ms_p50": pctl(host_ms, 0.50),
+                "host_ms_p95": pctl(host_ms, 0.95),
+                "device_ms_p50": pctl(dev_ms, 0.50),
+                "device_ms_p95": pctl(dev_ms, 0.95),
+                "prefill_ms_p50": pctl(pre_ms, 0.50),
+                "transfer_bytes_per_tick_p50": pctl(xfer, 0.50),
+                "transfer_bytes_total": s.decode_transfer_bytes,
+                "prefill_transfer_bytes_total": s.prefill_transfer_bytes,
+                "prefill_forwards": s.prefill_forwards,
+                "prefill_requests": s.prefill_requests,
+                "compiled_steps": s.engine.decode_cache_size(),
+            }
             return {
+                "decode": decode,
                 "steps": s.steps, "active_slots": s.active,
                 "pending": s.pending,
                 "pending_high_water": s.pending_high_water,

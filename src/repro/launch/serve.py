@@ -33,7 +33,7 @@ from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
 def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               max_batch: int = 8, full: bool = False,
               seed: int = 0, num_slots: int = 4,
-              max_queue: int = 64,
+              max_queue: int = 64, generate_token_budget=None,
               default_deadline_ms=None) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
@@ -59,6 +59,7 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
     ensemble = Ensemble(members, max_batch=max_batch)
     return FlexServeApp(registry, ensemble, engine, num_slots=num_slots,
                         max_queue=max_queue,
+                        generate_token_budget=generate_token_budget,
                         default_deadline_ms=default_deadline_ms)
 
 
@@ -66,6 +67,7 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     max_len: int = 256, max_batch: int = 8,
                     full: bool = False, seed: int = 0,
                     num_slots: int = 4, max_queue: int = 64,
+                    generate_token_budget=None,
                     default_deadline_ms=None) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
@@ -99,6 +101,7 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
     manager.bootstrap(member_names)
     app = FlexServeApp(manager=manager, num_slots=num_slots,
                        max_queue=max_queue,
+                       generate_token_budget=generate_token_budget,
                        default_deadline_ms=default_deadline_ms)
     if engine_member is not None and app.generation is not None:
         res = manager.load_engine(engine_member)
@@ -119,8 +122,12 @@ def main(argv=None) -> int:
     ap.add_argument("--num-slots", type=int, default=4,
                     help="continuous-batching decode slots per engine")
     ap.add_argument("--max-queue", type=int, default=64,
-                    help="admission budget (rows/prompts) per plane; "
+                    help="admission budget (rows) for the infer plane; "
                          "excess load is shed as 429 + Retry-After")
+    ap.add_argument("--generate-token-budget", type=int, default=None,
+                    help="generate-plane admission budget in TOKEN units "
+                         "(prompt + requested max_new_tokens per request; "
+                         "default 32 * max-queue)")
     ap.add_argument("--default-deadline-ms", type=float, default=None,
                     help="deadline applied to requests that don't carry "
                          "one; past-deadline requests drop as 504 before "
@@ -134,11 +141,20 @@ def main(argv=None) -> int:
     kw = dict(num_classes=args.num_classes, max_len=args.max_len,
               max_batch=args.max_batch, full=args.full,
               num_slots=args.num_slots, max_queue=args.max_queue,
+              generate_token_budget=args.generate_token_budget,
               default_deadline_ms=args.default_deadline_ms)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:
         app = build_app(args.ensemble, **kw)
+    if (app.generation is not None and app.generation.ready
+            and app.manager is None):
+        # pre-compile the decode data path (fused decode step, batched-
+        # prefill buckets, slot scatter) so the first live streams never
+        # pay compile latency.  Store-backed boots skip this: the
+        # manager's load_engine already warmed before flipping the alias.
+        warm_s = app.generation.entry_for().service.warm()
+        print(f"[serve] decode path warm in {warm_s:.1f}s")
     server = FlexServeServer(app, host=args.host, port=args.port)
     host, port = server.address
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "

@@ -10,9 +10,15 @@ keep ad-hoc per-request bookkeeping; they read the context.
 ``AdmissionController`` is the overload policy in one place:
 
   * **Bounded queues** — each plane ("infer", "generate") admits at most
-    ``max_queue`` cost units (rows / prompts) at a time.  Excess load is
-    SHED at admission with a 429 + ``Retry-After`` instead of growing an
-    unbounded queue until everyone's latency is ruined.
+    its budget in cost units at a time.  Excess load is SHED at admission
+    with a 429 + ``Retry-After`` instead of growing an unbounded queue
+    until everyone's latency is ruined.  The infer plane costs ROWS (the
+    thing that occupies device batches); the generate plane costs TOKENS
+    — prompt length + requested ``max_new_tokens`` — because a decode
+    request's hold on the device is proportional to its token footprint,
+    not its prompt count: a single 100k-token request must not slip under
+    a row-count budget as "1 unit" (``plane_budgets`` overrides the
+    default ``max_queue`` per plane, in that plane's units).
 
   * **Cheapest-first rejection** — two priority classes.  ``bulk`` may
     only occupy ``bulk_fraction`` of a plane's budget, so under pressure
@@ -166,15 +172,32 @@ class AdmissionController:
 
     def __init__(self, *, max_queue: int = 64, bulk_fraction: float = 0.5,
                  default_deadline_ms: Optional[float] = None,
-                 min_retry_after_s: float = 0.05):
+                 min_retry_after_s: float = 0.05,
+                 plane_budgets: Optional[Dict[str, int]] = None):
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         self.max_queue = max_queue
+        self.bulk_fraction = bulk_fraction
         self.bulk_max = max(1, int(max_queue * bulk_fraction))
+        # per-plane budget overrides, each in ITS plane's cost units
+        # (e.g. {"generate": tokens}); planes not named use max_queue
+        self.plane_budgets = dict(plane_budgets or {})
+        for name, budget in self.plane_budgets.items():
+            if budget < 1:
+                raise ValueError(f"plane budget {name!r} must be >= 1")
         self.default_deadline_ms = default_deadline_ms
         self.min_retry_after_s = min_retry_after_s
         self._lock = threading.Lock()
         self._planes: Dict[str, Dict[str, Any]] = {}
+
+    def budget_for(self, plane: str) -> int:
+        return self.plane_budgets.get(plane, self.max_queue)
+
+    def _bulk_max_for(self, plane: str) -> int:
+        if plane in self.plane_budgets:
+            return max(1, int(self.plane_budgets[plane]
+                              * self.bulk_fraction))
+        return self.bulk_max
 
     # --- context ----------------------------------------------------------------
 
@@ -215,19 +238,21 @@ class AdmissionController:
                     f"deadline exceeded before admission "
                     f"({ctx.trace_id or 'request'})")
             depth = sum(st["depth"].values())
+            budget = self.budget_for(plane)
             # bulk is capped at its OWN occupancy share (not total depth:
             # interactive-only load must not starve bulk out of a plane
             # with free budget), and everyone is capped at the total.
-            over = depth + cost > self.max_queue
+            over = depth + cost > budget
             if ctx.priority == "bulk":
-                over = over or (st["depth"]["bulk"] + cost > self.bulk_max)
+                over = over or (st["depth"]["bulk"] + cost
+                                > self._bulk_max_for(plane))
             # a single over-budget request still admits into an EMPTY
             # plane (otherwise it could never run at all)
             if over and depth > 0:
                 st["shed"][ctx.priority] += 1
                 raise ShedError(
                     f"{plane} queue full "
-                    f"({depth}/{self.max_queue} units, "
+                    f"({depth}/{budget} units, "
                     f"priority={ctx.priority})",
                     retry_after_s=self._retry_after_locked(st, depth + cost))
             st["depth"][ctx.priority] += cost
@@ -287,6 +312,7 @@ class AdmissionController:
                 name: {
                     "depth": dict(st["depth"]),
                     "depth_total": sum(st["depth"].values()),
+                    "budget": self.budget_for(name),
                     "high_water": st["high_water"],
                     "admitted": dict(st["admitted"]),
                     "shed": dict(st["shed"]),

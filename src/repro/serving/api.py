@@ -18,7 +18,10 @@ Request plane (every inference route; all fields optional):
                    occupy a fraction of each queue's budget, so under
                    overload bulk sheds first (cheapest-first rejection)
                    and interactive admissions overtake a bulk backlog
-                   (weighted dequeue).
+                   (weighted dequeue).  Budgets are charged in ROWS on
+                   the infer plane and in TOKENS (prompt length +
+                   requested max_new_tokens) on the generate plane, so a
+                   single huge generation can't slip in as "one row".
     "deadline_ms": per-request latency budget from arrival.  A request
                    past its deadline is dropped at the next hand-off
                    (before it costs a forward pass) -> 504.
@@ -94,6 +97,15 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                                     request_latency_p50_ms/…_p95_ms,
                                     ttft_p50_ms/…_p95_ms,
                                     inter_token_p50_ms/…_p95_ms,
+                                    decode: {device_sampling, ticks,
+                                             host_ms_p50/p95,
+                                             device_ms_p50/p95,
+                                             prefill_ms_p50,
+                                             transfer_bytes_per_tick_p50,
+                                             transfer_bytes_total,
+                                             prefill_forwards,
+                                             prefill_requests,
+                                             compiled_steps},
                                     streams: {started, completed,
                                               cancelled, failed},
                                     engines: {alias: {...}}}}

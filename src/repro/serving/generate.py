@@ -13,7 +13,12 @@ after the HTTP handler has parsed it:
 
   * **Per-request sampling** — every request carries its own
     ``SamplingParams``; slots sharing a decode batch sample independently
-    (see repro.core.sampling).
+    ON DEVICE through the fused decode step (see repro.core.sampling):
+    per tick only the sampled token ids cross to host, and the first
+    token comes from the scheduler's BATCHED bucketed prefill (queued
+    same-signature admissions share one forward).  Per-scheduler decode
+    breakdown (host/device ms, transfer bytes, prefill batching) is on
+    ``stats()`` under ``"decode"``.
 
   * **Versioned engines** — the service maps version ALIASES ("stable",
     "canary", ...) to engine entries, mirroring the lifecycle manager's
@@ -311,17 +316,22 @@ class GenerationService:
 
     def install(self, name: str, version: int, engine: InferenceEngine, *,
                 alias: Optional[str] = None,
-                num_slots: Optional[int] = None) -> Dict[str, Any]:
+                num_slots: Optional[int] = None,
+                warm: bool = False) -> Dict[str, Any]:
         """Serve ``engine`` as ``name@vversion`` under ``alias``.
 
         The swap is atomic for admission: requests submitted after this
         returns (and any racing submit that wins the pointer swap) land on
         the NEW engine.  Requests already admitted keep decoding on the
         old engine until they finish — the old scheduler is drained, then
-        closed, so no in-flight stream is truncated by a swap."""
+        closed, so no in-flight stream is truncated by a swap.  ``warm``
+        pre-compiles the decode data path (fused step, batched-prefill
+        buckets, slot scatter) BEFORE the alias flips, so the first live
+        streams never pay compile latency."""
         service = SchedulerService(engine,
                                    num_slots=num_slots or self.num_slots,
                                    max_pending=self.max_pending)
+        warm_s = service.warm() if warm else 0.0
         entry = _EngineEntry(name, version, service)
         with self._lock:
             if self._closed:
@@ -345,7 +355,8 @@ class GenerationService:
             self._swaps += 1
         return {"alias": alias, "engine": entry.label,
                 "previous_engine": old.label if old is not None else None,
-                "drained": drained, "drain_ms": 1e3 * drain_s}
+                "drained": drained, "drain_ms": 1e3 * drain_s,
+                "warm_ms": 1e3 * warm_s}
 
     @property
     def ready(self) -> bool:
@@ -471,7 +482,17 @@ class GenerationService:
                     "request_latency_p50_ms": 0.0,
                     "request_latency_p95_ms": 0.0,
                     "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,
-                    "inter_token_p50_ms": 0.0, "inter_token_p95_ms": 0.0})
+                    "inter_token_p50_ms": 0.0, "inter_token_p95_ms": 0.0,
+                    "decode": {"device_sampling": True, "ticks": 0,
+                               "host_ms_p50": 0.0, "host_ms_p95": 0.0,
+                               "device_ms_p50": 0.0, "device_ms_p95": 0.0,
+                               "prefill_ms_p50": 0.0,
+                               "transfer_bytes_per_tick_p50": 0,
+                               "transfer_bytes_total": 0,
+                               "prefill_transfer_bytes_total": 0,
+                               "prefill_forwards": 0,
+                               "prefill_requests": 0,
+                               "compiled_steps": None}})
         default = engines.get(self.default_alias)
         if default is not None:
             out.update({k: v for k, v in default.items() if k != "engine"})

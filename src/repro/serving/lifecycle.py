@@ -288,11 +288,15 @@ class ModelManager:
         return self.generation
 
     def load_engine(self, name: str, version: Optional[int] = None, *,
-                    alias: Optional[str] = None) -> Dict[str, Any]:
+                    alias: Optional[str] = None,
+                    warm: bool = True) -> Dict[str, Any]:
         """Materialize a store version (restore + hash verify) as an
         InferenceEngine and hot-swap it under an engine alias.  In-flight
         decode streams drain on the displaced engine before it is closed;
-        new requests land on the new engine immediately."""
+        new requests land on the new engine immediately.  ``warm``
+        (default) pre-compiles the new engine's decode data path BEFORE
+        the alias flips, so the swap never stalls live streams on jit
+        compiles (mirrors the model plane's warm-before-publish)."""
         gen = self._require_generation()
         alias = alias or self.default_alias
         with self._admin_lock:
@@ -304,7 +308,8 @@ class ModelManager:
             manifest = self.store.manifest(name, version)  # raises StoreError
             rm = self._materialize(name, version, manifest)
             engine = self._engine_factory(manifest, rm.model, rm.params)
-            swap = gen.install(name, version, engine, alias=alias)
+            swap = gen.install(name, version, engine, alias=alias,
+                               warm=warm)
             old = self._engine_active.get(alias)
             self._engine_active[alias] = (name, version)
             if old is not None and old != (name, version):
@@ -315,7 +320,8 @@ class ModelManager:
                     "manifest": manifest, **swap}
 
     def rollback_engine(self, name: Optional[str] = None, *,
-                        alias: Optional[str] = None) -> Dict[str, Any]:
+                        alias: Optional[str] = None,
+                        warm: bool = True) -> Dict[str, Any]:
         """Swap an engine alias back to its previously active version."""
         alias = alias or self.default_alias
         with self._admin_lock:
@@ -327,7 +333,8 @@ class ModelManager:
                 raise LifecycleError(
                     f"alias {alias!r} previously served engine "
                     f"{prev[0]!r} v{prev[1]}, not {name!r}")
-            result = self.load_engine(prev[0], prev[1], alias=alias)
+            result = self.load_engine(prev[0], prev[1], alias=alias,
+                                      warm=warm)
             with self._stats_lock:
                 self._counters["engine_rollbacks"] += 1
                 self._counters["engine_loads"] -= 1   # rollback, not a load

@@ -69,7 +69,8 @@ class FlexServeApp:
                  max_queue: int = 64,
                  bulk_fraction: float = 0.5,
                  default_deadline_ms: Optional[float] = None,
-                 max_stream_buffer: int = 32):
+                 max_stream_buffer: int = 32,
+                 generate_token_budget: Optional[int] = None):
         if manager is not None and ensemble is not None:
             raise ValueError("pass either a static ensemble or a manager")
         self.manager = manager
@@ -83,9 +84,17 @@ class FlexServeApp:
         self._closing = False
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
+        # the generate plane is budgeted in TOKEN units (prompt length +
+        # requested max_new_tokens): a single huge request can't slip in
+        # as "one row".  Default scales the row budget by a typical
+        # per-request token footprint.
+        self.generate_token_budget = (
+            generate_token_budget if generate_token_budget is not None
+            else 32 * max_queue)
         self.admission = AdmissionController(
             max_queue=max_queue, bulk_fraction=bulk_fraction,
-            default_deadline_ms=default_deadline_ms)
+            default_deadline_ms=default_deadline_ms,
+            plane_budgets={"generate": self.generate_token_budget})
         self.coalescer: Optional[BatchCoalescer] = None
         self.generation: Optional[GenerationService] = None
         if coalesce and (ensemble is not None or manager is not None):
@@ -308,10 +317,12 @@ class FlexServeApp:
         req = api.parse_request(body)
         version = api.opt_int(req, "version", 0) or None
         alias = req.get("alias")
+        warm = bool(req.get("warm", True))
         try:
             if action == "load":
-                return mgr.load_engine(name, version, alias=alias)
-            return mgr.rollback_engine(name, alias=alias)
+                return mgr.load_engine(name, version, alias=alias,
+                                       warm=warm)
+            return mgr.rollback_engine(name, alias=alias, warm=warm)
         except StoreError as e:
             raise api.ApiError(404, str(e)) from None
         except KeyError as e:
@@ -426,7 +437,9 @@ class FlexServeApp:
         alias = req.get("target")
         if req.get("stream"):
             return self._generate_stream(prompts, sampling, alias, ctx)
-        ticket = self._admit("generate", ctx, len(prompts))
+        cost = sum(len(p) for p in prompts if isinstance(p, list)) \
+            + len(prompts) * sampling.max_new_tokens
+        ticket = self._admit("generate", ctx, cost)
         try:
             if self.generation is not None and (self.generation.ready
                                                 or alias is not None):
@@ -475,7 +488,9 @@ class FlexServeApp:
         if len(prompts) != 1:
             raise api.ApiError(
                 400, "streaming supports exactly one prompt per request")
-        ticket = self._admit("generate", ctx, 1)
+        cost = (len(prompts[0]) if isinstance(prompts[0], list) else 1) \
+            + sampling.max_new_tokens
+        ticket = self._admit("generate", ctx, cost)
         try:
             # the ticket's budget hold lives as long as the stream: it is
             # released by the terminal event or by disconnect-cancellation

@@ -131,6 +131,55 @@ def test_release_is_idempotent_and_oversize_admits_when_empty():
     assert ac.stats()["planes"]["infer"]["depth_total"] == 0
 
 
+def test_generate_cost_is_tokens_not_rows():
+    """ROADMAP cost-model item: the generate plane is budgeted in TOKEN
+    units (prompt length + requested max_new_tokens).  A single huge
+    request that would count as "1 row" cannot slip under the budget
+    while the plane is busy."""
+    ac = AdmissionController(max_queue=8,
+                             plane_budgets={"generate": 256})
+    assert ac.budget_for("generate") == 256
+    assert ac.budget_for("infer") == 8
+    small = ac.admit("generate", _ctx(), cost=4 + 16)   # busy plane
+    # one 100k-token request is ONE prompt — but 100k+ cost units
+    with pytest.raises(ShedError):
+        ac.admit("generate", _ctx(), cost=100_000 + 16)
+    st = ac.stats()["planes"]["generate"]
+    assert st["shed"]["interactive"] == 1 and st["budget"] == 256
+    # a token-sized request still fits
+    ac.admit("generate", _ctx(), cost=3 + 8)
+    small.release()
+
+
+def test_server_charges_generate_plane_in_tokens(engine):
+    """End to end: /v1/generate admission depth moves by prompt tokens +
+    max_new_tokens, and an oversized request is shed 429 while the plane
+    is busy (never by rows)."""
+    app = FlexServeApp(ModelRegistry(), None, engine, num_slots=2,
+                       max_queue=4, generate_token_budget=64)
+    srv = FlexServeServer(app).start()
+    cl = FlexServeClient(*srv.address, retries=0)
+    try:
+        out = cl.generate([[1, 2, 3]], max_new_tokens=4)
+        assert len(out["outputs"][0]) == 4
+        plane = cl.metrics()["admission"]["planes"]["generate"]
+        assert plane["budget"] == 64
+        assert plane["high_water"] == 3 + 4        # tokens, not 1 row
+        # hold the plane busy with a stream, then try to slip a huge one
+        stream = cl.generate_stream([1, 2], max_new_tokens=8)
+        assert next(stream)["event"] == "token"
+        probe = FlexServeClient(*srv.address, retries=0)
+        with pytest.raises(HTTPStatusError) as e:
+            probe.generate([[5] * 10], max_new_tokens=1000)
+        assert e.value.status == 429
+        for _ in stream:                           # drain politely
+            pass
+        probe.close()
+    finally:
+        cl.close()
+        srv.stop()
+
+
 def test_admit_expired_is_deadline_error():
     ac = AdmissionController(max_queue=4)
     expired = _ctx(deadline_ms=0.001)

@@ -132,8 +132,11 @@ def test_cancel_queued_request_releases_waiter(engine):
     step(), so the completion event was never set)."""
     svc = SchedulerService(engine, num_slots=1)
     try:
+        # a budget the driver cannot burn through while this test sets up
+        # on a contended box (the queued request must still be QUEUED when
+        # cancel() lands, or the assertion races)
         blocker = svc.submit_request(
-            [1, 2], sampling=SamplingParams(max_new_tokens=100),
+            [1, 2], sampling=SamplingParams(max_new_tokens=100_000),
             sink=lambda *a: None)
         deadline = time.time() + 5
         while svc.stats()["active_slots"] == 0 and time.time() < deadline:
