@@ -14,7 +14,10 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit, time_call
 from repro.kernels.decode_attention import (decode_attention,
-                                            decode_attention_oracle)
+                                            decode_attention_oracle,
+                                            paged_decode_attention,
+                                            paged_decode_attention_oracle,
+                                            resolved_interpret)
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.mamba2_ssd import ssd, ssd_ref
 from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
@@ -23,6 +26,11 @@ RNG = jax.random.PRNGKey(0)
 
 
 def run() -> None:
+    # which execution mode the Pallas kernels below actually ran in —
+    # a TPU row claiming kernel perf must show interpret=False here
+    mode = "interpret" if resolved_interpret() else "compiled"
+    emit(f"pallas_mode_{mode}", 0.0,
+         f"backend={jax.default_backend()}")
     # flash attention @ prefill-like shape
     B, S, H, K, hd = 1, 512, 8, 2, 64
     ks = jax.random.split(RNG, 3)
@@ -49,6 +57,23 @@ def run() -> None:
     err = float(jnp.abs(decode_attention(q1, ck, cv, lengths)
                         - oracle(q1, ck, cv, lengths)).max())
     emit("decode_attention_ref_4096", t, f"kernel_max_err={err:.2e}")
+
+    # paged decode attention @ the same shape through a shuffled page table
+    ps = 512
+    MP = Smax // ps
+    P = B * MP + 1
+    perm = jax.random.permutation(ks[3], P - 1) + 1
+    table = perm[:B * MP].reshape(B, MP).astype(jnp.int32)
+    kp = jnp.zeros((P, ps, K, hd)).at[table.reshape(-1)].set(
+        ck.reshape(B * MP, ps, K, hd))
+    vp = jnp.zeros((P, ps, K, hd)).at[table.reshape(-1)].set(
+        cv.reshape(B * MP, ps, K, hd))
+    po = jax.jit(paged_decode_attention_oracle)
+    t = time_call(po, q1, kp, vp, table, lengths)
+    err = float(jnp.abs(paged_decode_attention(q1, kp, vp, table, lengths)
+                        - oracle(q1, ck, cv, lengths)).max())
+    emit("paged_decode_attention_ref_4096", t,
+         f"kernel_max_err={err:.2e}")
 
     # rwkv6 wkv @ chunked-prefill shape
     B, T, H, N = 1, 256, 4, 64

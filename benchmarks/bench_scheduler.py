@@ -20,12 +20,24 @@ Scenarios (median-of-rounds — this is a noisy 2-core box):
       The original mixed-budget comparison; derived = decode-step
       savings.
 
+  decode_paged_sampling / decode_dense_fullcache / paged_capacity_16req
+      Paged-KV engine vs the dense full-cache engine (``ring_cache``
+      off so the dense baseline holds honest per-slot caches).  One
+      ``MemoryLedger`` budget sized for exactly 2 dense slots; the
+      paged engine buys a page pool against the same budget and must
+      sustain strictly more concurrent decode slots.
+
 Functional self-checks (raise on violation, recorded as junit testcases
 with ``--junit``, which is how CI keeps this path from rotting):
   * per decode tick, the device path's sampling transfer is exactly
     ``num_slots * 4`` bytes;
   * batched prefill admits >=2 queued same-bucket requests per forward;
-  * both paths decode identical GREEDY streams.
+  * both paths decode identical GREEDY streams;
+  * the paged pool fits the ledger budget and out-admits the dense
+    capacity under it;
+  * paged seeded streams are byte-identical to dense — across paging,
+    pause/resume (which must NOT re-prefill: O(1) page reattach), and
+    shared-prefix reuse (which must prefill each distinct prefix once).
 
 CLI smoke:  PYTHONPATH=src:. python -m benchmarks.bench_scheduler \
                 --rounds 2 --junit junit-bench-scheduler.xml
@@ -41,9 +53,10 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit
+from repro import opt
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
-                        SamplingParams)
+                        MemoryLedger, PagedInferenceEngine, SamplingParams)
 from repro.core.scheduler import pctl
 from repro.models import build_model
 
@@ -203,6 +216,131 @@ def run(rounds: int = 3) -> None:
     emit("static_batching_8req", t_stat / total_tokens * 1e6,
          f"decode_steps={static_steps};"
          f"step_savings={static_steps / max(steps, 1):.2f}x")
+
+    _paged_scenario(rounds)
+
+
+def _paged_scenario(rounds: int) -> None:
+    """Paged-vs-dense: capacity under one MemoryLedger budget, byte-exact
+    streams across paging / preemption / prefix sharing, O(1) resume, and
+    prefill-once-per-prefix — all hard self-checks (junit'd in CI)."""
+    # the dense baseline must hold FULL per-slot caches for an honest
+    # capacity comparison (ring caches would shrink them to the window)
+    opt.set_flags(ring_cache=False)
+    cfg = reduce_for_smoke(get_config("h2o-danube-1.8b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    dense = InferenceEngine(model, params, max_len=96, max_batch=8)
+
+    # one KV budget, both accountings: the dense path reserves max_len per
+    # slot; the paged path buys a page pool and meters actual context
+    probe = PagedInferenceEngine(model, params, max_len=96, max_batch=8,
+                                 page_size=16)
+    dense_slot_bytes = probe.max_pages_per_seq * probe.page_bytes
+    budget = 2 * dense_slot_bytes            # dense: exactly 2 slots
+    ledger = MemoryLedger(n_chips=1, hbm_per_chip=budget, headroom=0.0)
+    paged = PagedInferenceEngine(model, params, max_len=96, max_batch=8,
+                                 page_size=16, hbm_budget_bytes=budget)
+    ledger.add_kv_pages("h2o-danube-1.8b", paged.page_bytes,
+                        paged.num_pages, shard_factor=1)
+    _check("paged_pool_fits_ledger_budget", ledger.fits(),
+           f"{ledger.bytes_per_chip}B pool over {budget}B budget")
+    dense_slots = budget // dense_slot_bytes
+
+    # warm compiles off the clock (both engines are fresh builds)
+    _decode_round(paged, True, 16, 2, 8)
+    _decode_round(dense, True, 16, 2, 8)
+
+    _, paged_tps, _ = _decode_scenario(paged, "decode_paged_sampling", True,
+                                       rounds=rounds)
+    _, dense_tps, _ = _decode_scenario(dense, "decode_dense_fullcache",
+                                       True, rounds=rounds)
+    emit("decode_paged_vs_dense", 0.0,
+         f"paged_over_dense={paged_tps / max(dense_tps, 1e-9):.2f}x")
+
+    # --- capacity: strictly more concurrent decode under the same budget ---
+    sched = ContinuousBatchingScheduler(paged, num_slots=8)
+    reqs = [sched.submit(p, sampling=s) for p, s in _workload(16, 12)]
+    high_water = peak_util = 0.0
+    while not sched.idle():
+        sched.step()
+        high_water = max(high_water, sched.active)
+        peak_util = max(peak_util, sched.pager.utilization())
+    high_water = int(high_water)
+    _check("paged_concurrency_exceeds_dense_under_budget",
+           high_water > dense_slots and all(r.done for r in reqs),
+           f"paged high-water {high_water} slots vs dense capacity "
+           f"{dense_slots} under {budget}B")
+    stats = sched.pager_stats()
+    emit("paged_capacity_16req", 0.0,
+         f"concurrent_slots={high_water};dense_slots={dense_slots};"
+         f"peak_page_utilization={peak_util:.2f};"
+         f"preempt_recompute={stats['preempt_recompute']}")
+
+    # --- byte-exact seeded streams: paged (same run as above) vs dense ---
+    ref = ContinuousBatchingScheduler(dense, num_slots=8)
+    ref_reqs = [ref.submit(p, sampling=s) for p, s in _workload(16, 12)]
+    ref.run()
+    _check("paged_streams_byte_match_dense",
+           [r.output for r in reqs] == [r.output for r in ref_reqs],
+           "paged and dense seeded streams diverged")
+
+    # --- preemption: park/resume without recompute, stream unchanged ---
+    def pause_run(engine):
+        s = ContinuousBatchingScheduler(engine, num_slots=2)
+        a = s.submit([5, 6, 7], sampling=SamplingParams(
+            max_new_tokens=16, temperature=0.9, seed=42))
+        b = s.submit([8, 9], sampling=SamplingParams(max_new_tokens=16))
+        for _ in range(4):
+            s.step()
+        s.pause(a)
+        for _ in range(3):
+            s.step()
+        s.resume(a)
+        s.run()
+        return s, [a.output, b.output]
+
+    ps_, paged_out = pause_run(paged)
+    ds_, dense_out = pause_run(dense)
+    pstats = ps_.pager_stats()
+    _check("resume_without_recompute",
+           pstats["resumes_without_recompute"] >= 1
+           and ps_.prefill_requests == 2 and ds_.prefill_requests == 3,
+           f"fast_resumes={pstats['resumes_without_recompute']}, paged "
+           f"prefilled {ps_.prefill_requests} (dense {ds_.prefill_requests})")
+    _check("preempted_stream_byte_stable", paged_out == dense_out,
+           "pause/resume changed a seeded stream")
+
+    # --- shared prefixes: one prefill per distinct prefix ---
+    prefix = [11 + (i % 5) for i in range(24)]       # 1 full shared page
+    wave = [prefix + [50 + i] * 3 for i in range(3)]
+    s2 = ContinuousBatchingScheduler(paged, num_slots=4)
+    w1 = [s2.submit(p, sampling=SamplingParams(max_new_tokens=4))
+          for p in wave]
+    s2.run()
+    w2 = [s2.submit(p, sampling=SamplingParams(max_new_tokens=4))
+          for p in wave]
+    s2.run()
+    st2 = s2.pager_stats()
+    _check("prefix_prefills_once",
+           st2["prefill_tokens_reused"] >= 16 * len(wave)
+           and st2["prefix_hits"] >= len(wave),
+           f"reused={st2['prefill_tokens_reused']} tokens, "
+           f"hits={st2['prefix_hits']}")
+    d2 = ContinuousBatchingScheduler(dense, num_slots=4)
+    v1 = [d2.submit(p, sampling=SamplingParams(max_new_tokens=4))
+          for p in wave]
+    d2.run()
+    v2 = [d2.submit(p, sampling=SamplingParams(max_new_tokens=4))
+          for p in wave]
+    d2.run()
+    _check("prefix_shared_streams_byte_match_dense",
+           [r.output for r in w1 + w2] == [r.output for r in v1 + v2],
+           "prefix sharing changed a stream")
+    emit("paged_prefix_reuse", 0.0,
+         f"hit_rate={st2['prefix_hit_rate']:.2f};"
+         f"tokens_reused={st2['prefill_tokens_reused']};"
+         f"tokens_forwarded={st2['prefill_tokens_forwarded']}")
 
 
 def _write_junit(path: str) -> None:

@@ -1,6 +1,9 @@
 from repro.core.batching import BucketSpec, FlexibleBatcher, pad_sequences
-from repro.core.engine import InferenceEngine
+from repro.core.engine import (InferenceEngine, PagedInferenceEngine,
+                               page_kv_bytes)
 from repro.core.ensemble import Ensemble, EnsembleMember
+from repro.core.kv_pager import (BlockAllocator, KVPager, PagerOOM,
+                                 PrefixCache, pages_for_budget)
 from repro.core.memory import MemoryLedger, tree_bytes
 from repro.core.registry import ModelRegistry
 from repro.core.sampling import (SamplingError, SamplingParams, TokenSampler,
@@ -10,6 +13,8 @@ from repro.core.scheduler import (ContinuousBatchingScheduler, Request,
 
 __all__ = [
     "BucketSpec", "FlexibleBatcher", "pad_sequences", "InferenceEngine",
+    "PagedInferenceEngine", "page_kv_bytes", "BlockAllocator", "KVPager",
+    "PagerOOM", "PrefixCache", "pages_for_budget",
     "Ensemble", "EnsembleMember", "MemoryLedger", "tree_bytes",
     "ModelRegistry", "ContinuousBatchingScheduler", "Request",
     "SchedulerService", "SamplingError", "SamplingParams", "TokenSampler",

@@ -292,6 +292,127 @@ class InferenceEngine:
                                 steps=steps, finish_reasons=reasons)
 
 
+class PagedInferenceEngine(InferenceEngine):
+    """InferenceEngine whose decode state is a block-paged KV pool.
+
+    Same public decode contract as the dense engine — ``decode_sample`` /
+    ``sample`` / ``decode_cache_size`` are inherited unchanged, so the
+    scheduler's decode tick is identical — but the state carries a shared
+    ``(layers, num_pages, page_size, K, hd)`` page pool plus a per-slot
+    ``(num_slots, max_pages_per_seq)`` page table instead of per-slot
+    worst-case caches.  Page bookkeeping (allocation, refcounts, prefix
+    sharing) lives host-side in the scheduler's ``KVPager``; this class
+    owns only the jitted device programs.
+
+    Prefill is context-aware: ``paged_prefill`` runs the SUFFIX of each
+    prompt (what its shared prefix doesn't cover) and commits the new KV
+    straight into freshly allocated pool pages — there is no per-group
+    cache to scatter with ``insert_rows`` afterwards."""
+
+    def __init__(self, model: Model, params, *, max_len: int = 2048,
+                 max_batch: int = 8, window: Optional[int] = None,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 hbm_budget_bytes: Optional[int] = None,
+                 donate_state: bool = True):
+        from repro.core.kv_pager import pages_for_budget
+        from repro.models.paged import (init_paged_state, paged_decode_step,
+                                        paged_prefill, supports_paging)
+        cfg = model.config
+        if not supports_paging(cfg):
+            raise ValueError(f"{cfg.name}: no paged KV path for family "
+                             f"{cfg.family}/{cfg.attn_kind}")
+        if max_len % page_size:
+            raise ValueError(f"max_len {max_len} not a multiple of "
+                             f"page_size {page_size}")
+        super().__init__(model, params, max_len=max_len, max_batch=max_batch,
+                         window=window, donate_state=donate_state)
+        self.paged = True
+        self.page_size = page_size
+        self.max_pages_per_seq = max_len // page_size
+        self.page_bytes = page_kv_bytes(cfg, page_size)
+        if num_pages is None:
+            if hbm_budget_bytes is not None:
+                num_pages = pages_for_budget(hbm_budget_bytes,
+                                             self.page_bytes)
+            else:
+                # dense-equivalent worst case + the reserved dump page
+                num_pages = max_batch * self.max_pages_per_seq + 1
+        if num_pages - 1 < self.max_pages_per_seq:
+            raise ValueError(
+                f"{num_pages} pages cannot hold even one max-length "
+                f"sequence ({self.max_pages_per_seq} pages)")
+        self.num_pages = num_pages
+        # context-page-count buckets for the shared-prefix prefill variants
+        self.ctx_buckets = BucketSpec.pow2(self.max_pages_per_seq,
+                                           min_size=1)
+        self._init_paged_state = init_paged_state
+
+        kw: Dict[str, Any] = {"page_size": page_size}
+        if window is not None:
+            kw["window"] = window
+        self._decode = jax.jit(
+            functools.partial(
+                lambda p_, t, s, **k: paged_decode_step(p_, t, s, cfg, **k),
+                **kw),
+            donate_argnums=(2,) if donate_state else ())
+
+        def decode_and_sample(params_, token, state, temp, top_k, top_p,
+                              key, ctr):
+            logits, state = paged_decode_step(params_, token, state, cfg,
+                                              **kw)
+            toks = sample_tokens(logits, temp, top_k, top_p, key, ctr)
+            return toks, state, ctr + 1
+
+        self._decode_sample = jax.jit(
+            decode_and_sample,
+            donate_argnums=(2,) if donate_state else ())
+
+        def prefill_fn(params_, tokens, lengths, state, ctx_table, ctx_lens,
+                       dest_table):
+            return paged_prefill(params_, tokens, lengths, state, ctx_table,
+                                 ctx_lens, dest_table, cfg, **kw)
+
+        self._paged_prefill = jax.jit(
+            prefill_fn, donate_argnums=(3,) if donate_state else ())
+
+    def ctx_bucket_for(self, n_ctx_pages: int) -> int:
+        """Bucketed context-page count (0 stays 0: the no-sharing prefill
+        variant is exactly the dense computation)."""
+        if n_ctx_pages == 0:
+            return 0
+        return self.ctx_buckets.bucket_for(n_ctx_pages)
+
+    def new_state(self, batch: int):
+        return self._init_paged_state(self.model.config, batch,
+                                      self.num_pages, self.page_size,
+                                      self.max_pages_per_seq)
+
+    def paged_prefill(self, state, tokens, lengths, ctx_table, ctx_lens,
+                      dest_table):
+        """Suffix prefill into pool pages.  ``tokens``/``lengths`` are the
+        bucketed per-row suffixes, ``ctx_table`` the shared prefix pages
+        each row attends to, ``dest_table`` the pages the new KV lands in.
+        Returns ``(first-token logits, new state)`` — the pool is updated
+        in place (donated); table/length device arrays pass through."""
+        self.prefill_calls += 1
+        return self._paged_prefill(self.params, tokens, lengths, state,
+                                   ctx_table, ctx_lens, dest_table)
+
+    def generate(self, *args, **kwargs):
+        raise NotImplementedError(
+            "PagedInferenceEngine has no standalone generate(): page "
+            "allocation lives in the scheduler — drive it through "
+            "ContinuousBatchingScheduler / SchedulerService")
+
+
+def page_kv_bytes(cfg, page_size: int) -> int:
+    """HBM bytes one KV page costs across every layer (k and v)."""
+    from repro.models.attention import cache_dtype
+    itemsize = jnp.dtype(cache_dtype(cfg)).itemsize
+    return (cfg.num_layers * page_size * cfg.num_kv_heads * cfg.head_dim *
+            itemsize * 2)
+
+
 def pad_batch_rows(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
     if arr.shape[0] == n:
         return arr

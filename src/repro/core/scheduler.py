@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import GenerationResult, InferenceEngine
+from repro.core.kv_pager import KVPager, PagerOOM, PrefixMatch
 from repro.core.sampling import (SamplingParams, TokenSampler, base_key)
 
 # sink(request, token, done): token is None only for a terminal
@@ -99,6 +100,10 @@ class Request:
     finished_at: Optional[float] = None
     sampler: Optional[TokenSampler] = None
     base_key: Optional[np.ndarray] = None   # raw uint32[2] device rng key
+    # paged engines only: the KV pages this request owns references to.
+    # Pages stay pinned while the request parks, so resume is O(1)
+    # (re-point the slot's page-table row, no recompute).
+    pages: Optional[List[int]] = None
 
     @property
     def priority(self) -> str:
@@ -172,6 +177,20 @@ class ContinuousBatchingScheduler:
         self._samp_dev: Optional[Dict[str, Any]] = None
         self._tok_dev: Optional[Any] = None
         self._ctr_dev: Optional[Any] = None
+        # paged engine: host-side page bookkeeping.  The device only ever
+        # sees the (num_slots, max_pages) int32 page table + per-slot
+        # lengths, re-uploaded (~KB) only when a slot changes hands.
+        self.paged = bool(getattr(engine, "paged", False))
+        if self.paged:
+            self.pager = KVPager(engine.num_pages, engine.page_size)
+            self._table = np.zeros(
+                (num_slots, engine.max_pages_per_seq), np.int32)
+            self._lengths = np.zeros((num_slots,), np.int32)
+            self._state_dirty = True
+            self.resumes_fast = 0           # O(1) reattaches (no recompute)
+            self.preempt_recompute = 0      # OOM-forced recompute preempts
+            self.prefill_tokens_forwarded = 0
+            self.prefill_tokens_reused = 0
         # recent finished requests (bounded — see _finish); completed_total
         # is the lifetime counter
         self.completed: List[Request] = []
@@ -289,8 +308,12 @@ class ContinuousBatchingScheduler:
         t_tick = time.perf_counter()
         finished = self._reap()
         prefill_s = self._admit(finished)
+        if self.paged:
+            self._ensure_decode_pages()
         if self.active == 0:
             return finished
+        if self.paged:
+            self._sync_paged_state()
         t_dev = time.perf_counter()
         if self.device_sampling:
             # fused decode + on-device sampling: ONLY the (num_slots,)
@@ -347,6 +370,10 @@ class ContinuousBatchingScheduler:
             else:
                 self._last_token[b] = t
                 self._ctr[b] = len(req.output)
+                if self.paged:
+                    # mirror the device's length += 1 for continuing rows
+                    # (no re-upload needed while nothing else changes)
+                    self._lengths[b] += 1
             self._notify(req, t)
         if self.device_sampling and self._samp_dev is not None:
             # no slot changed hands: next tick's inputs never leave the
@@ -395,6 +422,8 @@ class ContinuousBatchingScheduler:
         free = [b for b in range(self.num_slots) if self.slots[b] is None]
         if not free:
             return 0.0
+        if self.paged:
+            return self._admit_paged(finished, free)
         picked: List[Tuple[Request, int, Tuple]] = []
         while len(picked) < len(free):
             req = self._pop_next()
@@ -526,6 +555,228 @@ class ContinuousBatchingScheduler:
             self._notify(req, req.output[-1])
         return prefill_s
 
+    # --- paged admission ---------------------------------------------------------
+
+    def _admit_paged(self, finished: List[Request],
+                     free: List[int]) -> float:
+        """Paged-engine admission.  A previously-parked request that still
+        OWNS pages reattaches O(1): its slot's page-table row is re-pointed
+        at the pinned pages, no prefill forward, no recompute.  A fresh
+        request first matches its prompt against the prefix cache (shared
+        full pages join its table by reference), then allocates pages for
+        the remaining suffix only.  Allocation failure requeues the
+        request at the FRONT and stops admitting — pages free up as active
+        requests finish."""
+        ps = self.engine.page_size
+        picked: List[Tuple[Request, PrefixMatch, List[int],
+                           List[int], int, int]] = []
+        while len(picked) < len(free):
+            req = self._pop_next()
+            if req is None:
+                break
+            now = time.perf_counter()
+            if req.expired(now):
+                self.deadline_total += 1
+                self._finish(req, "deadline", now)
+                finished.append(req)
+                self._notify(req, None)
+                continue
+            if req.pages is not None:        # parked with pages pinned
+                self._reattach(req, free.pop(0))
+                continue
+            seed = req.prompt + req.output
+            match = self.pager.match_prefix(seed)
+            suffix = seed[match.ctx_tokens:]
+            try:
+                S = self.engine.seq_buckets.bucket_for(len(suffix))
+            except ValueError as err:
+                # cannot happen for requests this scheduler finished
+                # correctly (max_len ends them first) — defensive
+                self.pager.release(match.pages)
+                req.error = err
+                self._finish(req, "error", now)
+                finished.append(req)
+                self._notify(req, None)
+                continue
+            need = -(-len(seed) // ps) - len(match.pages)
+            try:
+                new_pages = self.pager.alloc(need)
+            except PagerOOM:
+                self.pager.release(match.pages)
+                self._queue_for(req).appendleft(req)
+                break
+            C = self.engine.ctx_bucket_for(len(match.pages))
+            picked.append((req, match, new_pages, suffix, S, C))
+        if not picked:
+            return 0.0
+        groups: Dict[Tuple[int, int], List] = {}
+        for item in picked:
+            groups.setdefault((item[4], item[5]), []).append(item)
+        prefill_s = 0.0
+        for (S, C), items in groups.items():
+            for i in range(0, len(items), self.max_prefill_batch):
+                prefill_s += self._prefill_group_paged(
+                    items[i:i + self.max_prefill_batch], S, C, free,
+                    finished)
+        return prefill_s
+
+    def _prefill_group_paged(self, items: List, S: int, C: int,
+                             free: List[int],
+                             finished: List[Request]) -> float:
+        """One bucketed SUFFIX prefill for a same-(seq, ctx)-bucket group:
+        each row's suffix attends to its shared context pages and commits
+        its KV straight into its freshly allocated pool pages — no group
+        state, no slot scatter.  Newly completed full pages are published
+        to the prefix cache so identical prefixes prefill once."""
+        ps = self.engine.page_size
+        n = len(items)
+        B = self.engine.batch_buckets.bucket_for(n)
+        nc = -(-S // ps)
+        tokens = np.zeros((B, S), np.int32)
+        lengths = np.ones((B,), np.int32)
+        ctx_table = np.zeros((B, C), np.int32)
+        ctx_lens = np.zeros((B,), np.int32)
+        dest = np.zeros((B, nc), np.int32)
+        for i, (req, match, new_pages, suffix, _, _) in enumerate(items):
+            tokens[i, :len(suffix)] = suffix
+            lengths[i] = len(suffix)
+            ctx_table[i, :len(match.pages)] = match.pages
+            ctx_lens[i] = match.ctx_tokens
+            dest[i, :len(new_pages)] = new_pages
+        t0 = time.perf_counter()
+        logits, self.state = self.engine.paged_prefill(
+            self.state, jnp.asarray(tokens), jnp.asarray(lengths),
+            jnp.asarray(ctx_table), jnp.asarray(ctx_lens),
+            jnp.asarray(dest))
+        self.prefill_forwards += 1
+        self.prefill_requests += n
+        reqs = [item[0] for item in items]
+        if self.device_sampling:
+            samp = {"temperature": np.zeros((B,), np.float32),
+                    "top_k": np.zeros((B,), np.int32),
+                    "top_p": np.ones((B,), np.float32),
+                    "key": np.zeros((B, 2), np.uint32)}
+            ctr = np.zeros((B,), np.int32)
+            for i, req in enumerate(reqs):
+                p = req.sampler.params
+                samp["temperature"][i] = p.temperature
+                samp["top_k"][i] = p.top_k
+                samp["top_p"][i] = p.top_p
+                samp["key"][i] = req.base_key
+                ctr[i] = len(req.output)
+            firsts = np.asarray(self.engine.sample(
+                logits, {k: jnp.asarray(v) for k, v in samp.items()},
+                jnp.asarray(ctr)))
+            self.prefill_transfer_bytes += firsts.nbytes
+        else:
+            host = np.asarray(logits)                         # (B, V)
+            self.prefill_transfer_bytes += host.nbytes
+            firsts = [reqs[i].sampler.sample(host[i]) for i in range(n)]
+        prefill_s = time.perf_counter() - t0
+        now = time.perf_counter()
+        for i, (req, match, new_pages, suffix, _, _) in enumerate(items):
+            req.pages = list(match.pages) + list(new_pages)
+            seed = req.prompt + req.output
+            # publish BEFORE the first-token finish check: even a request
+            # that stops immediately leaves its prefix behind for reuse
+            self.pager.register_prefix(seed, req.pages)
+            self.prefill_tokens_forwarded += len(suffix)
+            self.prefill_tokens_reused += match.ctx_tokens
+            first = int(firsts[i])
+            self._record_token(req, first, now)
+            reason = self._finish_reason(req, first)
+            if reason is not None:
+                self._finish(req, reason, now)
+                finished.append(req)
+            else:
+                b = free.pop(0)
+                self.slots[b] = req
+                self._table[b] = 0
+                self._table[b, :len(req.pages)] = req.pages
+                self._lengths[b] = len(seed)    # next write position
+                self._last_token[b] = first
+                self._ctr[b] = len(req.output)
+                p = req.sampler.params
+                self._temps[b] = p.temperature
+                self._top_ks[b] = p.top_k
+                self._top_ps[b] = p.top_p
+                self._keys[b] = req.base_key
+                self._samp_dev = None
+                self._state_dirty = True
+        for req in reqs:
+            self._notify(req, req.output[-1])
+        return prefill_s
+
+    def _reattach(self, req: Request, b: int) -> None:
+        """O(1) resume of a parked request that kept its pages: re-point
+        slot ``b``'s page-table row at them and restore the sampling
+        mirrors.  No prefill forward runs and no KV is recomputed — the
+        rng counter (= tokens produced) keeps the seeded stream exactly
+        where it left off."""
+        self.slots[b] = req
+        self._table[b] = 0
+        self._table[b, :len(req.pages)] = req.pages
+        self._lengths[b] = len(req.prompt) + len(req.output) - 1
+        self._last_token[b] = req.output[-1]
+        self._ctr[b] = len(req.output)
+        p = req.sampler.params
+        self._temps[b] = p.temperature
+        self._top_ks[b] = p.top_k
+        self._top_ps[b] = p.top_p
+        self._keys[b] = req.base_key
+        self._samp_dev = None
+        self._state_dirty = True
+        self.resumes_fast += 1
+
+    def _ensure_decode_pages(self) -> None:
+        """Before a decode tick, make sure every active slot owns the page
+        its next token lands in; allocate one page on the boundary.  When
+        the pool is dry even after cache eviction, RECOMPUTE-preempt the
+        slot: release its pages and requeue it at the front (the O(1)
+        reattach path doesn't apply — its pages are gone)."""
+        ps = self.engine.page_size
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self._lengths[b] // ps < len(req.pages):
+                continue
+            try:
+                pg = self.pager.alloc(1)
+            except PagerOOM:
+                self._release_pages(req)
+                self._free_slot(b)
+                self._queue_for(req).appendleft(req)
+                self.preempt_recompute += 1
+                continue
+            req.pages.extend(pg)
+            self._table[b, len(req.pages) - 1] = pg[0]
+            self._state_dirty = True
+
+    def _sync_paged_state(self) -> None:
+        """Upload the host page-table/length mirrors when dirty.  While no
+        slot changes hands the device is self-consistent (its decode step
+        advances lengths in lockstep with the host mirrors), so
+        steady-state ticks upload nothing."""
+        if not self._state_dirty:
+            return
+        self.state["page_table"] = jnp.asarray(self._table)
+        self.state["length"] = jnp.asarray(self._lengths)
+        self._state_dirty = False
+
+    def _release_pages(self, req: Request) -> None:
+        if req.pages:
+            self.pager.release(req.pages)
+        req.pages = None
+
+    def pager_stats(self) -> Optional[Dict[str, Any]]:
+        if not self.paged:
+            return None
+        return {**self.pager.stats(),
+                "resumes_without_recompute": self.resumes_fast,
+                "preempt_recompute": self.preempt_recompute,
+                "prefill_tokens_forwarded": self.prefill_tokens_forwarded,
+                "prefill_tokens_reused": self.prefill_tokens_reused}
+
     # --- internals -------------------------------------------------------------
 
     def _free_slot(self, b: int) -> None:
@@ -538,6 +789,12 @@ class ContinuousBatchingScheduler:
         self._top_ps[b] = 1.0
         self._keys[b] = 0
         self._samp_dev = None
+        if self.paged:
+            # zero the table row so the vacant slot's decode-step writes
+            # land in the dump page, never in someone's live pages
+            self._table[b] = 0
+            self._lengths[b] = 0
+            self._state_dirty = True
 
     def _reap(self) -> List[Request]:
         """Evict cancelled, paused (preempted, NOT finished), and
@@ -599,6 +856,12 @@ class ContinuousBatchingScheduler:
                               or token != req.eos_id) else "eos"
         if len(req.output) >= req.max_new_tokens:
             return "length"
+        if len(req.prompt) + len(req.output) >= self.engine.max_len:
+            # cache exhausted: the NEXT token would write at position
+            # max_len.  Without this the dense path silently wrote past
+            # the cache and a pause/resume after the overflow could no
+            # longer find a sequence bucket (resume-regrowth bug).
+            return "length"
         return None
 
     def _record_token(self, req: Request, token: int, now: float) -> None:
@@ -614,6 +877,11 @@ class ContinuousBatchingScheduler:
         req.done = True
         req.finish_reason = reason
         req.finished_at = now
+        if self.paged:
+            # every terminal path funnels through here — slot finishes,
+            # cancels, deadlines (queued, active, or parked), errors —
+            # so page references cannot leak
+            self._release_pages(req)
         if reason == "cancelled":
             self.cancelled_total += 1
         self.completed_total += 1
@@ -862,6 +1130,7 @@ class SchedulerService:
             }
             return {
                 "decode": decode,
+                "pager": s.pager_stats(),
                 "steps": s.steps, "active_slots": s.active,
                 "pending": s.pending,
                 "pending_high_water": s.pending_high_water,
@@ -906,6 +1175,10 @@ class SchedulerService:
         s.bulk_queue.clear()
         s.parked.clear()
         s.slots = [None] * s.num_slots
+        if s.paged:
+            s._table[:] = 0
+            s._lengths[:] = 0
+            s._state_dirty = True
 
     def _run(self) -> None:
         while True:

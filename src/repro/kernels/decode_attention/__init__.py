@@ -1,4 +1,9 @@
-from repro.kernels.decode_attention.ops import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_oracle
+from repro.kernels.decode_attention.ops import (decode_attention,
+                                                paged_decode_attention,
+                                                resolved_interpret)
+from repro.kernels.decode_attention.ref import (decode_attention_oracle,
+                                                paged_decode_attention_oracle)
 
-__all__ = ["decode_attention", "decode_attention_oracle"]
+__all__ = ["decode_attention", "decode_attention_oracle",
+           "paged_decode_attention", "paged_decode_attention_oracle",
+           "resolved_interpret"]

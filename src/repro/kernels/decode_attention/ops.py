@@ -1,4 +1,10 @@
-"""Public jit'd wrapper: cache layout (B,Smax,K,hd) -> kernel layout."""
+"""Public jit'd wrappers: cache layout (B,Smax,K,hd) -> kernel layout,
+plus the paged entry point (page-pool layout (P,ps,K,hd) + page table).
+
+``resolved_interpret`` is the single source of truth for which execution
+mode a given ``interpret`` argument selects — benches report it so a run
+on TPU provably measured the compiled kernel, not the interpreter.
+"""
 
 from __future__ import annotations
 
@@ -9,7 +15,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.common import default_interpret, round_up
-from repro.kernels.decode_attention.kernel import decode_attention_bkgd
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_bkgd, decode_attention_paged_bkgd)
+
+
+def resolved_interpret(interpret: Optional[bool] = None) -> bool:
+    """The execution mode an ``interpret`` override actually selects."""
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "kv_blk", "interpret"))
@@ -17,8 +29,7 @@ def decode_attention(q, cache_k, cache_v, lengths, *,
                      window: Optional[int] = None, kv_blk: int = 512,
                      interpret: Optional[bool] = None):
     """q (B,H,hd); cache_k/v (B,Smax,K,hd); lengths (B,) -> (B,H,hd)."""
-    if interpret is None:
-        interpret = default_interpret()
+    interpret = resolved_interpret(interpret)
     B, H, hd = q.shape
     Smax, K = cache_k.shape[1], cache_k.shape[2]
     G = H // K
@@ -32,4 +43,28 @@ def decode_attention(q, cache_k, cache_v, lengths, *,
     out = decode_attention_bkgd(qk, kt, vt, lengths.astype(jnp.int32),
                                 window=window, kv_blk=kv_blk,
                                 interpret=interpret)
+    return out.reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, page_table, lengths, *,
+                           window: Optional[int] = None,
+                           interpret: Optional[bool] = None):
+    """Paged flash-decode: q (B,H,hd); k/v_pages (P,ps,K,hd) — the page
+    pool in cache layout; page_table (B,MP) int32 mapping each row's
+    logical pages to pool pages; lengths (B,) -> (B,H,hd).
+
+    Equivalent to gathering each row's pages into a contiguous
+    (B, MP*ps, K, hd) cache and running ``decode_attention`` — without
+    ever materializing the gather."""
+    interpret = resolved_interpret(interpret)
+    B, H, hd = q.shape
+    K = k_pages.shape[2]
+    G = H // K
+    qk = q.reshape(B, K, G, hd)
+    kt = jnp.moveaxis(k_pages, 2, 1)                   # (P, K, ps, hd)
+    vt = jnp.moveaxis(v_pages, 2, 1)
+    out = decode_attention_paged_bkgd(
+        qk, kt, vt, page_table.astype(jnp.int32),
+        lengths.astype(jnp.int32), window=window, interpret=interpret)
     return out.reshape(B, H, hd)

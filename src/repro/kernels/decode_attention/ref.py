@@ -12,3 +12,15 @@ def decode_attention_oracle(q, cache_k, cache_v, lengths, *,
                             window: Optional[int] = None):
     """q (B,H,hd); cache_k/v (B,Smax,K,hd); lengths (B,) -> (B,H,hd)."""
     return decode_attention_ref(q, cache_k, cache_v, lengths, window=window)
+
+
+def paged_decode_attention_oracle(q, k_pages, v_pages, page_table,
+                                  lengths, *, window: Optional[int] = None):
+    """Paged oracle: gather each row's pages into the contiguous cache it
+    stands for, then run the contiguous reference.  q (B,H,hd);
+    k/v_pages (P,ps,K,hd); page_table (B,MP); lengths (B,) -> (B,H,hd)."""
+    B, MP = page_table.shape
+    _, ps, K, hd = k_pages.shape
+    ck = k_pages[page_table].reshape(B, MP * ps, K, hd)
+    cv = v_pages[page_table].reshape(B, MP * ps, K, hd)
+    return decode_attention_ref(q, ck, cv, lengths, window=window)

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.common import NEG_INF, cdiv
+from repro.kernels.common import NEG_INF, cdiv, tpu_compiler_params
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_s, l_s, acc_s, *,
@@ -114,7 +114,7 @@ def flash_attention_bhsd(q, k, v, *, causal: bool = True,
             pltpu.VMEM((q_blk, 1), jnp.float32),
             pltpu.VMEM((q_blk, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary")),
         interpret=interpret,

@@ -1,0 +1,263 @@
+"""Paged decode path for the transformer family: block-paged KV cache with
+page-table indirection, context-aware suffix prefill, and O(1) reattach.
+
+The dense decode state is ``(L, B, Smax, K, hd)`` — every slot reserves
+worst-case context.  The paged state replaces the per-slot axis with a
+shared PAGE POOL plus a per-slot page table:
+
+    cache:      {"k": (L, P, ps, K, hd), "v": (L, P, ps, K, hd)}
+    page_table: (B, MP) int32  — slot b's logical page j lives in physical
+                page ``page_table[b, j]`` (0 = the reserved dump page)
+    length:     (B,)   int32  — tokens written so far, same as dense
+
+Token t of slot b lives at ``(page_table[b, t // ps], t % ps)``.  Gathering
+a row's pages reconstructs exactly the dense ``(Smax, K, hd)`` cache row
+(MP * ps == Smax), so the decode math — and therefore every sampled
+stream — is bit-identical to the dense engine; only the storage is
+indirected.  Pages are refcounted host-side (repro.core.kv_pager), which
+is what buys shared prefixes and pin-while-parked preemption.
+
+Three entry points, all scanned over layers like the dense path:
+
+  * ``init_paged_state``   — build the pool + table pytree.
+  * ``paged_decode_step``  — one token: scatter-write the new KV into each
+    row's current page, attention against the gathered page view (or the
+    paged Pallas kernel under opt ``pallas_paged_decode``).
+  * ``paged_prefill``      — context-aware prefill: suffix tokens at
+    absolute positions ``ctx_len + i`` attend to [gathered ctx pages ||
+    suffix KV] under a per-row mask, and the suffix KV is committed to
+    freshly allocated pages.  With zero context pages this is exactly the
+    dense prefill computation (same ops, same buckets), which keeps
+    paged-vs-dense streams byte-identical for fresh prompts.
+
+Only non-MLA attention caches page (``cfg.attn_kind == "gqa"``); the
+engine gates admission accordingly.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import opt
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import apply_mlp, apply_norm
+from repro.models.moe import moe_block
+from repro.models.transformer import project_logits
+from repro.sharding import shard
+
+
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Paged KV covers the self-attention transformer families with a
+    standard (k, v) cache; MLA/latent and recurrent states do not page."""
+    return cfg.family in ("dense", "moe") and cfg.attn_kind == "gqa"
+
+
+def init_paged_state(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     page_size: int, max_pages_per_seq: int,
+                     dtype=None) -> Dict[str, Any]:
+    if not supports_paging(cfg):
+        raise ValueError(f"{cfg.name}: family {cfg.family}/{cfg.attn_kind} "
+                         "has no paged KV path")
+    dt = dtype or attn.cache_dtype(cfg)
+    n_dense = cfg.moe.first_k_dense if cfg.moe else 0
+    n_main = cfg.num_layers - n_dense
+
+    def pool(n_layers):
+        shape = (n_layers, num_pages, page_size, cfg.num_kv_heads,
+                 cfg.head_dim)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+    state: Dict[str, Any] = {}
+    if n_dense:
+        state["cache_dense"] = pool(n_dense)
+    state["cache"] = pool(n_main)
+    state["length"] = jnp.zeros((num_slots,), jnp.int32)
+    state["page_table"] = jnp.zeros((num_slots, max_pages_per_seq),
+                                    jnp.int32)
+    return state
+
+
+def _gathered_view(pool_k, pool_v, table):
+    """Page-table gather -> the contiguous (B, MP*ps, K, hd) cache view."""
+    B, MP = table.shape
+    _, ps, K, hd = pool_k.shape
+    ck = pool_k[table].reshape(B, MP * ps, K, hd)
+    cv = pool_v[table].reshape(B, MP * ps, K, hd)
+    return ck, cv
+
+
+def _paged_attend(q, pool_k, pool_v, table, lengths, *, page_size, window):
+    """One-token attention through the page table: the gathered-view
+    reference by default, the Pallas paged kernel under the opt flag."""
+    if opt.enabled("pallas_paged_decode"):
+        from repro.kernels.decode_attention.ops import paged_decode_attention
+        return paged_decode_attention(q, pool_k, pool_v, table, lengths,
+                                      window=window)
+    ck, cv = _gathered_view(pool_k, pool_v, table)
+    return attn.decode_attention_ref(q, ck, cv, lengths, window=window)
+
+
+def paged_decode_step(params, token, state, cfg: ModelConfig, *,
+                      page_size: int, window: Optional[int] = None):
+    """token (B,) int32 -> (logits (B,V), new state).  Appends one position
+    through the page table; vacant rows (table all zeros) write into the
+    dump page and read garbage nothing consumes."""
+    window = window if window is not None else cfg.sliding_window
+    lengths = state["length"]
+    table = state["page_table"]
+    B = token.shape[0]
+    MP = table.shape[1]
+    rows = jnp.arange(B)
+    # current write target: logical page lengths // ps (clamped so runaway
+    # vacant rows stay inside the table; their zero row -> dump page)
+    pg = table[rows, jnp.minimum(lengths // page_size, MP - 1)]
+    off = lengths % page_size
+    x = params["embed"][token][:, None, :]                 # (B,1,D)
+    x = shard(x, "batch", None, None)
+
+    def scan_stack(x, stacked, cache, moe):
+        def step(x, xs):
+            lp, pool = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            positions = lengths[:, None]
+            q, k, v = attn.project_qkv(lp["attn"], h, cfg,
+                                       positions=positions)
+            pk = pool["k"].at[pg, off].set(k[:, 0].astype(pool["k"].dtype))
+            pv = pool["v"].at[pg, off].set(v[:, 0].astype(pool["v"].dtype))
+            out = _paged_attend(q[:, 0], pk, pv, table, lengths + 1,
+                                page_size=page_size, window=window)
+            out = out.reshape(B, 1, cfg.num_heads * cfg.head_dim)
+            attn_out = out @ lp["attn"]["wo"] + lp["attn"].get("bo", 0.0)
+            if cfg.parallel_block:
+                x2 = x + attn_out + apply_mlp(lp["mlp"], h, cfg)
+            else:
+                x2 = x + attn_out
+                h2 = apply_norm(lp["ln2"], x2, cfg)
+                if moe:
+                    mo, _ = moe_block(lp["moe"], h2, cfg)
+                    x2 = x2 + mo
+                else:
+                    x2 = x2 + apply_mlp(lp["mlp"], h2, cfg)
+            return x2, {"k": pk, "v": pv}
+
+        return jax.lax.scan(step, x, (stacked, cache))
+
+    new_state = dict(state)
+    if "cache_dense" in state:
+        x, nc = scan_stack(x, params["dense_layers"], state["cache_dense"],
+                           False)
+        new_state["cache_dense"] = nc
+    x, nc = scan_stack(x, params["layers"], state["cache"],
+                       cfg.moe is not None)
+    new_state["cache"] = nc
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = project_logits(params, h, cfg)[:, 0]
+    new_state["length"] = lengths + 1
+    return logits, new_state
+
+
+def _suffix_mask(S: int, n_ctx: int, ctx_lens, suf_lens,
+                 window: Optional[int]):
+    """(B, 1, S, n_ctx + S) mask for context-aware prefill: suffix query i
+    sits at absolute position ``ctx_len + i`` and may attend to valid
+    context positions plus causally-earlier valid suffix positions."""
+    qpos = ctx_lens[:, None] + jnp.arange(S)[None, :]          # (B, S)
+    kpos = jnp.concatenate(
+        [jnp.broadcast_to(jnp.arange(n_ctx)[None, :],
+                          (ctx_lens.shape[0], n_ctx)),
+         ctx_lens[:, None] + jnp.arange(S)[None, :]], axis=1)  # (B, n_ctx+S)
+    kvalid = jnp.concatenate(
+        [jnp.arange(n_ctx)[None, :] < ctx_lens[:, None],
+         jnp.arange(S)[None, :] < suf_lens[:, None]], axis=1)
+    m = kvalid[:, None, :] & (kpos[:, None, :] <= qpos[:, :, None])
+    if window is not None:
+        m &= kpos[:, None, :] > qpos[:, :, None] - window
+    return m[:, None]                                          # (B,1,S,Skv)
+
+
+def paged_prefill(params, tokens, lengths, state, ctx_table, ctx_lens,
+                  dest_table, cfg: ModelConfig, *, page_size: int,
+                  window: Optional[int] = None):
+    """Context-aware prefill of SUFFIX tokens into freshly allocated pages.
+
+    tokens (B, S): the per-row suffix (prompt minus its shared prefix);
+    lengths (B,): valid suffix lengths; ctx_table (B, C): shared context
+    pages (C == 0 when nothing is shared — then this is exactly the dense
+    prefill computation); ctx_lens (B,): context token counts, page-aligned
+    by construction; dest_table (B, ceil(S/ps)): destination pages for the
+    suffix chunks (0 entries land in the dump page).
+
+    Returns (first-token logits (B, V), new state).  ``state["length"]``
+    and ``state["page_table"]`` pass through untouched — the scheduler
+    owns those host-side and re-uploads them on slot changes."""
+    window = window if window is not None else cfg.sliding_window
+    B, S = tokens.shape
+    C = ctx_table.shape[1]
+    nc = dest_table.shape[1]
+    pad_s = nc * page_size - S
+    x = params["embed"][tokens]
+    x = shard(x, "batch", None, None)
+    positions = ctx_lens[:, None] + jnp.arange(S)[None, :]
+
+    def run_stack(x, stacked, cache, moe):
+        def step(x, xs):
+            lp, pool = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            q, k, v = attn.project_qkv(lp["attn"], h, cfg,
+                                       positions=positions)
+            if C == 0:
+                mask = attn.make_mask(S, S, causal=True, window=window,
+                                      kv_lengths=lengths)
+                out = attn.gqa_attention(q, k, v, mask)
+            else:
+                ck, cv = _gathered_view(pool["k"], pool["v"], ctx_table)
+                keys = jnp.concatenate([ck.astype(k.dtype), k], axis=1)
+                vals = jnp.concatenate([cv.astype(v.dtype), v], axis=1)
+                mask = _suffix_mask(S, C * page_size, ctx_lens, lengths,
+                                    window)
+                out = attn.gqa_attention(q, keys, vals, mask)
+            out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+            attn_out = out @ lp["attn"]["wo"] + lp["attn"].get("bo", 0.0)
+            # commit the suffix KV: chunk c -> physical page dest[b, c]
+            # (dump-page duplicates across rows/padding are harmless)
+            kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+            flat = dest_table.reshape(-1)
+            pk = pool["k"].at[flat].set(
+                kp.reshape(B * nc, page_size, *kp.shape[2:]).astype(
+                    pool["k"].dtype))
+            pv = pool["v"].at[flat].set(
+                vp.reshape(B * nc, page_size, *vp.shape[2:]).astype(
+                    pool["v"].dtype))
+            if cfg.parallel_block:
+                x2 = x + attn_out + apply_mlp(lp["mlp"], h, cfg)
+            else:
+                x2 = x + attn_out
+                h2 = apply_norm(lp["ln2"], x2, cfg)
+                if moe:
+                    mo, _ = moe_block(lp["moe"], h2, cfg)
+                    x2 = x2 + mo
+                else:
+                    x2 = x2 + apply_mlp(lp["mlp"], h2, cfg)
+            x2 = shard(x2, "batch", None, None)
+            return x2, {"k": pk, "v": pv}
+
+        return jax.lax.scan(step, x, (stacked, cache))
+
+    new_state = dict(state)
+    if "cache_dense" in state:
+        x, nc_ = run_stack(x, params["dense_layers"], state["cache_dense"],
+                           False)
+        new_state["cache_dense"] = nc_
+    x, nc_ = run_stack(x, params["layers"], state["cache"],
+                       cfg.moe is not None)
+    new_state["cache"] = nc_
+    h = apply_norm(params["final_norm"], x, cfg)
+    rows = jnp.arange(B)
+    h_last = h[rows, lengths - 1]
+    logits = project_logits(params, h_last, cfg)
+    return logits, new_state

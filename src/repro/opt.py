@@ -40,6 +40,10 @@ _DEFAULTS: Dict[str, bool] = {
                            # and REPLICATED over data — no per-step HSDP
                            # weight all-gather on the decode path (opt-in:
                            # wrong for training, where FSDP is the point)
+    "pallas_paged_decode": False,  # paged decode attention through the
+                           # Pallas page-table kernel instead of the
+                           # gather + reference path (opt-in: interpret
+                           # mode on CPU makes it the slower choice there)
 }
 
 _state = threading.local()

@@ -28,13 +28,44 @@ the 503.  A request that exhausts its retries raises ``HTTPStatusError``
 
 from __future__ import annotations
 
+import datetime
+import email.utils
 import json
+import math
 import random
 import socket
 import threading
 import time
 import urllib.parse
 from typing import Any, Dict, Iterator, Optional, Sequence, Tuple
+
+
+def parse_retry_after(val: bytes) -> Optional[float]:
+    """Lenient ``Retry-After`` parse -> non-negative seconds, or None.
+
+    RFC 9110 allows two forms: delta-seconds and an HTTP-date.  The old
+    ``float(val)`` parse discarded the date form entirely and — worse —
+    accepted ``nan``/``inf``/negatives, which poisoned the backoff math
+    (``time.sleep(nan)`` raises mid-retry).  Anything unusable returns
+    None and the client falls back to capped exponential backoff."""
+    text = val.strip().decode("latin-1", "replace")
+    if not text:
+        return None
+    try:
+        secs = float(text)
+    except ValueError:
+        try:
+            when = email.utils.parsedate_to_datetime(text)
+        except (TypeError, ValueError):
+            return None
+        if when is None:
+            return None
+        if when.tzinfo is None:
+            when = when.replace(tzinfo=datetime.timezone.utc)
+        secs = when.timestamp() - time.time()
+    if math.isnan(secs) or math.isinf(secs):
+        return None
+    return max(0.0, secs)
 
 
 class HTTPStatusError(RuntimeError):
@@ -93,10 +124,7 @@ class _Connection:
             elif key == b"transfer-encoding":
                 chunked = b"chunked" in val.lower()
             elif key == b"retry-after":
-                try:
-                    retry_after = float(val)
-                except ValueError:
-                    pass                  # HTTP-date form: ignore the hint
+                retry_after = parse_retry_after(val)
         return status, length, chunked, retry_after
 
     def roundtrip(self, request: bytes
@@ -220,6 +248,12 @@ class FlexServeClient:
         shed herd does not return in lockstep.  Never sleeps less than
         the hint, never more than ``max_backoff_s`` (the jitter is capped
         too — 'capped' must mean the number in the constructor)."""
+        if (retry_after is None or math.isnan(retry_after)
+                or retry_after < 0):
+            # unusable hint (absent, or hostile header that slipped past
+            # parsing): fall back to capped exponential — never let a
+            # header value reach time.sleep() unvalidated
+            retry_after = None
         base = (retry_after if retry_after is not None
                 else self.backoff_s * (2 ** (attempt - 1)))
         base = min(base, self.max_backoff_s)

@@ -492,7 +492,10 @@ class GenerationService:
                                "prefill_transfer_bytes_total": 0,
                                "prefill_forwards": 0,
                                "prefill_requests": 0,
-                               "compiled_steps": None}})
+                               "compiled_steps": None},
+                    # paged-KV engines replace this with KVPager counters
+                    # (page utilization, prefix hit rate, fast resumes)
+                    "pager": None})
         default = engines.get(self.default_alias)
         if default is not None:
             out.update({k: v for k, v in default.items() if k != "engine"})

@@ -1,0 +1,62 @@
+"""Client-side Retry-After parsing + backoff: the old ``float(val)``
+parse rejected RFC 9110 HTTP-dates and accepted nan/inf/negatives,
+which reached ``time.sleep`` unvalidated."""
+
+import email.utils
+import math
+import time
+
+import pytest
+
+from repro.serving.client import FlexServeClient, parse_retry_after
+
+
+@pytest.mark.parametrize("raw,want", [
+    (b"0", 0.0), (b"1", 1.0), (b"2.5", 2.5), (b" 7 ", 7.0),
+])
+def test_parse_delta_seconds(raw, want):
+    assert parse_retry_after(raw) == want
+
+
+@pytest.mark.parametrize("raw", [
+    b"", b"   ", b"nan", b"NaN", b"inf", b"-inf", b"soon", b"1s",
+    b"\xff\xfe garbage",
+])
+def test_parse_unusable_returns_none(raw):
+    assert parse_retry_after(raw) is None
+
+
+def test_parse_negative_clamps_to_zero():
+    assert parse_retry_after(b"-3") == 0.0
+
+
+def test_parse_http_date():
+    future = email.utils.formatdate(time.time() + 30, usegmt=True)
+    got = parse_retry_after(future.encode())
+    assert got is not None and 25.0 <= got <= 30.0
+    past = email.utils.formatdate(time.time() - 60, usegmt=True)
+    assert parse_retry_after(past.encode()) == 0.0   # already elapsed
+
+
+def test_parse_naive_http_date_assumed_utc():
+    # RFC-850-ish date without an explicit zone still parses (as UTC)
+    when = time.gmtime(time.time() + 20)
+    raw = time.strftime("%a, %d %b %Y %H:%M:%S", when).encode()
+    got = parse_retry_after(raw)
+    assert got is not None and 15.0 <= got <= 20.0
+
+
+def test_backoff_honors_hint_and_caps():
+    c = FlexServeClient(backoff_s=0.05, max_backoff_s=2.0)
+    assert 0.5 <= c._backoff_delay(1, 0.5) <= 0.75   # hint + jitter
+    assert c._backoff_delay(1, 100.0) <= 2.0         # hostile hint capped
+
+
+def test_backoff_falls_back_on_unusable_hint():
+    c = FlexServeClient(backoff_s=0.05, max_backoff_s=2.0)
+    for hint in (None, float("nan"), -1.0):
+        for attempt in (1, 2, 3, 8):
+            d = c._backoff_delay(attempt, hint)
+            assert math.isfinite(d) and 0.0 < d <= 2.0
+    # exponential in the attempt number until the cap
+    assert c._backoff_delay(2, None) >= 0.05 * 2

@@ -31,6 +31,49 @@ def test_prefill_decode_matches_forward(arch, steps):
         assert float(jnp.abs(logits - full[:, S + t]).max()) < tol
 
 
+def test_paged_prefill_decode_matches_dense():
+    """The paged path must be BIT-identical to the dense one: prefill
+    logits, then every decode step through the page table."""
+    import numpy as np
+
+    from repro.models import paged as P
+
+    cfg, model, params = smoke_model("yi-9b")
+    assert P.supports_paging(cfg)
+    B, S, steps, ps = 2, 12, 2, 4
+    batch = smoke_batch(cfg, B=B, S=S + steps, seed=3)
+    tokens = batch["tokens"]
+    full = model.forward(params, batch)
+
+    MP = -(-(S + steps) // ps)
+    table = np.asarray([[1 + b * MP + j for j in range(MP)]
+                        for b in range(B)], np.int32)
+    state = P.init_paged_state(cfg, B, B * MP + 1, ps, MP)
+    nc = -(-S // ps)
+    lengths = jnp.full((B,), S, jnp.int32)
+    logits, state = P.paged_prefill(
+        params, tokens[:, :S], lengths, state,
+        jnp.zeros((B, 0), jnp.int32), jnp.zeros((B,), jnp.int32),
+        jnp.asarray(table[:, :nc]), cfg, page_size=ps)
+    state["page_table"] = jnp.asarray(table)
+    state["length"] = lengths
+
+    dstate = model.init_state(B, S + steps)
+    dlogits, dstate = model.prefill(
+        params, dict(tokens=tokens[:, :S], lengths=lengths), dstate)
+    assert np.array_equal(np.asarray(logits), np.asarray(dlogits))
+
+    scale = float(jnp.abs(full).max()) + 1.0
+    tol = 2e-2 * scale if cfg.dtype == "bfloat16" else 1e-4 * scale
+    assert float(jnp.abs(logits - full[:, S - 1]).max()) < tol
+    for t in range(steps):
+        logits, state = P.paged_decode_step(
+            params, tokens[:, S + t], state, cfg, page_size=ps)
+        dlogits, dstate = model.decode(params, tokens[:, S + t], dstate)
+        assert np.array_equal(np.asarray(logits), np.asarray(dlogits))
+        assert float(jnp.abs(logits - full[:, S + t]).max()) < tol
+
+
 def test_ragged_prefill_lengths(arch):
     """Rows with different prompt lengths decode independently."""
     cfg, model, params = smoke_model(arch)

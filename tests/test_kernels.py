@@ -8,7 +8,9 @@ import pytest
 from numpy.testing import assert_allclose
 
 from repro.kernels.decode_attention import (decode_attention,
-                                            decode_attention_oracle)
+                                            decode_attention_oracle,
+                                            paged_decode_attention,
+                                            paged_decode_attention_oracle)
 from repro.kernels.flash_attention import (flash_attention,
                                            flash_attention_ref)
 from repro.kernels.mamba2_ssd import ssd, ssd_ref
@@ -77,6 +79,82 @@ def test_decode_attention_empty_rows():
     out = decode_attention(q, ck, cv, lengths, kv_blk=32)
     assert bool(jnp.isfinite(out).all())
     ref = decode_attention_oracle(q, ck, cv, lengths)
+    assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+# --- paged decode attention ---------------------------------------------------
+
+
+def _paged_from_dense(ck, cv, page_size, key):
+    """Scatter a dense (B, Smax, K, hd) cache into shuffled page pools +
+    the (B, MP) table mapping logical pages to their physical slots."""
+    B, Smax, K, hd = ck.shape
+    MP = Smax // page_size
+    P = B * MP + 1                           # page 0 = reserved dump page
+    perm = jax.random.permutation(key, P - 1) + 1
+    table = perm[:B * MP].reshape(B, MP).astype(jnp.int32)
+    kp = jnp.zeros((P, page_size, K, hd), ck.dtype).at[
+        table.reshape(-1)].set(ck.reshape(B * MP, page_size, K, hd))
+    vp = jnp.zeros((P, page_size, K, hd), cv.dtype).at[
+        table.reshape(-1)].set(cv.reshape(B * MP, page_size, K, hd))
+    return kp, vp, table
+
+
+@pytest.mark.parametrize("B,Smax,H,K,hd,ps,window", [
+    (4, 256, 8, 2, 64, 64, None), (2, 512, 8, 8, 128, 128, None),
+    (3, 256, 4, 1, 64, 32, 64), (2, 1024, 16, 2, 128, 256, 256),
+    (1, 96, 4, 2, 32, 16, 20),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_decode_attention(B, Smax, H, K, hd, ps, window, dtype):
+    """Page-table indirection must reproduce the contiguous cache exactly:
+    same ragged lengths, same sliding windows, shuffled physical pages."""
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd), dtype)
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, Smax)
+    kp, vp, table = _paged_from_dense(ck, cv, ps, ks[4])
+    out = paged_decode_attention(q, kp, vp, table, lengths, window=window)
+    ref = paged_decode_attention_oracle(q, kp, vp, table, lengths,
+                                        window=window)
+    assert_allclose(np.asarray(out, np.float32),
+                    np.asarray(ref, np.float32), **_tol(dtype))
+    dense = decode_attention_oracle(q, ck, cv, lengths, window=window)
+    assert_allclose(np.asarray(out, np.float32),
+                    np.asarray(dense, np.float32), **_tol(dtype))
+
+
+def test_paged_oracle_gather_is_bitwise_dense():
+    """The gathered-view reference (the CPU production path) is BIT-exact
+    vs the contiguous reference: masked lanes contribute exact zeros, so
+    the physical page order cannot perturb the math."""
+    B, Smax, H, K, hd, ps = 2, 128, 4, 2, 64, 32
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd))
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd))
+    lengths = jnp.asarray([97, 31])
+    kp, vp, table = _paged_from_dense(ck, cv, ps, ks[4])
+    paged = paged_decode_attention_oracle(q, kp, vp, table, lengths)
+    dense = decode_attention_oracle(q, ck, cv, lengths)
+    assert np.array_equal(np.asarray(paged), np.asarray(dense))
+
+
+def test_paged_decode_dump_page_rows_finite():
+    """A vacant slot's table row is all zeros (the dump page): whatever
+    garbage lives there, the row's output must stay finite."""
+    B, Smax, H, K, hd, ps = 2, 64, 4, 2, 32, 16
+    ks = jax.random.split(RNG, 5)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    ck = jax.random.normal(ks[1], (B, Smax, K, hd))
+    cv = jax.random.normal(ks[2], (B, Smax, K, hd))
+    kp, vp, table = _paged_from_dense(ck, cv, ps, ks[4])
+    table = table.at[1].set(0)               # row 1 parked on the dump page
+    lengths = jnp.asarray([40, 1])
+    out = paged_decode_attention(q, kp, vp, table, lengths)
+    assert bool(jnp.isfinite(out).all())
+    ref = paged_decode_attention_oracle(q, kp, vp, table, lengths)
     assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
 
 

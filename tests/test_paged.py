@@ -1,0 +1,208 @@
+"""Paged KV cache: allocator/prefix-cache units, then end-to-end
+scheduler byte-identity vs the dense engine — across paging, shared
+prefixes, pause/resume (O(1) page reattach, no recompute), OOM-forced
+recompute preemption, and the max_len "length" finish regression."""
+
+import pytest
+from conftest import smoke_model
+
+from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
+                        PagedInferenceEngine, SamplingParams)
+from repro.core.kv_pager import (DUMP_PAGE, BlockAllocator, KVPager,
+                                 PagerOOM, _chain_keys)
+
+# --- allocator ----------------------------------------------------------------
+
+
+def test_allocator_refcounts_and_reuse():
+    a = BlockAllocator(8)
+    assert a.free_pages == 7                  # page 0 pinned forever
+    pgs = a.alloc(3)
+    assert DUMP_PAGE not in pgs and a.used_pages == 3
+    a.incref(pgs[:1])
+    assert a.decref(pgs) == 2                 # pgs[0] still referenced
+    assert a.decref(pgs[:1]) == 1
+    assert a.free_pages == 7
+    again = a.alloc(7)                        # freed pages are reusable
+    assert sorted(again) == list(range(1, 8))
+
+
+def test_allocator_oom_is_atomic():
+    a = BlockAllocator(4)
+    a.alloc(2)
+    with pytest.raises(PagerOOM):
+        a.alloc(2)                            # only 1 free
+    assert a.free_pages == 1                  # failed alloc took nothing
+
+
+def test_allocator_rejects_bad_refops():
+    a = BlockAllocator(4)
+    with pytest.raises(AssertionError):
+        a.incref([2])                         # never allocated
+    with pytest.raises(AssertionError):
+        a.decref([DUMP_PAGE])
+
+
+# --- prefix cache -------------------------------------------------------------
+
+
+def test_chain_keys_commit_to_whole_prefix():
+    k1 = _chain_keys([1, 2, 3, 4], 2, 2)
+    k2 = _chain_keys([1, 2, 3, 5], 2, 2)
+    k3 = _chain_keys([9, 2, 3, 4], 2, 2)
+    assert k1[0] == k2[0] and k1[1] != k2[1]  # same first page, split after
+    assert k1[0] != k3[0] and k1[1] != k3[1]  # early divergence poisons all
+
+
+def test_match_prefix_always_leaves_suffix():
+    p = KVPager(num_pages=8, page_size=2)
+    pgs = p.alloc(2)
+    p.register_prefix([1, 2, 3, 4], pgs)
+    m = p.match_prefix([1, 2, 3, 4])          # exact replay: cap at 1 page
+    assert m.ctx_tokens == 2 and len(m.pages) == 1
+    m2 = p.match_prefix([1, 2, 3, 4, 9])      # 1 suffix token: both pages
+    assert m2.ctx_tokens == 4 and m2.pages == list(pgs)
+    m3 = p.match_prefix([1, 2, 9, 9, 9])      # diverges inside page 2
+    assert m3.ctx_tokens == 2 and m3.pages == [pgs[0]]
+    p.release(m.pages + m2.pages + m3.pages)
+
+
+def test_pager_eviction_spares_referenced_pages():
+    p = KVPager(num_pages=5, page_size=2)     # 4 usable pages
+    a = p.alloc(2)
+    p.register_prefix([1, 2, 3, 4], a)
+    p.release(a)                              # now held only by the cache
+    b = p.alloc(2)
+    p.register_prefix([7, 8, 9, 10], b)       # still held by "request" b
+    c = p.alloc(2)                            # forces eviction of a's pages
+    assert p.prefix.evictions == 2
+    assert p.match_prefix([7, 8, 9, 10, 0]).ctx_tokens == 4  # b survived
+    with pytest.raises(PagerOOM):
+        p.alloc(1)                            # b + c pinned: nothing left
+
+
+# --- end-to-end vs the dense engine ------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engines():
+    cfg, model, params = smoke_model("yi-9b")     # dense GQA, no window
+    dense = InferenceEngine(model, params, max_len=64, max_batch=4)
+    paged = PagedInferenceEngine(model, params, max_len=64, max_batch=4,
+                                 page_size=16)
+    return dense, paged
+
+
+def _mixed_workload(n=6, budget=8):
+    out = []
+    for i in range(n):
+        out.append(([1 + i, 2 + (i % 3), 3], SamplingParams(
+            max_new_tokens=budget,
+            temperature=(0.0 if i % 3 == 0 else 0.8 + 0.1 * i),
+            top_k=(8 if i % 3 == 1 else 0), seed=200 + i)))
+    return out
+
+
+def _run(engine, work, num_slots=4):
+    s = ContinuousBatchingScheduler(engine, num_slots=num_slots)
+    reqs = [s.submit(p, sampling=sp) for p, sp in work]
+    s.run()
+    assert all(r.done for r in reqs)
+    return s, [(r.output, r.finish_reason) for r in reqs]
+
+
+def test_paged_streams_byte_match_dense(engines):
+    dense, paged = engines
+    _, want = _run(dense, _mixed_workload())
+    _, got = _run(paged, _mixed_workload())
+    assert got == want
+
+
+def test_shared_prefix_prefills_once(engines):
+    dense, paged = engines
+    prefix = [11 + (i % 7) for i in range(32)]     # 2 full shared pages
+    work = [(prefix + [60 + i], SamplingParams(max_new_tokens=4,
+                                               seed=300 + i,
+                                               temperature=0.7))
+            for i in range(3)]
+    # one slot serializes admission, so every follower sees the cache
+    s, got = _run(paged, work, num_slots=1)
+    _, want = _run(dense, work, num_slots=1)
+    assert got == want
+    st = s.pager_stats()
+    # first request prefills the prefix; every follower reuses both pages
+    assert st["prefill_tokens_reused"] == 32 * 2
+    assert st["prefix_hits"] == 4
+    assert st["prefill_tokens_forwarded"] < sum(len(p) for p, _ in work)
+
+
+def test_pause_resume_reattaches_pages(engines):
+    dense, paged = engines
+
+    def drive(engine):
+        s = ContinuousBatchingScheduler(engine, num_slots=2)
+        a = s.submit([5, 6, 7], sampling=SamplingParams(
+            max_new_tokens=12, temperature=0.9, seed=42))
+        b = s.submit([8, 9], sampling=SamplingParams(max_new_tokens=12))
+        for _ in range(4):
+            s.step()
+        s.pause(a)
+        for _ in range(3):
+            s.step()
+        assert s.resume(a)
+        s.run()
+        return s, [a.output, b.output]
+
+    ps, paged_out = drive(paged)
+    ds, dense_out = drive(dense)
+    assert paged_out == dense_out
+    # dense recompute-preemption re-prefills; the paged path must NOT
+    assert ds.prefill_requests == 3 and ps.prefill_requests == 2
+    assert ps.pager_stats()["resumes_without_recompute"] == 1
+
+
+def test_max_len_finishes_with_length_reason(engines):
+    """Regression: a request that fills the engine's max_len must finish
+    with reason "length" (previously it either scattered out of bounds or
+    — if paused near the cap — outgrew its largest sequence bucket and
+    died in _admit's ValueError branch on resume)."""
+    dense, paged = engines
+    work = [([9, 8, 7], SamplingParams(max_new_tokens=10_000,
+                                       temperature=0.8, seed=5))]
+    _, want = _run(dense, work, num_slots=1)
+    _, got = _run(paged, work, num_slots=1)
+    assert got == want
+    (tokens, reason), = got
+    assert reason == "length" and 3 + len(tokens) == paged.max_len
+
+
+def test_resume_near_max_len_regrowth(engines):
+    """The satellite regression: pause with the output grown close to
+    max_len, resume, and the request must complete (reason "length")
+    instead of raising when its regrown seed is re-bucketed."""
+    for engine in engines:
+        s = ContinuousBatchingScheduler(engine, num_slots=1)
+        req = s.submit([9, 8, 7], sampling=SamplingParams(
+            max_new_tokens=10_000, temperature=0.8, seed=5))
+        for _ in range(55):                        # 3 + 55 of 64 used
+            s.step()
+        s.pause(req)
+        s.step()                                   # parks the slot
+        assert s.resume(req)
+        s.run()
+        assert req.finish_reason == "length"
+        assert 3 + len(req.output) == engine.max_len
+
+
+def test_oom_forces_recompute_preempt(engines):
+    """A pool too small for the offered load must shed via recompute
+    preemption — and still decode every stream byte-for-byte."""
+    dense, paged = engines
+    cfg, model, params = smoke_model("yi-9b")
+    tiny = PagedInferenceEngine(model, params, max_len=64, max_batch=4,
+                                page_size=16, num_pages=6)   # 5 usable
+    work = _mixed_workload(n=4, budget=30)        # wants 3 pages/request
+    s, got = _run(tiny, work, num_slots=4)
+    _, want = _run(dense, work, num_slots=4)
+    assert got == want
+    assert s.pager_stats()["preempt_recompute"] >= 1
