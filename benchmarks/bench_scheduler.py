@@ -52,7 +52,7 @@ from typing import List, Optional, Tuple
 import jax
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, write_artifact, write_junit
 from repro import opt
 from repro.configs import get_config, reduce_for_smoke
 from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
@@ -343,32 +343,23 @@ def _paged_scenario(rounds: int) -> None:
          f"tokens_forwarded={st2['prefill_tokens_forwarded']}")
 
 
-def _write_junit(path: str) -> None:
-    import xml.etree.ElementTree as ET
-    suite = ET.Element("testsuite", name="bench_scheduler",
-                       tests=str(len(_CHECKS)),
-                       failures=str(sum(1 for _, f in _CHECKS if f)))
-    for name, failure in _CHECKS:
-        case = ET.SubElement(suite, "testcase", classname="bench_scheduler",
-                             name=name)
-        if failure:
-            ET.SubElement(case, "failure", message=failure)
-    ET.ElementTree(suite).write(path, encoding="unicode",
-                                xml_declaration=True)
-
-
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--rounds", type=int, default=3)
     ap.add_argument("--junit", default=None, metavar="PATH",
                     help="write the self-check results as junit XML")
+    ap.add_argument("--artifact", action="store_true",
+                    help="persist BENCH_scheduler.json (medians + "
+                         "self-check verdicts) for CI upload")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     try:
         run(rounds=args.rounds)
     finally:
         if args.junit:
-            _write_junit(args.junit)
+            write_junit(args.junit, "bench_scheduler", _CHECKS)
+        if args.artifact:
+            write_artifact("scheduler", _CHECKS)
     return 0
 
 

@@ -290,6 +290,8 @@ def main(argv=None) -> int:
     ap.add_argument("--rate-factor", type=float, default=4.0)
     ap.add_argument("--duration-s", type=float, default=2.0)
     ap.add_argument("--max-queue", type=int, default=8)
+    ap.add_argument("--artifact", action="store_true",
+                    help="persist BENCH_server.json for CI upload")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     if args.scenario == "overload":
@@ -297,6 +299,9 @@ def main(argv=None) -> int:
                      duration_s=args.duration_s, max_queue=args.max_queue)
     else:
         run()
+    if args.artifact:
+        from benchmarks.common import write_artifact
+        write_artifact("server")
     return 0
 
 

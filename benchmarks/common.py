@@ -1,15 +1,25 @@
-"""Benchmark helpers: timing + CSV rows.
+"""Benchmark helpers: timing, CSV rows, and persisted artifacts.
 
 The paper has no numeric tables (capability claims only), so each paper
 claim gets one benchmark: C1 ensemble-in-one-forward, C2 shared memory,
 C3 flexible batching; plus the production extensions (continuous batching)
 and kernel oracles.  CSV schema: name,us_per_call,derived.
+
+Each bench can also persist a ``BENCH_<scenario>.json`` artifact
+(``write_artifact``) carrying the scenario name, the commit under test,
+the emitted medians, and any self-check verdicts — CI uploads these, so
+regressions are diffable across runs rather than lost in job logs.
+``write_junit`` renders self-check verdicts as a junit testsuite (one
+testcase per check), the format CI surfaces natively.
 """
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
 
@@ -40,3 +50,54 @@ def _block(out):
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     ROWS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def commit_sha() -> str:
+    """Commit under test: CI's GITHUB_SHA, else git, else 'unknown'."""
+    sha = os.environ.get("GITHUB_SHA")
+    if sha:
+        return sha
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def write_artifact(scenario: str,
+                   checks: Optional[List[Tuple[str, Optional[str]]]] = None,
+                   out_dir: str = ".") -> str:
+    """Persist ``BENCH_<scenario>.json``: commit, every row emitted so
+    far (medians), and self-check verdicts (name -> pass/fail detail)."""
+    path = os.path.join(out_dir, f"BENCH_{scenario}.json")
+    doc = {
+        "scenario": scenario,
+        "commit": commit_sha(),
+        "unix_time": time.time(),
+        "medians": [{"name": n, "us_per_call": us, "derived": d}
+                    for n, us, d in ROWS],
+        "self_checks": [{"name": n, "passed": f is None,
+                         **({"detail": f} if f else {})}
+                        for n, f in (checks or [])],
+    }
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=1)
+    os.replace(tmp, path)
+    print(f"# artifact: {path}")
+    return path
+
+
+def write_junit(path: str, suite: str,
+                checks: List[Tuple[str, Optional[str]]]) -> None:
+    """Self-check verdicts as a junit testsuite (CI-surfaced)."""
+    import xml.etree.ElementTree as ET
+    el = ET.Element("testsuite", name=suite, tests=str(len(checks)),
+                    failures=str(sum(1 for _, f in checks if f)))
+    for name, failure in checks:
+        case = ET.SubElement(el, "testcase", classname=suite, name=name)
+        if failure:
+            ET.SubElement(case, "failure", message=failure)
+    ET.ElementTree(el).write(path, encoding="unicode",
+                             xml_declaration=True)

@@ -30,6 +30,12 @@ from repro.core.sampling import (SamplingParams, base_key, sample_tokens,
                                  samplers_for)
 from repro.models.build import Model
 
+# Named profiler regions: an on-demand jax.profiler capture (POST
+# /v1/debug/profile) shows the serving data path as labelled rows instead
+# of anonymous XLA launches.  TraceAnnotation is a TraceMe — nanoseconds
+# when no capture is active — so it stays on permanently.
+_annotate = jax.profiler.TraceAnnotation
+
 
 @dataclass
 class GenerationResult:
@@ -85,11 +91,13 @@ class InferenceEngine:
 
     def prefill(self, batch: Dict[str, Any], state):
         self.prefill_calls += 1
-        return self._prefill(self.params, batch, state)
+        with _annotate("flexserve.prefill"):
+            return self._prefill(self.params, batch, state)
 
     def decode(self, token, state):
         self.decode_calls += 1
-        return self._decode(self.params, token, state)
+        with _annotate("flexserve.decode"):
+            return self._decode(self.params, token, state)
 
     def decode_sample(self, token, state, samp: Dict[str, Any], ctr):
         """One fused decode tick: model decode step + on-device sampling.
@@ -99,15 +107,18 @@ class InferenceEngine:
         thing a caller needs to pull to host; ids and counters feed the
         next tick without leaving the device."""
         self.decode_calls += 1
-        return self._decode_sample(self.params, token, state,
-                                   samp["temperature"], samp["top_k"],
-                                   samp["top_p"], samp["key"], ctr)
+        with _annotate("flexserve.decode_sample"):
+            return self._decode_sample(self.params, token, state,
+                                       samp["temperature"], samp["top_k"],
+                                       samp["top_p"], samp["key"], ctr)
 
     def sample(self, logits, samp: Dict[str, Any], ctr):
         """On-device sampling of standalone logits (the prefill first-token
         path); same per-row contract as ``decode_sample``."""
-        return self._sample(logits, samp["temperature"], samp["top_k"],
-                            samp["top_p"], samp["key"], ctr)
+        with _annotate("flexserve.sample"):
+            return self._sample(logits, samp["temperature"],
+                                samp["top_k"], samp["top_p"],
+                                samp["key"], ctr)
 
     def decode_cache_size(self) -> Optional[int]:
         """Compiled-variant count of the fused decode step (None when this
@@ -144,8 +155,9 @@ class InferenceEngine:
                                               batch_axes)
 
             self._insert_rows = jax.jit(insert)
-        return self._insert_rows(pool_state, group_state, src_rows,
-                                 write_mask)
+        with _annotate("flexserve.insert_rows"):
+            return self._insert_rows(pool_state, group_state, src_rows,
+                                     write_mask)
 
     def state_batch_axes(self):
         """Per-leaf batch-axis pytree of the decode state, found by
@@ -395,8 +407,9 @@ class PagedInferenceEngine(InferenceEngine):
         Returns ``(first-token logits, new state)`` — the pool is updated
         in place (donated); table/length device arrays pass through."""
         self.prefill_calls += 1
-        return self._paged_prefill(self.params, tokens, lengths, state,
-                                   ctx_table, ctx_lens, dest_table)
+        with _annotate("flexserve.paged_prefill"):
+            return self._paged_prefill(self.params, tokens, lengths, state,
+                                       ctx_table, ctx_lens, dest_table)
 
     def generate(self, *args, **kwargs):
         raise NotImplementedError(

@@ -181,6 +181,8 @@ class KVPager:
         self.prefix = PrefixCache(self.allocator)
         self.prefix_hit_tokens = 0
         self.prefix_lookup_tokens = 0
+        self.pages_used_high_water = 0   # peak concurrent page residency
+        self.oom_events = 0              # allocs that failed post-eviction
 
     # --- admission-side API ---------------------------------------------------
 
@@ -201,7 +203,14 @@ class KVPager:
         while self.allocator.free_pages < n:
             if not self.prefix.evict_lru():
                 break
-        return self.allocator.alloc(n)
+        try:
+            out = self.allocator.alloc(n)
+        except PagerOOM:
+            self.oom_events += 1
+            raise
+        self.pages_used_high_water = max(self.pages_used_high_water,
+                                         self.allocator.used_pages)
+        return out
 
     def register_prefix(self, tokens: Sequence[int],
                         pages: Sequence[int]) -> None:
@@ -235,7 +244,9 @@ class KVPager:
             "pages_total": self.usable_pages,
             "pages_used": self.allocator.used_pages,
             "pages_free": self.allocator.free_pages,
+            "pages_used_high_water": self.pages_used_high_water,
             "page_utilization": self.utilization(),
+            "oom_events": self.oom_events,
             "prefix_cached_pages": len(self.prefix),
             "prefix_hits": self.prefix.hits,
             "prefix_misses": self.prefix.misses,

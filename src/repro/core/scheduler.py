@@ -67,6 +67,7 @@ import numpy as np
 from repro.core.engine import GenerationResult, InferenceEngine
 from repro.core.kv_pager import KVPager, PagerOOM, PrefixMatch
 from repro.core.sampling import (SamplingParams, TokenSampler, base_key)
+from repro.core.telemetry import (BYTES_BUCKETS, Histogram, Reservoir, pctl)
 
 # sink(request, token, done): token is None only for a terminal
 # notification that produced no token (cancellation, driver error)
@@ -100,6 +101,14 @@ class Request:
     finished_at: Optional[float] = None
     sampler: Optional[TokenSampler] = None
     base_key: Optional[np.ndarray] = None   # raw uint32[2] device rng key
+    # ctx.trace cached at submit so hot paths pay one attribute load,
+    # not a getattr chain, per guard
+    trace: Optional[Any] = None
+    # snapshot of the scheduler's cumulative per-slot share accumulators,
+    # taken at slot ATTACH; the delta against them at slot DETACH is the
+    # request's decode accounting (see step()).  Keeps the per-tick trace
+    # cost O(1) instead of O(slots).
+    share_mark: Optional[Tuple[int, float, float, float]] = None
     # paged engines only: the KV pages this request owns references to.
     # Pages stay pinned while the request parks, so resume is O(1)
     # (re-point the slot's page-table row, no recompute).
@@ -125,15 +134,22 @@ class Request:
         return self.finished_at - self.submitted_at
 
 
-def pctl(sorted_vals: Sequence[float], p: float) -> float:
-    """Nearest-rank percentile of an ascending-sorted sample (0 if empty)."""
-    if not sorted_vals:
-        return 0.0
-    return sorted_vals[min(len(sorted_vals) - 1,
-                           int(p * (len(sorted_vals) - 1)))]
-
+# pctl is imported from repro.core.telemetry and re-exported here for the
+# benches/coalescer that historically imported it from this module
 
 _WINDOW = 4096                  # bounded stat windows (trimmed to half)
+
+# keys a pager stats() dict carries, zeroed for dense engines so the
+# /metrics "pager" section has a stable schema either way
+ZERO_PAGER_STATS: Dict[str, Any] = {
+    "page_size": 0, "pages_total": 0, "pages_used": 0, "pages_free": 0,
+    "pages_used_high_water": 0, "page_utilization": 0.0, "oom_events": 0,
+    "prefix_cached_pages": 0, "prefix_hits": 0, "prefix_misses": 0,
+    "prefix_hit_rate": 0.0, "prefix_hit_tokens": 0,
+    "prefix_lookup_tokens": 0, "prefix_evictions": 0,
+    "resumes_without_recompute": 0, "preempt_recompute": 0,
+    "prefill_tokens_forwarded": 0, "prefill_tokens_reused": 0,
+}
 
 
 class ContinuousBatchingScheduler:
@@ -205,17 +221,40 @@ class ContinuousBatchingScheduler:
         # the sampling path)
         self.decode_ticks = 0
         self.decode_transfer_bytes = 0       # lifetime, decode ticks only
+        # cumulative per-slot SHARES: each decode tick adds that tick's
+        # evenly-split cost exactly once (1 tick, device_ms/active,
+        # host_ms/active, transfer/active).  A request marks these at slot
+        # attach and flushes the delta into its trace at detach, so
+        # per-request decode accounting never loops over slots per tick.
+        self._share_ticks = 0
+        self._share_device_ms = 0.0
+        self._share_host_ms = 0.0
+        self._share_transfer = 0.0
         self.prefill_transfer_bytes = 0      # first-token path
         self.prefill_forwards = 0
         self.prefill_requests = 0            # admitted through them
+        self.prefill_s_total = 0.0           # cumulative prefill seconds
         self.host_ms_window: List[float] = []
         self.device_ms_window: List[float] = []
         self.prefill_ms_window: List[float] = []
         self.tick_transfer_window: List[int] = []   # bytes per decode tick
-        # ascending-insert stat windows, mutated only by the driving thread
-        self.latency_window: List[float] = []
-        self.ttft_window: List[float] = []
-        self.itl_window: List[float] = []    # inter-token gaps, seconds
+        # request-level samples: fixed-size uniform reservoirs (bounded
+        # memory over the full lifetime, not just a recency window) back
+        # the JSON percentiles; fixed-bucket histograms with slow-request
+        # exemplars back the Prometheus exposition
+        self.latency_res = Reservoir(2048)
+        self.ttft_res = Reservoir(2048)
+        self.itl_res = Reservoir(4096)       # inter-token gaps, seconds
+        self.hist: Dict[str, Histogram] = {
+            "request_latency_ms": Histogram(),
+            "ttft_ms": Histogram(),
+            "inter_token_ms": Histogram(),
+            "queue_wait_ms": Histogram(),
+            "prefill_ms": Histogram(),
+            "decode_host_ms": Histogram(),
+            "decode_device_ms": Histogram(),
+            "tick_transfer_bytes": Histogram(BYTES_BUCKETS),
+        }
 
     # --- client API ------------------------------------------------------------
 
@@ -243,6 +282,11 @@ class ContinuousBatchingScheduler:
         req.sampler = sampling.sampler()
         req.base_key = base_key(sampling.resolve_seed())
         req.submitted_at = time.perf_counter()
+        req.trace = getattr(ctx, "trace", None)
+        if req.trace is not None:
+            req.trace.event("scheduler_queued", t=req.submitted_at,
+                            req_id=req.req_id, priority=req.priority,
+                            pending=self.pending)
         self._queue_for(req).append(req)
         self.pending_high_water = max(self.pending_high_water, self.pending)
         return req
@@ -285,6 +329,9 @@ class ContinuousBatchingScheduler:
             return False      # never actually parked (flag raced) or done
         if req.done:
             return False
+        if req.trace is not None:
+            req.trace.event("resume", req_id=req.req_id,
+                            fast=bool(req.pages))
         self._queue_for(req).appendleft(req)
         return True
 
@@ -308,6 +355,7 @@ class ContinuousBatchingScheduler:
         t_tick = time.perf_counter()
         finished = self._reap()
         prefill_s = self._admit(finished)
+        self.prefill_s_total += prefill_s
         if self.paged:
             self._ensure_decode_pages()
         if self.active == 0:
@@ -352,6 +400,17 @@ class ContinuousBatchingScheduler:
         self.decode_ticks += 1
         self.decode_transfer_bytes += transfer
         self._push(self.tick_transfer_window, transfer)
+        # per-request decode accounting rides as counters, not spans: a
+        # request may decode for thousands of ticks and a span per tick
+        # would defeat the bounded-trace design.  The per-tick device/
+        # transfer cost splits evenly across the slots that shared it —
+        # accumulated ONCE per tick into the cumulative share counters;
+        # each request flushes its attach→detach delta (O(1) per request,
+        # not O(slots) per tick) in _flush_share.
+        inv = 1.0 / self.active
+        self._share_ticks += 1
+        self._share_device_ms += 1e3 * device_s * inv
+        self._share_transfer += transfer * inv
         now = time.perf_counter()
         for b, req in enumerate(self.slots):
             if req is None:
@@ -382,9 +441,20 @@ class ContinuousBatchingScheduler:
             self._tok_dev, self._ctr_dev = tok_dev, ctr_dev
         self._push(self.device_ms_window, 1e3 * device_s)
         self._push(self.prefill_ms_window, 1e3 * prefill_s)
-        self._push(self.host_ms_window,
-                   1e3 * max(0.0, (time.perf_counter() - t_tick)
-                             - device_s - prefill_s))
+        host_ms = 1e3 * max(0.0, (time.perf_counter() - t_tick)
+                            - device_s - prefill_s)
+        self._push(self.host_ms_window, host_ms)
+        h = self.hist
+        h["decode_device_ms"].observe(1e3 * device_s)
+        h["decode_host_ms"].observe(host_ms)
+        h["prefill_ms"].observe(1e3 * prefill_s)
+        h["tick_transfer_bytes"].observe(transfer)
+        # ``inv`` is this tick's 1/active from before the token loop: the
+        # host cost was shared by the slots that decoded, not by whoever
+        # remains after finishes freed slots.  (A request that finished
+        # THIS tick was flushed mid-loop and misses this one host share —
+        # a sub-ms rounding accepted for the O(1) design.)
+        self._share_host_ms += host_ms * inv
         return finished
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -434,6 +504,10 @@ class ContinuousBatchingScheduler:
                 # dropped BEFORE its prefill forward: the deadline is
                 # honored at the hand-off, not after the work is spent
                 self.deadline_total += 1
+                if req.trace is not None:
+                    req.trace.event("deadline_drop", t=now,
+                                    stage="scheduler_admit",
+                                    req_id=req.req_id)
                 self._finish(req, "deadline", now)
                 finished.append(req)
                 self._notify(req, None)
@@ -494,6 +568,8 @@ class ContinuousBatchingScheduler:
                     stacked = np.pad(stacked, pad)
                 batch[k] = jnp.asarray(stacked)
         t0 = time.perf_counter()
+        for req in reqs:
+            self._span_queue_wait(req, t0)
         group_state = self.engine.new_state(B)
         logits, group_state = self.engine.prefill(batch, group_state)
         self.prefill_forwards += 1
@@ -534,6 +610,7 @@ class ContinuousBatchingScheduler:
             else:
                 b = free.pop(0)
                 self.slots[b] = req
+                self._mark_share(req)
                 self._last_token[b] = first
                 self._ctr[b] = len(req.output)
                 p = req.sampler.params
@@ -551,7 +628,11 @@ class ContinuousBatchingScheduler:
                                                  jnp.asarray(src_rows),
                                                  jnp.asarray(write_mask))
             prefill_s += time.perf_counter() - t1
+        t_end = time.perf_counter()
         for req in reqs:                     # every row got its first token
+            if req.trace is not None:
+                req.trace.span("prefill", t0, t_end,
+                               group_size=n, seq_bucket=S)
             self._notify(req, req.output[-1])
         return prefill_s
 
@@ -577,6 +658,10 @@ class ContinuousBatchingScheduler:
             now = time.perf_counter()
             if req.expired(now):
                 self.deadline_total += 1
+                if req.trace is not None:
+                    req.trace.event("deadline_drop", t=now,
+                                    stage="scheduler_admit",
+                                    req_id=req.req_id)
                 self._finish(req, "deadline", now)
                 finished.append(req)
                 self._notify(req, None)
@@ -644,6 +729,8 @@ class ContinuousBatchingScheduler:
             ctx_lens[i] = match.ctx_tokens
             dest[i, :len(new_pages)] = new_pages
         t0 = time.perf_counter()
+        for req, *_ in items:
+            self._span_queue_wait(req, t0)
         logits, self.state = self.engine.paged_prefill(
             self.state, jnp.asarray(tokens), jnp.asarray(lengths),
             jnp.asarray(ctx_table), jnp.asarray(ctx_lens),
@@ -675,6 +762,11 @@ class ContinuousBatchingScheduler:
         prefill_s = time.perf_counter() - t0
         now = time.perf_counter()
         for i, (req, match, new_pages, suffix, _, _) in enumerate(items):
+            if req.trace is not None:
+                req.trace.span("prefill", t0, now, group_size=n,
+                               seq_bucket=S, ctx_bucket=C,
+                               prefix_reused_tokens=match.ctx_tokens,
+                               suffix_tokens=len(suffix))
             req.pages = list(match.pages) + list(new_pages)
             seed = req.prompt + req.output
             # publish BEFORE the first-token finish check: even a request
@@ -691,6 +783,7 @@ class ContinuousBatchingScheduler:
             else:
                 b = free.pop(0)
                 self.slots[b] = req
+                self._mark_share(req)
                 self._table[b] = 0
                 self._table[b, :len(req.pages)] = req.pages
                 self._lengths[b] = len(seed)    # next write position
@@ -714,6 +807,7 @@ class ContinuousBatchingScheduler:
         rng counter (= tokens produced) keeps the seeded stream exactly
         where it left off."""
         self.slots[b] = req
+        self._mark_share(req)
         self._table[b] = 0
         self._table[b, :len(req.pages)] = req.pages
         self._lengths[b] = len(req.prompt) + len(req.output) - 1
@@ -727,6 +821,9 @@ class ContinuousBatchingScheduler:
         self._samp_dev = None
         self._state_dirty = True
         self.resumes_fast += 1
+        if req.trace is not None:
+            req.trace.event("reattach", req_id=req.req_id,
+                            pages=len(req.pages))
 
     def _ensure_decode_pages(self) -> None:
         """Before a decode tick, make sure every active slot owns the page
@@ -747,6 +844,9 @@ class ContinuousBatchingScheduler:
                 self._free_slot(b)
                 self._queue_for(req).appendleft(req)
                 self.preempt_recompute += 1
+                if req.trace is not None:
+                    req.trace.event("preempt", req_id=req.req_id,
+                                    cause="pager_oom", recompute=True)
                 continue
             req.pages.extend(pg)
             self._table[b, len(req.pages) - 1] = pg[0]
@@ -779,10 +879,37 @@ class ContinuousBatchingScheduler:
 
     # --- internals -------------------------------------------------------------
 
+    def _mark_share(self, req: Request) -> None:
+        """Slot ATTACH hook: snapshot the cumulative share accumulators.
+        Untraced requests carry no mark, so attach/detach stay free for
+        them and the per-tick accumulation is the whole tracing-off cost."""
+        if req.trace is not None:
+            req.share_mark = (self._share_ticks, self._share_device_ms,
+                              self._share_host_ms, self._share_transfer)
+
+    def _flush_share(self, req: Request) -> None:
+        """Slot DETACH hook: fold the attach→detach accumulator delta into
+        the request's trace counters.  Idempotent — the mark is consumed,
+        and a later re-attach (preempt/resume) lays down a fresh one, so a
+        request's counters accrue across every slot residency it had."""
+        m, req.share_mark = req.share_mark, None
+        if m is None or req.trace is None:
+            return
+        ticks = self._share_ticks - m[0]
+        if ticks:
+            tr = req.trace
+            tr.bump("decode_ticks", ticks)
+            tr.bump("decode_device_ms", self._share_device_ms - m[1])
+            tr.bump("decode_host_ms", self._share_host_ms - m[2])
+            tr.bump("decode_transfer_bytes", self._share_transfer - m[3])
+
     def _free_slot(self, b: int) -> None:
         """Release slot ``b`` and reset its sampling-param row to greedy,
         so a batch of remaining greedy slots regains the argmax fast path
         inside the fused step."""
+        req = self.slots[b]
+        if req is not None:
+            self._flush_share(req)
         self.slots[b] = None
         self._temps[b] = 0.0
         self._top_ks[b] = 0
@@ -817,6 +944,11 @@ class ContinuousBatchingScheduler:
                     self.parked.append(req)
                     req.pause_count += 1
                     self.pauses_total += 1
+                    if req.trace is not None:
+                        req.trace.event("preempt", t=now,
+                                        req_id=req.req_id,
+                                        cause="stalled_consumer",
+                                        pause_count=req.pause_count)
             elif req.expired(now):
                 self._free_slot(b)
                 self.deadline_total += 1
@@ -864,13 +996,31 @@ class ContinuousBatchingScheduler:
             return "length"
         return None
 
+    def _span_queue_wait(self, req: Request, t_admit: float) -> None:
+        """Record the submit→admit interval on the request's trace and in
+        the queue-wait histogram (exemplar = this trace)."""
+        wait_ms = 1e3 * (t_admit - req.submitted_at)
+        tid = None
+        if req.trace is not None:
+            req.trace.span("queue_wait", req.submitted_at, t_admit,
+                           req_id=req.req_id, priority=req.priority)
+            tid = req.trace.trace_id
+        self.hist["queue_wait_ms"].observe(wait_ms, tid)
+
     def _record_token(self, req: Request, token: int, now: float) -> None:
         req.output.append(token)
+        tid = req.trace.trace_id if req.trace is not None else None
         if req.first_token_at is None:
             req.first_token_at = now
-            self._push(self.ttft_window, now - req.submitted_at)
+            ttft = now - req.submitted_at
+            self.ttft_res.add(ttft)
+            self.hist["ttft_ms"].observe(1e3 * ttft, tid)
+            if req.trace is not None:
+                req.trace.event("first_token", t=now, req_id=req.req_id)
         else:
-            self._push(self.itl_window, now - req.last_token_at)
+            gap = now - req.last_token_at
+            self.itl_res.add(gap)
+            self.hist["inter_token_ms"].observe(1e3 * gap, tid)
         req.last_token_at = now
 
     def _finish(self, req: Request, reason: str, now: float) -> None:
@@ -889,7 +1039,15 @@ class ContinuousBatchingScheduler:
         # (prompt, output, sampler, sink closure) would leak on a
         # long-running endpoint
         self._push(self.completed, req)
-        self._push(self.latency_window, now - req.submitted_at)
+        latency = now - req.submitted_at
+        self.latency_res.add(latency)
+        if req.trace is not None:
+            self.hist["request_latency_ms"].observe(1e3 * latency,
+                                                    req.trace.trace_id)
+            req.trace.event("request_finished", t=now, req_id=req.req_id,
+                            reason=reason, tokens=len(req.output))
+        else:
+            self.hist["request_latency_ms"].observe(1e3 * latency)
 
     def _notify(self, req: Request, token: Optional[int]) -> None:
         if req.sink is not None:
@@ -1106,13 +1264,14 @@ class SchedulerService:
     def stats(self) -> Dict[str, Any]:
         with self._lock:
             s = self.scheduler
-            lat = sorted(s.latency_window)
-            ttft = sorted(s.ttft_window)
-            itl = sorted(s.itl_window)
+            lat50, lat95 = s.latency_res.percentiles(0.50, 0.95)
+            ttft50, ttft95 = s.ttft_res.percentiles(0.50, 0.95)
+            itl50, itl95 = s.itl_res.percentiles(0.50, 0.95)
             host_ms = sorted(s.host_ms_window)
             dev_ms = sorted(s.device_ms_window)
             pre_ms = sorted(s.prefill_ms_window)
             xfer = sorted(s.tick_transfer_window)
+            h = s.hist
             decode = {
                 "device_sampling": s.device_sampling,
                 "ticks": s.decode_ticks,
@@ -1126,11 +1285,16 @@ class SchedulerService:
                 "prefill_transfer_bytes_total": s.prefill_transfer_bytes,
                 "prefill_forwards": s.prefill_forwards,
                 "prefill_requests": s.prefill_requests,
+                "prefill_s_total": s.prefill_s_total,
                 "compiled_steps": s.engine.decode_cache_size(),
+                "host_ms_hist": h["decode_host_ms"].snapshot(),
+                "device_ms_hist": h["decode_device_ms"].snapshot(),
+                "prefill_ms_hist": h["prefill_ms"].snapshot(),
+                "transfer_bytes_hist": h["tick_transfer_bytes"].snapshot(),
             }
             return {
                 "decode": decode,
-                "pager": s.pager_stats(),
+                "pager": s.pager_stats() or dict(ZERO_PAGER_STATS),
                 "steps": s.steps, "active_slots": s.active,
                 "pending": s.pending,
                 "pending_high_water": s.pending_high_water,
@@ -1141,12 +1305,17 @@ class SchedulerService:
                 "completed": s.completed_total,
                 "cancelled": s.cancelled_total,
                 "deadline_missed": s.deadline_total,
-                "request_latency_p50_ms": 1e3 * pctl(lat, 0.50),
-                "request_latency_p95_ms": 1e3 * pctl(lat, 0.95),
-                "ttft_p50_ms": 1e3 * pctl(ttft, 0.50),
-                "ttft_p95_ms": 1e3 * pctl(ttft, 0.95),
-                "inter_token_p50_ms": 1e3 * pctl(itl, 0.50),
-                "inter_token_p95_ms": 1e3 * pctl(itl, 0.95),
+                "request_latency_p50_ms": 1e3 * lat50,
+                "request_latency_p95_ms": 1e3 * lat95,
+                "ttft_p50_ms": 1e3 * ttft50,
+                "ttft_p95_ms": 1e3 * ttft95,
+                "inter_token_p50_ms": 1e3 * itl50,
+                "inter_token_p95_ms": 1e3 * itl95,
+                "request_latency_ms_hist":
+                    h["request_latency_ms"].snapshot(),
+                "ttft_ms_hist": h["ttft_ms"].snapshot(),
+                "inter_token_ms_hist": h["inter_token_ms"].snapshot(),
+                "queue_wait_ms_hist": h["queue_wait_ms"].snapshot(),
             }
 
     def close(self) -> None:

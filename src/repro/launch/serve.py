@@ -34,7 +34,9 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               max_batch: int = 8, full: bool = False,
               seed: int = 0, num_slots: int = 4,
               max_queue: int = 64, generate_token_budget=None,
-              default_deadline_ms=None) -> FlexServeApp:
+              default_deadline_ms=None, trace: bool = True,
+              flight_recorder_size: int = 256,
+              profile_dir=None) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -60,7 +62,10 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
     return FlexServeApp(registry, ensemble, engine, num_slots=num_slots,
                         max_queue=max_queue,
                         generate_token_budget=generate_token_budget,
-                        default_deadline_ms=default_deadline_ms)
+                        default_deadline_ms=default_deadline_ms,
+                        trace=trace,
+                        flight_recorder_size=flight_recorder_size,
+                        profile_dir=profile_dir)
 
 
 def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
@@ -68,7 +73,9 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     full: bool = False, seed: int = 0,
                     num_slots: int = 4, max_queue: int = 64,
                     generate_token_budget=None,
-                    default_deadline_ms=None) -> FlexServeApp:
+                    default_deadline_ms=None, trace: bool = True,
+                    flight_recorder_size: int = 256,
+                    profile_dir=None) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
     generation engine is ALSO store-versioned: the first decode-capable
@@ -102,7 +109,10 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
     app = FlexServeApp(manager=manager, num_slots=num_slots,
                        max_queue=max_queue,
                        generate_token_budget=generate_token_budget,
-                       default_deadline_ms=default_deadline_ms)
+                       default_deadline_ms=default_deadline_ms,
+                       trace=trace,
+                       flight_recorder_size=flight_recorder_size,
+                       profile_dir=profile_dir)
     if engine_member is not None and app.generation is not None:
         res = manager.load_engine(engine_member)
         print(f"[serve] generation engine {res['engine']} "
@@ -135,6 +145,15 @@ def main(argv=None) -> int:
     ap.add_argument("--model-store", default=None, metavar="DIR",
                     help="versioned model store directory; enables the "
                          "lifecycle admin API and hot swaps")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="disable per-request tracing + the flight "
+                         "recorder (GET /v1/trace/{id} 404s)")
+    ap.add_argument("--flight-recorder-size", type=int, default=256,
+                    help="completed request timelines kept queryable "
+                         "via GET /v1/trace/{id}")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="enable POST /v1/debug/profile; captures land "
+                         "under this directory")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
 
@@ -142,7 +161,10 @@ def main(argv=None) -> int:
               max_batch=args.max_batch, full=args.full,
               num_slots=args.num_slots, max_queue=args.max_queue,
               generate_token_budget=args.generate_token_budget,
-              default_deadline_ms=args.default_deadline_ms)
+              default_deadline_ms=args.default_deadline_ms,
+              trace=not args.no_trace,
+              flight_recorder_size=args.flight_recorder_size,
+              profile_dir=args.profile_dir)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:
@@ -159,9 +181,11 @@ def main(argv=None) -> int:
     host, port = server.address
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "
           f"{len(app.registry)} model(s): {app.registry.names()}")
-    print("[serve] routes: GET /health /healthz /v1/models "
+    print("[serve] routes: GET /health /healthz /metrics[?format="
+          "prometheus] /v1/trace/{id} /v1/traces /v1/models "
           "/v1/models/{name} /v1/engines; POST /v1/infer /v1/detect "
           "/v1/generate (+\"stream\": true for token streaming)"
+          + (" /v1/debug/profile" if args.profile_dir else "")
           + (" /v1/models/{name}/load|unload|rollback|gc "
              "/v1/engines/{name}/load|rollback"
              if app.manager else ""))

@@ -8,6 +8,9 @@ from repro.serving.lifecycle import (LifecycleError, ModelManager,
                                      default_engine_factory, default_factory)
 from repro.serving.modelstore import ModelStore, StoreError
 from repro.serving.server import FlexServeApp, FlexServeServer
+from repro.serving.telemetry import (DeviceProfiler, FlightRecorder,
+                                     Histogram, Reservoir, Trace,
+                                     prometheus_exposition)
 
 __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
            "HTTPStatusError", "BatchCoalescer", "CoalesceError",
@@ -16,4 +19,6 @@ __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
            "ModelStore", "StoreError",
            "ModelManager", "LifecycleError", "default_factory",
            "default_engine_factory", "GenerationError", "GenerationService",
-           "GenerationStream"]
+           "GenerationStream",
+           "FlightRecorder", "Trace", "Histogram", "Reservoir",
+           "DeviceProfiler", "prometheus_exposition"]

@@ -82,6 +82,9 @@ class RequestContext:
     priority: str = "interactive"
     client: Optional[str] = None
     trace_id: str = ""
+    # live telemetry.Trace attached by the server's flight recorder (None
+    # when tracing is off); planes read it duck-typed and guard on None
+    trace: Optional[Any] = None
 
     def remaining_s(self, now: Optional[float] = None) -> Optional[float]:
         if self.deadline_s is None:
@@ -229,11 +232,15 @@ class AdmissionController:
         arrived already expired, 429 if the plane's budget is full)."""
         now = time.perf_counter()
         cost = max(1, int(cost))
+        tr = ctx.trace
         with self._lock:
             st = self._plane(plane)
             if ctx.expired(now):
                 miss = st["deadline_miss"]
                 miss["admission"] = miss.get("admission", 0) + 1
+                if tr is not None:
+                    tr.event("deadline_drop", t=now, stage="admission",
+                             plane=plane)
                 raise DeadlineError(
                     f"deadline exceeded before admission "
                     f"({ctx.trace_id or 'request'})")
@@ -250,14 +257,22 @@ class AdmissionController:
             # plane (otherwise it could never run at all)
             if over and depth > 0:
                 st["shed"][ctx.priority] += 1
+                retry = self._retry_after_locked(st, depth + cost)
+                if tr is not None:
+                    tr.event("shed", t=now, plane=plane, cost=cost,
+                             depth=depth, budget=budget,
+                             retry_after_s=round(retry, 3))
                 raise ShedError(
                     f"{plane} queue full "
                     f"({depth}/{budget} units, "
                     f"priority={ctx.priority})",
-                    retry_after_s=self._retry_after_locked(st, depth + cost))
+                    retry_after_s=retry)
             st["depth"][ctx.priority] += cost
             st["admitted"][ctx.priority] += 1
             st["high_water"] = max(st["high_water"], depth + cost)
+        if tr is not None:
+            tr.event("admitted", t=now, plane=plane, cost=cost,
+                     depth=depth + cost, budget=budget)
         return Ticket(self, plane, ctx.priority, cost, now)
 
     def _release(self, ticket: Ticket) -> None:

@@ -89,14 +89,23 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                        "coalesce": {batches_formed, rows_total,
                                     mean_rows_per_batch, max_rows_per_batch,
                                     queue_wait_p50_ms, queue_wait_p95_ms,
+                                    queue_wait_ms_hist, forward_ms_hist,
                                     adaptive_linger, effective_linger_ms,
                                     ewma_interarrival_ms},
                        "ensemble_compiles": {"<bucket>": count, ...},
+                       "admission": {max_queue, bulk_max,
+                                     default_deadline_ms,
+                                     planes: {plane: {depth, depth_total,
+                                              budget, high_water, admitted,
+                                              shed, deadline_miss,
+                                              ewma_release_gap_ms}}},
                        "generate": {steps, active_slots, pending, num_slots,
-                                    completed, cancelled,
+                                    completed, cancelled, deadline_missed,
                                     request_latency_p50_ms/…_p95_ms,
                                     ttft_p50_ms/…_p95_ms,
                                     inter_token_p50_ms/…_p95_ms,
+                                    request_latency_ms_hist, ttft_ms_hist,
+                                    inter_token_ms_hist, queue_wait_ms_hist,
                                     decode: {device_sampling, ticks,
                                              host_ms_p50/p95,
                                              device_ms_p50/p95,
@@ -105,10 +114,78 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                                              transfer_bytes_total,
                                              prefill_forwards,
                                              prefill_requests,
-                                             compiled_steps},
+                                             prefill_s_total,
+                                             compiled_steps,
+                                             host_ms_hist, device_ms_hist,
+                                             prefill_ms_hist,
+                                             transfer_bytes_hist},
+                                    pager: {page_size, pages_total,
+                                            pages_used, pages_free,
+                                            pages_used_high_water,
+                                            page_utilization, oom_events,
+                                            prefix_* , preempt_recompute,
+                                            resumes_without_recompute,
+                                            prefill_tokens_forwarded,
+                                            prefill_tokens_reused}
+                                           (zeroed for dense engines),
                                     streams: {started, completed,
-                                              cancelled, failed},
-                                    engines: {alias: {...}}}}
+                                              cancelled, failed,
+                                              deadline, paused},
+                                    engines: {alias: {...}}},
+                       "lifecycle": {loads, unloads, swaps, rollbacks, ...}
+                                    (zeroed without a ModelManager),
+                       "telemetry": {capacity, in_flight, completed,
+                                     completed_total, leaked_total}}
+
+    ``*_hist`` values are fixed-bucket histogram snapshots:
+    {"le": [bounds..., "+Inf"], "counts": [cumulative...], "count", "sum",
+     "exemplar"?: {"trace_id", "value"}} — the exemplar names the slowest
+    observed request so dashboards can link a tail spike to its trace.
+
+GET  /metrics?format=prometheus
+    -> text/plain; version=0.0.4 Prometheus exposition of the same
+    document: nested keys flatten to ``flexserve_<section>_<key>`` gauges
+    and every ``*_hist`` renders as a histogram family
+    (``flexserve..._bucket{le="..."}`` / ``_sum`` / ``_count``), with the
+    exemplar trace id as an ``# EXEMPLAR`` comment line.
+
+Telemetry surface (the span tracer keyed by ``trace_id``):
+
+GET  /v1/trace/{trace_id}
+    -> {"trace_id", "plane", "client", "priority", "in_flight",
+        "started_unix", "duration_ms", "status", "finish_reason",
+        "error",
+        "spans":  [{"name", "start_ms", "end_ms", "duration_ms",
+                    "attrs"?}, ...],     # http_parse, queue_wait,
+                                         # coalesce_queue, coalesce_forward,
+                                         # prefill
+        "events": [{"name", "t_ms", "attrs"?}, ...],
+                                         # admitted, shed, deadline_drop,
+                                         # scheduler_queued, first_token,
+                                         # preempt, resume, reattach,
+                                         # request_finished
+        "counters": {...}}               # decode_ticks, decode_device_ms,
+                                         # decode_host_ms,
+                                         # decode_transfer_bytes,
+                                         # stream_events, stream_stalls,
+                                         # swap_drain_forced
+    404 when the id is neither in flight nor in the flight recorder's
+    ring of recently completed requests (or tracing is disabled).
+    Every response from a traced plane carries its ``X-Request-Id``
+    header; shed (429) and deadline (504) requests leave timelines too.
+
+GET  /v1/traces  -> {"in_flight": [...ids], "recent": [{trace_id, plane,
+                     status, finish_reason, duration_ms}, ...],
+                     "telemetry": {capacity, in_flight, completed, ...}}
+
+POST /v1/debug/profile   {"duration_ms"?: 1000, "mode"?: "auto"}
+    -> 202 {"mode": "jax"|"python", "artifact": path, "duration_ms",
+            "started_unix"}
+    Starts a time-boxed capture and returns immediately; ``artifact`` is
+    where it lands (a TensorBoard trace dir for jax mode, collapsed-stack
+    JSON for python mode).  409 while a capture is already running; 503
+    when profiling is disabled (no --profile-dir).
+GET  /v1/debug/profile   -> {"active": {...}|null, "captures_total": n}
 """
 
 from __future__ import annotations
@@ -132,6 +209,30 @@ class ApiError(Exception):
         self.headers = headers or {}
 
 
+class JsonResponse:
+    """A JSON payload plus extra response headers (e.g. ``X-Request-Id``).
+    Route handlers that return a bare dict get the default headers."""
+
+    def __init__(self, payload: Dict[str, Any],
+                 headers: Optional[Dict[str, str]] = None,
+                 status: int = 200):
+        self.payload = payload
+        self.headers = headers or {}
+        self.status = status
+
+
+class PlainTextResponse:
+    """A non-JSON body (the Prometheus exposition)."""
+
+    def __init__(self, text: str,
+                 content_type: str = "text/plain; version=0.0.4; "
+                                     "charset=utf-8",
+                 status: int = 200):
+        self.text = text
+        self.content_type = content_type
+        self.status = status
+
+
 class StreamingResponse:
     """A route handler's signal to the HTTP layer: write ``events`` as a
     chunked-transfer NDJSON body (one event per chunk) instead of a single
@@ -139,8 +240,10 @@ class StreamingResponse:
     mid-stream (cancels the underlying request)."""
 
     def __init__(self, events: Iterator[Dict[str, Any]],
-                 on_disconnect: Optional[Callable[[], Any]] = None):
+                 on_disconnect: Optional[Callable[[], Any]] = None,
+                 headers: Optional[Dict[str, str]] = None):
         self.events = events
+        self.headers: Dict[str, str] = headers or {}
         self._on_disconnect = on_disconnect
 
     def disconnect(self) -> None:

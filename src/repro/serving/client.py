@@ -80,9 +80,12 @@ class HTTPStatusError(RuntimeError):
 
 class Response(dict):
     """A route's JSON payload plus client-side delivery metadata
-    (``attempts`` — how many sends it took, 1 when nothing was shed)."""
+    (``attempts`` — how many sends it took, 1 when nothing was shed;
+    ``trace_id`` — the server's ``X-Request-Id`` echo, usable with
+    ``trace()`` to fetch the request's recorded timeline)."""
 
     attempts: int = 1
+    trace_id: Optional[str] = None
 
 
 class _Connection:
@@ -101,9 +104,10 @@ class _Connection:
             pass
 
     def _send_and_head(self, request: bytes
-                       ) -> Tuple[int, int, bool, Optional[float]]:
+                       ) -> Tuple[int, int, bool, Optional[float],
+                                  Optional[str]]:
         """Send + parse the response head ->
-        (status, length, chunked, retry_after_s)."""
+        (status, length, chunked, retry_after_s, trace_id)."""
         self.sock.sendall(request)
         status_line = self.rfile.readline(65537)
         if not status_line:
@@ -112,7 +116,7 @@ class _Connection:
         if len(parts) < 2 or not parts[0].startswith(b"HTTP/"):
             raise ConnectionError(f"malformed status line {status_line!r}")
         status = int(parts[1])
-        length, chunked, retry_after = 0, False, None
+        length, chunked, retry_after, trace_id = 0, False, None, None
         while True:
             h = self.rfile.readline(65537)
             if h in (b"\r\n", b"\n", b""):
@@ -125,15 +129,19 @@ class _Connection:
                 chunked = b"chunked" in val.lower()
             elif key == b"retry-after":
                 retry_after = parse_retry_after(val)
-        return status, length, chunked, retry_after
+            elif key == b"x-request-id":
+                trace_id = val.strip().decode("latin-1")
+        return status, length, chunked, retry_after, trace_id
 
     def roundtrip(self, request: bytes
-                  ) -> Tuple[int, bytes, Optional[float]]:
-        status, length, chunked, retry_after = self._send_and_head(request)
+                  ) -> Tuple[int, bytes, Optional[float], Optional[str]]:
+        status, length, chunked, retry_after, trace_id = \
+            self._send_and_head(request)
         if chunked:
-            return status, b"".join(self.read_chunks()), retry_after
+            return status, b"".join(self.read_chunks()), retry_after, \
+                trace_id
         return (status, self.rfile.read(length) if length else b"",
-                retry_after)
+                retry_after, trace_id)
 
     def stream(self, request: bytes
                ) -> Tuple[int, Iterator[bytes], Optional[float]]:
@@ -145,7 +153,8 @@ class _Connection:
         yielded the moment its chunk arrives); a Content-Length response
         degenerates to a single record.
         """
-        status, length, chunked, retry_after = self._send_and_head(request)
+        status, length, chunked, retry_after, _ = \
+            self._send_and_head(request)
         if not chunked:
             body = self.rfile.read(length) if length else b""
             return status, iter([body] if body else []), retry_after
@@ -222,7 +231,8 @@ class FlexServeClient:
                 f"\r\n").encode("latin-1") + body
 
     def _roundtrip_once(self, request: bytes
-                        ) -> Tuple[int, bytes, Optional[float]]:
+                        ) -> Tuple[int, bytes, Optional[float],
+                                   Optional[str]]:
         """One send with the stale-keep-alive reconnect, no status retry."""
         for attempt in (0, 1):
             fresh = getattr(self._local, "conn", None) is None
@@ -261,12 +271,14 @@ class FlexServeClient:
 
     def _request(self, method: str, path: str,
                  payload: Optional[Dict[str, Any]] = None, *,
-                 retries: Optional[int] = None) -> Response:
+                 retries: Optional[int] = None,
+                 ok: Tuple[int, ...] = (200,)) -> Response:
         request = self._raw_request(method, path, payload)
         retries = self.retries if retries is None else retries
         attempts = 0
         while True:
-            status, raw, retry_after = self._roundtrip_once(request)
+            status, raw, retry_after, trace_id = \
+                self._roundtrip_once(request)
             attempts += 1
             if status in self.retry_statuses and attempts <= retries:
                 # 429/503 are rejections (no server-side work happened):
@@ -274,13 +286,14 @@ class FlexServeClient:
                 time.sleep(self._backoff_delay(attempts, retry_after))
                 continue
             data = json.loads(raw or b"{}")
-            if status != 200:
+            if status not in ok:
                 raise HTTPStatusError(
                     status,
                     f"{method} {path} -> {status}: "
                     f"{data.get('error', data)}", retry_after)
             resp = Response(data)
             resp.attempts = attempts
+            resp.trace_id = trace_id
             return resp
 
     def health(self) -> Dict[str, Any]:
@@ -292,8 +305,42 @@ class FlexServeClient:
         retried: this route exists to observe the 503."""
         return self._request("GET", "/healthz", retries=0)
 
-    def metrics(self) -> Dict[str, Any]:
-        return self._request("GET", "/metrics")
+    def metrics(self, format: str = "json"):
+        """Endpoint metrics: ``format="json"`` returns the structured
+        dict, ``format="prometheus"`` the text exposition (a str)."""
+        if format == "json":
+            return self._request("GET", "/metrics")
+        status, raw, retry_after, _ = self._roundtrip_once(
+            self._raw_request("GET", f"/metrics?format={format}"))
+        if status != 200:
+            data = json.loads(raw or b"{}")
+            raise HTTPStatusError(
+                status, f"GET /metrics?format={format} -> {status}: "
+                        f"{data.get('error', data)}", retry_after)
+        return raw.decode("utf-8")
+
+    def trace(self, trace_id: str) -> Dict[str, Any]:
+        """Fetch the flight recorder's timeline for one request (by the
+        ``trace_id`` echoed on responses as ``X-Request-Id`` / carried in
+        stream events).  404 -> HTTPStatusError (evicted or unknown)."""
+        return self._request(
+            "GET", f"/v1/trace/{urllib.parse.quote(trace_id, safe='')}",
+            retries=0)
+
+    def traces(self) -> Dict[str, Any]:
+        """Flight recorder index: in-flight + recently completed traces."""
+        return self._request("GET", "/v1/traces", retries=0)
+
+    def start_profile(self, duration_ms: int = 1000,
+                      mode: str = "auto") -> Dict[str, Any]:
+        """Kick off a time-boxed device-profile capture (202 Accepted);
+        409 while one is already running, 503 when profiling is off."""
+        return self._request("POST", "/v1/debug/profile",
+                             {"duration_ms": duration_ms, "mode": mode},
+                             retries=0, ok=(200, 202))
+
+    def profile_status(self) -> Dict[str, Any]:
+        return self._request("GET", "/v1/debug/profile", retries=0)
 
     def models(self) -> Dict[str, Any]:
         return self._request("GET", "/v1/models")

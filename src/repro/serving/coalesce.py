@@ -33,7 +33,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Sequence
 import numpy as np
 
 from repro.core.batching import BucketSpec
-from repro.core.scheduler import pctl
+from repro.core.telemetry import Histogram, Reservoir
 from repro.serving.admission import DeadlineError
 
 
@@ -141,7 +141,12 @@ class BatchCoalescer:
         self._batches = 0
         self._rows = 0
         self._max_rows_seen = 0
-        self._waits: List[float] = []
+        # queue waits: uniform reservoir for the JSON percentiles (bounded
+        # and unbiased, unlike the trimmed list it replaces) + fixed-bucket
+        # histograms with slow-request exemplars for Prometheus
+        self._waits = Reservoir(2048)
+        self._wait_hist = Histogram()
+        self._fwd_hist = Histogram()
         self._last_arrival: Optional[float] = None
         self._ewma_gap_s: Optional[float] = None
         self._pending_rows = 0          # rows enqueued but not yet forwarded
@@ -226,8 +231,8 @@ class BatchCoalescer:
 
     def stats(self) -> Dict[str, Any]:
         effective_linger = self.linger_s()
+        wait50, wait95 = self._waits.percentiles(0.50, 0.95)
         with self._stats_lock:
-            waits = sorted(self._waits)
             batches, rows = self._batches, self._rows
             gap = self._ewma_gap_s
             return {
@@ -235,8 +240,10 @@ class BatchCoalescer:
                 "rows_total": rows,
                 "mean_rows_per_batch": rows / batches if batches else 0.0,
                 "max_rows_per_batch": self._max_rows_seen,
-                "queue_wait_p50_ms": 1e3 * pctl(waits, 0.50),
-                "queue_wait_p95_ms": 1e3 * pctl(waits, 0.95),
+                "queue_wait_p50_ms": 1e3 * wait50,
+                "queue_wait_p95_ms": 1e3 * wait95,
+                "queue_wait_ms_hist": self._wait_hist.snapshot(),
+                "forward_ms_hist": self._fwd_hist.snapshot(),
                 "queue_depth_rows": self._pending_rows,
                 "queue_depth_high_water": self._pending_high,
                 "open_groups": self._open_groups,
@@ -330,6 +337,10 @@ class BatchCoalescer:
         # must not also wait out the surviving group's forward pass
         expired_rows = sum(e.n for e in expired)
         for e in expired:
+            tr = getattr(e.ctx, "trace", None)
+            if tr is not None:
+                tr.event("deadline_drop", t=now, stage="coalesce",
+                         waited_ms=round(1e3 * (now - e.enqueued_at), 3))
             e.error = DeadlineError(
                 f"deadline exceeded in coalesce queue after "
                 f"{1e3 * (now - e.enqueued_at):.1f}ms")
@@ -341,6 +352,12 @@ class BatchCoalescer:
             for e in expired:
                 e.event.set()
         rows = sum(e.n for e in group)
+        for e in group:
+            tr = getattr(e.ctx, "trace", None)
+            if tr is not None:
+                tr.span("coalesce_queue", e.enqueued_at, now, rows=e.n)
+                tr.event("coalesce_group", t=now, rows=rows,
+                         requests=len(group))
         try:
             if group:
                 merged = {k: np.concatenate([e.batch[k] for e in group])
@@ -359,6 +376,12 @@ class BatchCoalescer:
                     self._ewma_fwd_s = (
                         fwd_s if self._ewma_fwd_s is None else
                         0.8 * self._ewma_fwd_s + 0.2 * fwd_s)
+                self._fwd_hist.observe(1e3 * fwd_s)
+                for e in group:
+                    tr = getattr(e.ctx, "trace", None)
+                    if tr is not None:
+                        tr.span("coalesce_forward", t_fwd, t_fwd + fwd_s,
+                                rows=rows)
                 off = 0
                 for e in group:
                     e.result = _tree_slice(out_np, off, off + e.n)
@@ -373,11 +396,13 @@ class BatchCoalescer:
                     self._rows += rows
                     self._max_rows_seen = max(self._max_rows_seen, rows)
                 self._pending_rows = max(0, self._pending_rows - rows)
-                for e in group:
-                    e.wait_s = now - e.enqueued_at
-                    self._waits.append(e.wait_s)
-                if len(self._waits) > 4096:
-                    del self._waits[:-2048]
+            for e in group:
+                e.wait_s = now - e.enqueued_at
+                self._waits.add(e.wait_s)
+                tr = getattr(e.ctx, "trace", None)
+                self._wait_hist.observe(
+                    1e3 * e.wait_s,
+                    tr.trace_id if tr is not None else None)
             for e in group:
                 e.event.set()
 

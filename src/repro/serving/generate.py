@@ -56,8 +56,13 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 from repro.core.engine import GenerationResult, InferenceEngine
 from repro.core.sampling import SamplingParams
-from repro.core.scheduler import Request, SchedulerBusy, SchedulerService
+from repro.core.scheduler import (Request, SchedulerBusy, SchedulerService,
+                                  ZERO_PAGER_STATS)
+from repro.core.telemetry import BYTES_BUCKETS, Histogram
 from repro.serving.admission import RequestContext, ShedError
+
+# HTTP status a finished stream's trace records, by finish reason
+_TRACE_STATUS = {"deadline": 504, "error": 500, "cancelled": 499}
 
 
 class GenerationError(RuntimeError):
@@ -152,21 +157,28 @@ class GenerationStream:
     # --- sink: runs on the scheduler driver thread; must never block ---------
 
     def _sink(self, req: Request, token: Optional[int], done: bool) -> None:
+        tr = req.trace
         if token is not None:
             ev = {"event": "token", "token": token,
                   "index": len(req.output) - 1}
             ok = self._queue.put(ev)
+            if tr is not None:
+                tr.bump("stream_events")
             if not ok and self._entry.service.retiring:
                 # engine swap draining: backpressure yields to the
                 # zero-truncation guarantee — growth is bounded by the
                 # request's remaining token budget
                 self._queue.put(ev, force=True)
+                if tr is not None:
+                    tr.bump("swap_drain_forced")
             elif not ok and not done:
                 # consumer stalled: preempt the slot rather than buffer.
                 # The dropped token stays in req.output and is replayed by
                 # events() before the resume.  Setting the flag directly is
                 # safe — the sink runs ON the driver thread.
                 req.paused = True
+                if tr is not None:
+                    tr.bump("stream_stalls")
                 self._service._stream_paused()
         if done:
             self._queue.put(self._terminal_event(req), force=True)
@@ -181,6 +193,18 @@ class GenerationStream:
             cb, self._on_finish = self._on_finish, None
         if cb is not None:
             cb()
+        # a STREAM's trace is sealed here, not by the HTTP route (which
+        # returns before the stream body finishes).  Trace.finish is
+        # idempotent, so the disconnect/terminal race records one outcome.
+        req = self.request
+        if req is not None and req.done:
+            tr = req.trace
+            if tr is not None:
+                tr.finish(
+                    status=_TRACE_STATUS.get(req.finish_reason, 200),
+                    finish_reason=req.finish_reason,
+                    error=(f"{type(req.error).__name__}: {req.error}"
+                           if req.error is not None else None))
 
     def _terminal_event(self, req: Request) -> Dict[str, Any]:
         if req.finish_reason == "error":
@@ -473,6 +497,8 @@ class GenerationService:
         # the default alias's scheduler stats at top level keep the
         # /metrics "generate" section shape stable for dashboards — zeroed
         # before the first engine load so scrapers never hit missing keys
+        zero_ms = Histogram().snapshot()
+        zero_bytes = Histogram(BYTES_BUCKETS).snapshot()
         out.update({"steps": 0, "active_slots": 0, "pending": 0,
                     "pending_high_water": 0,
                     "max_pending": self.max_pending,
@@ -483,6 +509,10 @@ class GenerationService:
                     "request_latency_p95_ms": 0.0,
                     "ttft_p50_ms": 0.0, "ttft_p95_ms": 0.0,
                     "inter_token_p50_ms": 0.0, "inter_token_p95_ms": 0.0,
+                    "request_latency_ms_hist": zero_ms,
+                    "ttft_ms_hist": zero_ms,
+                    "inter_token_ms_hist": zero_ms,
+                    "queue_wait_ms_hist": zero_ms,
                     "decode": {"device_sampling": True, "ticks": 0,
                                "host_ms_p50": 0.0, "host_ms_p95": 0.0,
                                "device_ms_p50": 0.0, "device_ms_p95": 0.0,
@@ -492,10 +522,14 @@ class GenerationService:
                                "prefill_transfer_bytes_total": 0,
                                "prefill_forwards": 0,
                                "prefill_requests": 0,
-                               "compiled_steps": None},
-                    # paged-KV engines replace this with KVPager counters
+                               "compiled_steps": None,
+                               "host_ms_hist": zero_ms,
+                               "device_ms_hist": zero_ms,
+                               "prefill_ms_hist": zero_ms,
+                               "transfer_bytes_hist": zero_bytes},
+                    # paged-KV engines overwrite the zeroed KVPager schema
                     # (page utilization, prefix hit rate, fast resumes)
-                    "pager": None})
+                    "pager": dict(ZERO_PAGER_STATS)})
         default = engines.get(self.default_alias)
         if default is not None:
             out.update({k: v for k, v in default.items() if k != "engine"})

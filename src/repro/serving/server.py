@@ -44,6 +44,16 @@ from repro.serving.coalesce import BatchCoalescer
 from repro.serving.generate import GenerationError, GenerationService
 from repro.serving.lifecycle import LifecycleError, ModelManager
 from repro.serving.modelstore import StoreError
+from repro.serving.telemetry import (DeviceProfiler, FlightRecorder,
+                                     prometheus_exposition)
+
+# lifecycle section served when no manager is attached, so the /metrics
+# key set (and the Prometheus exposition) is identical either way
+_ZERO_LIFECYCLE: Dict[str, Any] = {
+    "loads": 0, "unloads": 0, "swaps": 0, "rollbacks": 0,
+    "engine_loads": 0, "engine_rollbacks": 0, "gc_runs": 0,
+    "last_warm_ms": 0.0, "warm_total_ms": 0.0, "per_version": {},
+    "aliases": {}, "engine_aliases": {}}
 
 
 class FlexServeApp:
@@ -70,7 +80,10 @@ class FlexServeApp:
                  bulk_fraction: float = 0.5,
                  default_deadline_ms: Optional[float] = None,
                  max_stream_buffer: int = 32,
-                 generate_token_budget: Optional[int] = None):
+                 generate_token_budget: Optional[int] = None,
+                 trace: bool = True,
+                 flight_recorder_size: int = 256,
+                 profile_dir: Optional[str] = None):
         if manager is not None and ensemble is not None:
             raise ValueError("pass either a static ensemble or a manager")
         self.manager = manager
@@ -80,7 +93,14 @@ class FlexServeApp:
         self.engine = engine
         self.device_lock = threading.Lock()
         self.request_count = 0
-        self._t0 = time.time()
+        # monotonic for uptime arithmetic; the wall time is only reported
+        self._t0 = time.monotonic()
+        self._started_unix = time.time()
+        self.recorder: Optional[FlightRecorder] = (
+            FlightRecorder(capacity=flight_recorder_size) if trace else None)
+        self.profiler: Optional[DeviceProfiler] = (
+            DeviceProfiler(artifact_dir=profile_dir)
+            if profile_dir is not None else None)
         self._closing = False
         self._route_stats: Dict[str, Dict[str, float]] = {}
         self._stats_lock = threading.Lock()
@@ -156,6 +176,15 @@ class FlexServeApp:
 
     # --- route handlers ------------------------------------------------------
 
+    @staticmethod
+    def _stats_key(method: str, path: str) -> str:
+        """Route-stats bucket: query string stripped, parametric path
+        segments collapsed so the stats dict stays bounded."""
+        path = path.partition("?")[0]
+        if path.startswith("/v1/trace/"):
+            path = "/v1/trace/{id}"
+        return f"{method} {path}"
+
     def handle(self, method: str, path: str, body: bytes,
                headers: Optional[Dict[str, str]] = None) -> Dict[str, Any]:
         with self._stats_lock:
@@ -167,8 +196,8 @@ class FlexServeApp:
             dt = time.perf_counter() - t0
             with self._stats_lock:
                 st = self._route_stats.setdefault(
-                    f"{method} {path}", {"count": 0, "total_s": 0.0,
-                                         "max_s": 0.0})
+                    self._stats_key(method, path),
+                    {"count": 0, "total_s": 0.0, "max_s": 0.0})
                 st["count"] += 1
                 st["total_s"] += dt
                 st["max_s"] = max(st["max_s"], dt)
@@ -176,12 +205,20 @@ class FlexServeApp:
     def _route(self, method: str, path: str, body: bytes,
                headers: Optional[Dict[str, str]] = None,
                arrival: Optional[float] = None) -> Dict[str, Any]:
+        path, _, qs = path.partition("?")
+        query = dict(urllib.parse.parse_qsl(qs)) if qs else {}
         if method == "GET" and path == "/health":
             return {"status": "ok", "requests": self.request_count}
         if method == "GET" and path == "/healthz":
             return self.ready()
         if method == "GET" and path == "/metrics":
-            return self._metrics()
+            return self._metrics(fmt=query.get("format", "json"))
+        if method == "GET" and path.startswith("/v1/trace/"):
+            return self._trace_lookup(path[len("/v1/trace/"):])
+        if method == "GET" and path == "/v1/traces":
+            return self._traces_index()
+        if path == "/v1/debug/profile":
+            return self._profile_admin(method, body)
         if method == "GET" and path == "/v1/models":
             return {"models": self.registry.describe(),
                     "ensemble_size": (len(self.ensemble.members)
@@ -195,15 +232,100 @@ class FlexServeApp:
             return self._engine_admin(method, path[len("/v1/engines/"):],
                                       body)
         if method == "POST" and path == "/v1/infer":
-            req = api.parse_request(body)
-            return self._infer(req, self._context(req, headers, arrival))
+            return self._traced("infer", body, headers, arrival,
+                                self._infer)
         if method == "POST" and path == "/v1/detect":
-            req = api.parse_request(body)
-            return self._detect(req, self._context(req, headers, arrival))
+            return self._traced("detect", body, headers, arrival,
+                                self._detect)
         if method == "POST" and path == "/v1/generate":
-            req = api.parse_request(body)
-            return self._generate(req, self._context(req, headers, arrival))
+            return self._traced("generate", body, headers, arrival,
+                                self._generate)
         raise api.ApiError(404, f"no route {method} {path}")
+
+    def _traced(self, plane: str, body: bytes,
+                headers: Optional[Dict[str, str]],
+                arrival: Optional[float], fn):
+        """Run a request-plane route under the flight recorder: begin a
+        trace keyed by the request's trace_id, record the HTTP parse span,
+        attach the live trace to the RequestContext (every downstream
+        layer picks it up from there), and seal it when the route returns.
+        Streaming responses are sealed by the stream's terminal event
+        instead; error paths (shed, deadline, 5xx) seal here so they stay
+        queryable via GET /v1/trace/{id}."""
+        req = api.parse_request(body)
+        ctx = self._context(req, headers, arrival)
+        tr = None
+        if self.recorder is not None:
+            tr = self.recorder.begin(ctx.trace_id, plane,
+                                     client=ctx.client,
+                                     priority=ctx.priority,
+                                     start_s=ctx.arrival_s)
+            ctx.trace = tr
+            tr.span("http_parse", ctx.arrival_s, time.perf_counter(),
+                    bytes=len(body))
+        try:
+            out = fn(req, ctx)
+        except api.ApiError as e:
+            if tr is not None:
+                e.headers.setdefault("X-Request-Id", ctx.trace_id)
+                tr.finish(status=e.status, error=e.message)
+            raise
+        except Exception as e:              # noqa: BLE001 — seal, re-raise
+            if tr is not None:
+                tr.finish(status=500, error=f"{type(e).__name__}: {e}")
+            raise
+        if isinstance(out, api.StreamingResponse):
+            if tr is not None:
+                out.headers.setdefault("X-Request-Id", ctx.trace_id)
+            return out
+        if tr is not None:
+            tr.finish(status=200)
+            return api.JsonResponse(out, {"X-Request-Id": ctx.trace_id})
+        return out
+
+    # --- telemetry surface ----------------------------------------------------
+
+    def _trace_lookup(self, trace_id: str) -> Dict[str, Any]:
+        if self.recorder is None:
+            raise api.ApiError(404, "tracing is disabled on this endpoint")
+        trace_id = urllib.parse.unquote(trace_id)
+        tr = self.recorder.get(trace_id)
+        if tr is None:
+            raise api.ApiError(
+                404, f"no trace {trace_id!r} (evicted from the flight "
+                     f"recorder, or never admitted)")
+        return tr.snapshot()
+
+    def _traces_index(self) -> Dict[str, Any]:
+        if self.recorder is None:
+            raise api.ApiError(404, "tracing is disabled on this endpoint")
+        return {"telemetry": self.recorder.stats(),
+                "in_flight": self.recorder.in_flight(),
+                "recent": self.recorder.recent()}
+
+    def _profile_admin(self, method: str, body: bytes) -> Dict[str, Any]:
+        if self.profiler is None:
+            raise api.ApiError(
+                503, "profiling is disabled; start the endpoint with a "
+                     "--profile-dir to enable it")
+        if method == "GET":
+            return self.profiler.status()
+        if method != "POST":
+            raise api.ApiError(404,
+                               f"no route {method} /v1/debug/profile")
+        req = api.parse_request(body)
+        duration = api.opt_int(req, "duration_ms", 1000)
+        mode = str(req.get("mode", "auto"))
+        if mode not in ("auto", "jax", "python"):
+            raise api.ApiError(400,
+                               "'mode' must be 'auto', 'jax' or 'python'")
+        try:
+            out = self.profiler.start(duration_ms=duration, mode=mode)
+        except RuntimeError as e:
+            raise api.ApiError(409, str(e)) from None
+        except ValueError as e:
+            raise api.ApiError(400, str(e)) from None
+        return api.JsonResponse(out, status=202)
 
     # --- request plane --------------------------------------------------------
 
@@ -229,7 +351,7 @@ class FlexServeApp:
         except DeadlineError as e:
             raise api.ApiError(504, str(e)) from None
 
-    def _metrics(self) -> Dict[str, Any]:
+    def _metrics(self, fmt: str = "json"):
         with self._stats_lock:
             routes = {
                 k: {"count": v["count"],
@@ -237,7 +359,8 @@ class FlexServeApp:
                     "max_ms": 1e3 * v["max_s"]}
                 for k, v in self._route_stats.items()}
             requests = self.request_count
-        out = {"uptime_s": time.time() - self._t0,
+        out = {"uptime_s": time.monotonic() - self._t0,
+               "started_unix": self._started_unix,
                "requests": requests, "routes": routes}
         if self.coalescer is not None:
             out["coalesce"] = self.coalescer.stats()
@@ -245,11 +368,17 @@ class FlexServeApp:
             out["ensemble_compiles"] = {
                 str(b): c
                 for b, c in sorted(self.ensemble.compile_counts.items())}
-        if self.manager is not None:
-            out["lifecycle"] = self.manager.stats()
+        out["lifecycle"] = (self.manager.stats() if self.manager is not None
+                            else dict(_ZERO_LIFECYCLE))
         if self.generation is not None:
             out["generate"] = self.generation.stats()
         out["admission"] = self.admission.stats()
+        if self.recorder is not None:
+            out["telemetry"] = self.recorder.stats()
+        if fmt == "prometheus":
+            return api.PlainTextResponse(prometheus_exposition(out))
+        if fmt != "json":
+            raise api.ApiError(400, f"unknown metrics format {fmt!r}")
         return out
 
     # --- lifecycle admin surface ---------------------------------------------
@@ -513,7 +642,7 @@ class FlexServeApp:
                                      on_disconnect=stream.cancel)
 
 
-_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+_REASONS = {200: "OK", 202: "Accepted", 400: "Bad Request", 404: "Not Found",
             409: "Conflict", 429: "Too Many Requests",
             500: "Internal Server Error", 503: "Service Unavailable",
             504: "Gateway Timeout"}
@@ -587,15 +716,25 @@ def make_handler(app: FlexServeApp):
                 status, payload = 500, {"error": f"{type(e).__name__}: {e}"}
             if isinstance(payload, api.StreamingResponse):
                 return self._stream_reply(payload, keep)
-            data = api.encode_response(payload)
-            self._reply(status, data, keep, extra)
+            ctype = "application/json"
+            if isinstance(payload, api.PlainTextResponse):
+                status, ctype = payload.status, payload.content_type
+                data = payload.text.encode("utf-8")
+            elif isinstance(payload, api.JsonResponse):
+                status = payload.status
+                extra = {**payload.headers, **(extra or {})}
+                data = api.encode_response(payload.payload)
+            else:
+                data = api.encode_response(payload)
+            self._reply(status, data, keep, extra, ctype)
             return keep
 
         def _reply(self, status: int, data: bytes, keep: bool,
-                   extra: Optional[Dict[str, str]] = None) -> None:
+                   extra: Optional[Dict[str, str]] = None,
+                   ctype: str = "application/json") -> None:
             lines = "".join(f"{k}: {v}\r\n" for k, v in (extra or {}).items())
             head = (f"HTTP/1.1 {status} {_REASONS.get(status, '')}\r\n"
-                    f"Content-Type: application/json\r\n"
+                    f"Content-Type: {ctype}\r\n"
                     f"Content-Length: {len(data)}\r\n"
                     f"{lines}"
                     f"Connection: {'keep-alive' if keep else 'close'}\r\n"
@@ -609,9 +748,12 @@ def make_handler(app: FlexServeApp):
             sees the first token long before the stream finishes.  A
             failed write means the client went away: cancel the request
             (freeing its decode slot) and drop the connection."""
+            lines = "".join(f"{k}: {v}\r\n"
+                            for k, v in resp.headers.items())
             head = (f"HTTP/1.1 200 OK\r\n"
                     f"Content-Type: application/x-ndjson\r\n"
                     f"Transfer-Encoding: chunked\r\n"
+                    f"{lines}"
                     f"Connection: {'keep-alive' if keep else 'close'}\r\n"
                     f"\r\n").encode("latin-1")
             try:
@@ -663,9 +805,9 @@ class FlexServeServer:
         from repro.serving.client import FlexServeClient
         host, port = self.address
         client = FlexServeClient(host, port, timeout=max(timeout, 1.0))
-        deadline = time.time() + timeout
+        deadline = time.monotonic() + timeout
         try:
-            while time.time() < deadline:
+            while time.monotonic() < deadline:
                 try:
                     client.healthz()
                     return True

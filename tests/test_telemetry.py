@@ -1,0 +1,343 @@
+"""Telemetry subsystem tests: histogram/reservoir units, the flight
+recorder, /metrics schema stability (JSON + Prometheus exposition), the
+/v1/trace/{id} surface across admitted / shed / deadline outcomes, and
+the on-demand profiler's pure-Python mode."""
+
+import json
+import os
+import time
+
+import jax
+import pytest
+
+from conftest import smoke_model
+from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
+                        ModelRegistry)
+from repro.core.telemetry import Histogram, Reservoir
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           FlightRecorder, HTTPStatusError,
+                           prometheus_exposition)
+
+# every histogram snapshot key the /metrics schema documents
+HIST_KEYS = {"le", "counts", "count", "sum"}
+
+# documented top-level /metrics sections (api.py docstring): the schema-
+# stability contract — present at boot, present under traffic
+SECTIONS = ("uptime_s", "requests", "routes", "coalesce", "lifecycle",
+            "generate", "admission", "telemetry")
+
+
+def _build_app(tmpdir=None, **kw):
+    cfg, model, params = smoke_model("yi-9b")
+    registry = ModelRegistry()
+    members = []
+    for i in range(2):
+        pp = model.init(jax.random.PRNGKey(i))
+        registry.register(f"yi#{i}", model, pp)
+
+        def apply(p, batch, _m=model):
+            return _m.forward(p, batch)[:, -1, :8]
+
+        members.append(EnsembleMember(f"yi#{i}", apply, pp, 8))
+    ensemble = Ensemble(members, max_batch=8)
+    engine = InferenceEngine(model, params, max_len=64, max_batch=4)
+    return FlexServeApp(registry, ensemble, engine,
+                        profile_dir=tmpdir, **kw)
+
+
+@pytest.fixture(scope="module")
+def profile_dir(tmp_path_factory):
+    return str(tmp_path_factory.mktemp("profiles"))
+
+
+@pytest.fixture(scope="module")
+def server(profile_dir):
+    srv = FlexServeServer(_build_app(profile_dir)).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture(scope="module")
+def client(server):
+    host, port = server.address
+    cl = FlexServeClient(host, port, retries=0)
+    yield cl
+    cl.close()
+
+
+# --- unit: metric primitives -----------------------------------------------
+
+
+def test_histogram_cumulative_and_exemplar():
+    h = Histogram()
+    for v in (0.3, 3.0, 30.0, 300.0):
+        h.observe(v, trace_id=f"t-{v}")
+    snap = h.snapshot()
+    assert HIST_KEYS.issubset(snap)
+    assert snap["count"] == 4
+    assert snap["sum"] == pytest.approx(333.3)
+    assert snap["le"][-1] == "+Inf"
+    assert len(snap["le"]) == len(snap["counts"])
+    # cumulative: monotone nondecreasing, last == count
+    assert all(a <= b for a, b in zip(snap["counts"], snap["counts"][1:]))
+    assert snap["counts"][-1] == snap["count"]
+    # exemplar tracks the largest observation
+    assert snap["exemplar"]["trace_id"] == "t-300.0"
+    assert 0.3 <= h.percentile(0.5) <= 30.0
+
+
+def test_reservoir_bounded_and_percentiles():
+    r = Reservoir(size=64, seed=1)
+    for i in range(10_000):
+        r.add(float(i))
+    assert len(r) == 64
+    p50, p95 = r.percentiles(0.50, 0.95)
+    assert 2_000 < p50 < 8_000          # uniform sample, loose bounds
+    assert p95 > p50
+    assert Reservoir(size=8).percentile(0.5) == 0.0   # empty -> 0
+
+
+def test_flight_recorder_ring_is_bounded():
+    rec = FlightRecorder(capacity=4)
+    for i in range(10):
+        tr = rec.begin(f"t-{i}", "infer")
+        tr.finish(status=200)
+    st = rec.stats()
+    assert st["completed"] == 4 and st["completed_total"] == 10
+    assert st["in_flight"] == 0
+    assert rec.get("t-3") is None        # evicted
+    assert rec.get("t-9") is not None
+    line = json.loads(rec.get("t-9").log_line())
+    assert line["trace_id"] == "t-9" and line["status"] == 200
+
+
+def test_prometheus_walker_skips_strings_and_renders_hists():
+    h = Histogram()
+    h.observe(5.0)
+    text = prometheus_exposition(
+        {"requests": 3, "note": "a string", "nested": {"ok": True},
+         "lat": h.snapshot()})
+    assert "flexserve_requests 3" in text
+    assert "note" not in text
+    assert "flexserve_nested_ok 1" in text
+    assert 'flexserve_lat_bucket{le="+Inf"} 1' in text
+    assert "flexserve_lat_count 1" in text
+
+
+# --- /metrics schema: zero at boot, populated after traffic ----------------
+
+
+def test_metrics_schema_zero_at_boot():
+    app = _build_app()
+    try:
+        m = app.handle("GET", "/metrics", b"")
+        for key in SECTIONS:
+            assert key in m, f"missing /metrics section {key!r}"
+        assert m["requests"] == 1                  # this very request
+        # no manager: lifecycle is present but zeroed
+        assert m["lifecycle"]["loads"] == 0
+        gen = m["generate"]
+        for hk in ("request_latency_ms_hist", "ttft_ms_hist",
+                   "inter_token_ms_hist", "queue_wait_ms_hist"):
+            assert gen[hk]["count"] == 0, hk
+        for hk in ("host_ms_hist", "device_ms_hist", "prefill_ms_hist",
+                   "transfer_bytes_hist"):
+            assert gen["decode"][hk]["count"] == 0, hk
+        # dense engine: pager section present and zeroed (schema stable
+        # across dense/paged deployments)
+        assert gen["pager"]["pages_total"] == 0
+        assert gen["pager"]["oom_events"] == 0
+        t = m["telemetry"]
+        assert t["completed_total"] == 0 and t["in_flight"] == 0
+        assert m["uptime_s"] >= 0.0
+    finally:
+        app.close()
+
+
+def test_metrics_populated_after_traffic(client):
+    client.generate([[1, 2, 3]], max_new_tokens=4)
+    client.infer({"tokens": [[1, 2, 3, 4]]})
+    m = client.metrics()
+    gen = m["generate"]
+    assert gen["request_latency_ms_hist"]["count"] >= 1
+    assert gen["ttft_ms_hist"]["count"] >= 1
+    assert gen["queue_wait_ms_hist"]["count"] >= 1
+    assert gen["decode"]["prefill_ms_hist"]["count"] >= 1
+    assert m["coalesce"]["queue_wait_ms_hist"]["count"] >= 1
+    assert m["telemetry"]["completed_total"] >= 2
+    admitted = m["admission"]["planes"]["generate"]["admitted"]
+    assert sum(admitted.values()) >= 1
+
+
+# --- Prometheus exposition round-trip --------------------------------------
+
+
+def _parse_prometheus(text):
+    """-> (samples {name: [(labels, value)]}, types {name: type})."""
+    samples, types = {}, {}
+    for line in text.splitlines():
+        if line.startswith("# TYPE "):
+            _, _, name, typ = line.split(" ", 3)
+            types[name] = typ
+            continue
+        if not line or line.startswith("#"):
+            continue
+        metric, _, value = line.rpartition(" ")
+        name, labels = metric, ""
+        if "{" in metric:
+            name, _, labels = metric.partition("{")
+            labels = labels.rstrip("}")
+        samples.setdefault(name, []).append((labels, float(value)))
+    return samples, types
+
+
+def test_prometheus_exposition_roundtrip(client):
+    client.generate([[4, 5, 6]], max_new_tokens=4)
+    text = client.metrics(format="prometheus")
+    assert isinstance(text, str)
+    samples, types = _parse_prometheus(text)
+    # all five stats sections are scrapeable
+    for section in ("admission", "coalesce", "generate", "lifecycle",
+                    "telemetry"):
+        assert any(n.startswith(f"flexserve_{section}_")
+                   for n in samples), f"no {section} samples"
+    assert any(n.startswith("flexserve_generate_pager_") for n in samples)
+    # histogram families: cumulative buckets, +Inf == count
+    hist = "flexserve_generate_request_latency_ms_hist"
+    assert types[hist] == "histogram"
+    buckets = samples[f"{hist}_bucket"]
+    counts = [v for _, v in buckets]
+    assert all(a <= b for a, b in zip(counts, counts[1:]))
+    assert buckets[-1][0] == 'le="+Inf"'
+    assert counts[-1] == samples[f"{hist}_count"][0][1]
+    assert samples[f"{hist}_count"][0][1] >= 1
+
+
+def test_prometheus_unknown_format_is_400(client):
+    with pytest.raises(HTTPStatusError, match="400"):
+        client.metrics(format="protobuf")
+
+
+# --- /v1/trace/{id}: admitted, shed, deadline ------------------------------
+
+
+def test_trace_of_admitted_generate(client):
+    resp = client.generate([[7, 8, 9]], max_new_tokens=4,
+                           trace_id="tele-ok-1")
+    assert resp.trace_id == "tele-ok-1"       # X-Request-Id echo
+    snap = client.trace("tele-ok-1")
+    assert snap["trace_id"] == "tele-ok-1"
+    assert snap["status"] == 200 and not snap["in_flight"]
+    names = {s["name"] for s in snap["spans"]}
+    assert {"http_parse", "queue_wait", "prefill"}.issubset(names)
+    events = {e["name"] for e in snap["events"]}
+    assert {"admitted", "scheduler_queued", "first_token",
+            "request_finished"}.issubset(events)
+    # prefill yields the first token; the remaining 3 come from decode
+    assert snap["counters"]["decode_ticks"] >= 3
+    # timeline is ordered and fits inside the request duration
+    for s in snap["spans"]:
+        assert s["start_ms"] <= s["end_ms"]
+        assert s["end_ms"] <= snap["duration_ms"] + 1e-6
+
+
+def test_trace_of_shed_request(client, server):
+    # generate plane budget is 32 * max_queue = 2048 tokens.  An empty
+    # plane admits even an over-budget request, so hold a stream open on
+    # a second connection to keep depth > 0, then push one over budget:
+    # it sheds as 429 — and leaves a queryable timeline.
+    holder = FlexServeClient(*server.address, retries=0)
+    try:
+        events = holder.generate_stream([1, 2, 3], max_new_tokens=48)
+        next(events)                       # stream admitted and decoding
+        with pytest.raises(HTTPStatusError) as ei:
+            client.generate([[1, 2, 3]], max_new_tokens=4096,
+                            trace_id="tele-shed-1")
+        assert ei.value.status == 429
+        for _ in events:                   # drain; frees the connection
+            pass
+    finally:
+        holder.close()
+    snap = client.trace("tele-shed-1")
+    assert snap["status"] == 429 and not snap["in_flight"]
+    shed = [e for e in snap["events"] if e["name"] == "shed"]
+    assert shed and shed[0]["attrs"]["plane"] == "generate"
+
+
+def test_trace_of_deadline_rejected_request(client):
+    with pytest.raises(HTTPStatusError) as ei:
+        client.generate([[1, 2, 3]], max_new_tokens=4,
+                        deadline_ms=1e-6, trace_id="tele-dl-1")
+    assert ei.value.status == 504
+    snap = client.trace("tele-dl-1")
+    assert snap["status"] == 504
+    drops = [e for e in snap["events"] if e["name"] == "deadline_drop"]
+    assert drops and drops[0]["attrs"]["stage"] == "admission"
+
+
+def test_trace_of_stream_is_sealed_by_terminal_event(client):
+    events = list(client.generate_stream([1, 2, 3], max_new_tokens=4,
+                                         trace_id="tele-stream-1"))
+    assert events[-1]["event"] == "done"
+    snap = client.trace("tele-stream-1")
+    assert snap["status"] == 200 and not snap["in_flight"]
+    assert snap["counters"]["stream_events"] >= 4
+    assert snap["finish_reason"] in ("length", "stop", "eos")
+
+
+def test_trace_unknown_id_is_404(client):
+    with pytest.raises(HTTPStatusError, match="404"):
+        client.trace("never-issued")
+
+
+def test_traces_index(client):
+    idx = client.traces()
+    assert idx["telemetry"]["completed_total"] >= 1
+    assert isinstance(idx["recent"], list) and idx["recent"]
+    assert {"trace_id", "plane", "status"}.issubset(idx["recent"][0])
+
+
+# --- on-demand profiling ----------------------------------------------------
+
+
+def test_profile_python_mode_writes_artifact(client, profile_dir):
+    resp = client.start_profile(duration_ms=120, mode="python")
+    assert resp["mode"] == "python"
+    artifact = resp["artifact"]
+    assert artifact.startswith(profile_dir)
+    # a second capture while one is running is refused
+    with pytest.raises(HTTPStatusError, match="409"):
+        client.start_profile(duration_ms=120, mode="python")
+    deadline = time.monotonic() + 10.0
+    while time.monotonic() < deadline:
+        if client.profile_status()["active"] is None:
+            break
+        time.sleep(0.05)
+    assert os.path.exists(artifact)
+    with open(artifact) as fh:
+        doc = json.load(fh)
+    assert doc["mode"] == "python" and doc["samples"] >= 1
+    assert client.profile_status()["captures_total"] >= 1
+
+
+def test_profile_disabled_without_dir():
+    app = _build_app()      # no profile_dir
+    try:
+        srv = FlexServeServer(app).start()
+        cl = FlexServeClient(*srv.address, retries=0)
+        with pytest.raises(HTTPStatusError, match="503"):
+            cl.start_profile(duration_ms=50)
+        cl.close()
+        srv.stop()
+    finally:
+        app.close()
+
+
+# --- clocks -----------------------------------------------------------------
+
+
+def test_uptime_is_monotonic_based(client):
+    m1 = client.metrics()
+    m2 = client.metrics()
+    assert 0.0 <= m1["uptime_s"] <= m2["uptime_s"]
+    assert abs(m1["started_unix"] - time.time()) < 3600
