@@ -187,13 +187,28 @@ def _trace_cost_per_stream(tokens_per_stream: int, n: int = 256,
     Replays the exact op sequence the serving + scheduler layers issue
     per streamed request — recorder.begin, the admission/queue/prefill
     spans and events, one counter bump per token, the decode-share flush,
-    finish — against a real ``FlightRecorder``.  Min-of-reps over a tight
-    loop is stable to well under a microsecond even on hosts whose
-    wall-clock throughput swings 10% round to round, which is what makes
-    the 2% verdict reproducible (see ``run_trace_overhead``)."""
+    finish — against a real ``FlightRecorder`` wired to a real SLI store
+    + usage ledger (PR 8's trace-seal aggregation hook), so the 2% bar
+    covers the whole telemetry pipeline, ingestion included.  Min-of-reps
+    over a tight loop is stable to well under a microsecond even on hosts
+    whose wall-clock throughput swings 10% round to round, which is what
+    makes the 2% verdict reproducible (see ``run_trace_overhead``)."""
+    from repro.core.slo import SLIStore, UsageLedger
     from repro.serving.telemetry import FlightRecorder
-    rec = FlightRecorder(capacity=64)    # private: must not evict the
-    best = float("inf")                  # server's queryable traces
+    sli, ledger = SLIStore(), UsageLedger()
+
+    def ingest(tr):                      # the server's _ingest_trace shape
+        dur_ms = 1e3 * ((tr.end_s or tr.start_s) - tr.start_s)
+        sli.ingest(plane=tr.plane, client=tr.client,
+                   version=tr.attrs.get("version"), latency_ms=dur_ms,
+                   error=False, deadline_miss=False, ttft_ms=dur_ms)
+        ledger.ingest(plane=tr.plane, client=tr.client,
+                      version=tr.attrs.get("version"), error=False,
+                      counters=tr.counters)
+
+    rec = FlightRecorder(capacity=64,    # private: must not evict the
+                         on_complete=ingest)  # server's queryable traces
+    best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
         for i in range(n):
@@ -206,10 +221,15 @@ def _trace_cost_per_stream(tokens_per_stream: int, n: int = 256,
             tr.span("queue_wait", t0, t0, req_id=i,
                     priority="interactive")
             tr.span("prefill", t0, t0, group_size=4, seq_bucket=8)
+            tr.annotate("version", "engine@v0")
+            tr.annotate("alias", "stable")
             tr.event("first_token", req_id=i)
             for _t in range(tokens_per_stream):
                 tr.bump("stream_events")
             tr.bump("decode_ticks", float(tokens_per_stream - 1))
+            tr.bump("decode_tokens", float(tokens_per_stream))
+            tr.bump("prefill_tokens", 3.0)
+            tr.bump("prefill_ms", 1.0)
             tr.bump("decode_device_ms", 1.0)
             tr.bump("decode_host_ms", 1.0)
             tr.bump("decode_transfer_bytes", 64.0)

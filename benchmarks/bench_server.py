@@ -12,6 +12,14 @@ Three scenarios:
     /metrics.  The coalesced path must show rows/forward > 1 and a clear
     req/s win — the paper's flexible-batching claim measured at the REST
     boundary.
+  * slo_canary               — end-to-end SLO autopilot drill: a healthy
+    canary engine earns automatic promotion to stable under real REST
+    traffic, then a fault-injected (laggy) canary blows its deadline SLO
+    and is automatically rolled back — while the stable alias serves
+    zero failed requests throughout.  Self-checks (junit'd in CI with
+    ``--junit``) assert both decisions happened, were auditable at
+    GET /v1/slo AND as sealed flight-recorder traces, and that the
+    usage ledger attributed the traffic per version.
   * rest_overload_4x         — OPEN-LOOP arrivals at ~4x the endpoint's
     measured closed-loop capacity against a tight admission budget.
     Requests are counted HONESTLY: admitted vs shed (429) vs
@@ -43,17 +51,28 @@ import concurrent.futures
 import dataclasses
 import threading
 import time
+from typing import List, Optional, Tuple
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import Ensemble, EnsembleMember, ModelRegistry
+from repro.core import Ensemble, EnsembleMember, InferenceEngine, \
+    ModelRegistry
 from repro.core.scheduler import pctl
+from repro.core.slo import SLOPolicy
 from repro.models import build_model
 from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
                            HTTPStatusError)
+
+_CHECKS: List[Tuple[str, Optional[str]]] = []   # (name, failure or None)
+
+
+def _check(name: str, ok: bool, detail: str) -> None:
+    _CHECKS.append((name, None if ok else detail))
+    if not ok:
+        raise RuntimeError(f"bench_server self-check {name}: {detail}")
 
 
 def _build_members(n_members: int = 2, deep_narrow: bool = False):
@@ -216,6 +235,160 @@ def run_overload(clients: int = 8, rate_factor: float = 4.0,
         srv.stop()
 
 
+def _build_gen_engine(seed: int = 0, max_len: int = 64,
+                      max_batch: int = 8) -> InferenceEngine:
+    cfg = reduce_for_smoke(get_config("yi-9b"))
+    cfg = dataclasses.replace(cfg, num_layers=4, d_model=64, num_heads=2,
+                              head_dim=32, num_kv_heads=2, d_ff=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    return InferenceEngine(model, params, max_len=max_len,
+                           max_batch=max_batch)
+
+
+class _LaggyEngine:
+    """Fault-injected canary: delegates everything to a warm inner engine
+    but sleeps on every decode tick, so any request with a realistic
+    deadline blows it mid-decode (504 + finish_reason 'deadline') while
+    the engine stays functionally correct — the failure mode a canary
+    with a performance regression shows in production."""
+
+    def __init__(self, inner: InferenceEngine, tick_delay_s: float):
+        self._inner = inner
+        self._tick_delay_s = tick_delay_s
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def decode_sample(self, *args, **kwargs):
+        time.sleep(self._tick_delay_s)
+        return self._inner.decode_sample(*args, **kwargs)
+
+    def decode(self, *args, **kwargs):
+        time.sleep(self._tick_delay_s)
+        return self._inner.decode(*args, **kwargs)
+
+
+def run_slo_canary(timeout_s: float = 30.0) -> None:
+    """SLO autopilot end to end: healthy canary promoted, laggy canary
+    rolled back, zero failed requests on stable, decisions auditable."""
+    policy = SLOPolicy(name="gen-canary", alias="canary",
+                       promote_to="stable", plane="generate",
+                       success_rate=0.90, max_deadline_miss_rate=0.2,
+                       fast_window_s=1.0, slow_window_s=2.0,
+                       burn_threshold=2.0, min_requests=8,
+                       qualify_window_s=1.5)
+    engine = _build_gen_engine(seed=0)
+    app = FlexServeApp(engine=engine, num_slots=4,
+                       slo_policies=[policy], slo_interval_s=0.25,
+                       sli_bucket_s=0.25, sli_n_buckets=64)
+    app.generation.entry_for().service.warm()
+    srv = FlexServeServer(app).start()
+    host, port = srv.address
+    t_start = time.perf_counter()
+    stable_failures: List[str] = []
+
+    def drive(cl, target, n, deadline_ms=None, client_tag=None,
+              max_new_tokens=4):
+        """n sequential generates at ``target``; 5xx/504 tolerated (the
+        faulty canary is SUPPOSED to fail) but recorded for stable."""
+        ok = bad = 0
+        for i in range(n):
+            try:
+                cl.generate([[1, 2, 3 + i % 5]],
+                            max_new_tokens=max_new_tokens,
+                            target=target, seed=i, temperature=0.7,
+                            deadline_ms=deadline_ms,
+                            client_tag=client_tag)
+                ok += 1
+            except HTTPStatusError as e:
+                bad += 1
+                if target == "stable":
+                    stable_failures.append(f"{e.status}: {e}")
+        return ok, bad
+
+    def wait_for(pred, what: str):
+        deadline = time.perf_counter() + timeout_s
+        while time.perf_counter() < deadline:
+            if pred():
+                return
+            time.sleep(0.1)
+        raise RuntimeError(f"SLO autopilot never {what} within "
+                           f"{timeout_s:.0f}s: {app.slo.status(5.0)}")
+
+    try:
+        cl = FlexServeClient(host, port, retries=0)
+        # phase 1 — healthy canary earns promotion --------------------------
+        app.generation.install("engine", 1, _build_gen_engine(seed=1),
+                               alias="canary", warm=True)
+        promote_t0 = time.perf_counter()
+
+        def until_promoted():
+            drive(cl, "canary", 4, client_tag="tenant-canary")
+            drive(cl, "stable", 2, client_tag="tenant-stable")
+            return app.slo.stats()["promotions"] >= 1
+
+        wait_for(until_promoted, "promoted the healthy canary")
+        promote_s = time.perf_counter() - promote_t0
+        stable_label = app._slo_resolve("stable")
+        _check("slo_canary_promoted", stable_label == "engine@v1",
+               f"stable resolves to {stable_label!r}, expected the "
+               f"promoted canary engine@v1")
+
+        # phase 2 — laggy canary blows its SLO, autopilot rolls back --------
+        # 8 tokens at 80ms/tick is ~600ms of decode against a 200ms
+        # deadline: admitted, then deadline-evicted mid-decode (the slot
+        # reaper checks between ticks), surfacing as a 504 attributed to
+        # engine@v2's SLI window
+        app.generation.install("engine", 2, _LaggyEngine(engine, 0.08),
+                               alias="canary", warm=False)
+        rollback_t0 = time.perf_counter()
+
+        def until_rolled_back():
+            drive(cl, "canary", 3, deadline_ms=200,
+                  client_tag="tenant-canary", max_new_tokens=8)
+            drive(cl, "stable", 2, client_tag="tenant-stable")
+            return app.slo.stats()["rollbacks"] >= 1
+
+        wait_for(until_rolled_back, "rolled back the faulty canary")
+        rollback_s = time.perf_counter() - rollback_t0
+        canary_label = app._slo_resolve("canary")
+        _check("slo_canary_rolled_back", canary_label == "engine@v1",
+               f"canary resolves to {canary_label!r}, expected rollback "
+               f"to stable's engine@v1")
+        _check("slo_stable_zero_failures", not stable_failures,
+               f"{len(stable_failures)} stable requests failed during "
+               f"the drill: {stable_failures[:3]}")
+
+        # decisions must be auditable: /v1/slo AND the flight recorder ----
+        slo = cl.slo()
+        actions = [d["action"] for d in slo["decisions"]]
+        _check("slo_decisions_auditable",
+               "promote" in actions and "rollback" in actions,
+               f"GET /v1/slo decisions show actions={actions}")
+        tr = cl.trace(slo["decisions"][0]["trace_id"])
+        _check("slo_decision_traced", tr["plane"] == "slo"
+               and tr["status"] == 200,
+               f"decision trace: plane={tr.get('plane')} "
+               f"status={tr.get('status')}")
+        # cost attribution followed the traffic per engine version --------
+        usage = cl.usage()
+        versions = usage["versions"]
+        _check("slo_usage_attributed",
+               versions.get("engine@v1", {}).get("decode_tokens", 0) > 0
+               and versions.get("engine@v2", {}).get("requests", 0) > 0,
+               f"per-version usage: "
+               f"{ {k: v['requests'] for k, v in versions.items()} }")
+        emit("slo_canary_drill", (time.perf_counter() - t_start) * 1e6,
+             f"promote_s={promote_s:.2f} rollback_s={rollback_s:.2f} "
+             f"decisions={len(slo['decisions'])} "
+             f"breaches={slo['breaches']} "
+             f"stable_failures={len(stable_failures)}")
+        cl.close()
+    finally:
+        srv.stop()
+
+
 def run() -> None:
     # --- scenario 1: thread-count sweep on the coalescing server -------------
     registry, members = _build_members()
@@ -284,24 +457,39 @@ def run() -> None:
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", choices=("all", "overload"),
+    ap.add_argument("--scenario", choices=("all", "overload", "slo_canary"),
                     default="all")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rate-factor", type=float, default=4.0)
     ap.add_argument("--duration-s", type=float, default=2.0)
     ap.add_argument("--max-queue", type=int, default=8)
+    ap.add_argument("--timeout-s", type=float, default=30.0,
+                    help="slo_canary: ceiling for each autopilot "
+                         "decision before the drill fails")
+    ap.add_argument("--junit", default=None, metavar="PATH",
+                    help="write the self-check results as junit XML")
     ap.add_argument("--artifact", action="store_true",
-                    help="persist BENCH_server.json for CI upload")
+                    help="persist BENCH_<scenario>.json for CI upload")
     args = ap.parse_args(argv)
     print("name,us_per_call,derived")
-    if args.scenario == "overload":
-        run_overload(clients=args.clients, rate_factor=args.rate_factor,
-                     duration_s=args.duration_s, max_queue=args.max_queue)
-    else:
-        run()
-    if args.artifact:
-        from benchmarks.common import write_artifact
-        write_artifact("server")
+    try:
+        if args.scenario == "overload":
+            run_overload(clients=args.clients,
+                         rate_factor=args.rate_factor,
+                         duration_s=args.duration_s,
+                         max_queue=args.max_queue)
+        elif args.scenario == "slo_canary":
+            run_slo_canary(timeout_s=args.timeout_s)
+        else:
+            run()
+    finally:
+        if args.junit:
+            from benchmarks.common import write_junit
+            write_junit(args.junit, "bench_server", _CHECKS)
+        if args.artifact:
+            from benchmarks.common import write_artifact
+            suffix = "" if args.scenario == "all" else f"_{args.scenario}"
+            write_artifact(f"server{suffix}", _CHECKS)
     return 0
 
 

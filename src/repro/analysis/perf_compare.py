@@ -1,8 +1,20 @@
-"""Baseline-vs-optimized roofline comparison (EXPERIMENTS.md §Perf).
+"""Performance comparison: roofline dirs or benchmark artifacts.
 
-Reads two dry-run result directories (e.g. results/dryrun_base with
---opts none, results/dryrun_opt with --opts all) and prints per-pair
-deltas of the three roofline terms + the dominant-term verdict.
+Two modes share this CLI:
+
+Roofline mode (``--base``/``--opt`` directories): reads two dry-run
+result directories (e.g. results/dryrun_base with --opts none,
+results/dryrun_opt with --opts all) and prints per-pair deltas of the
+three roofline terms + the dominant-term verdict.
+
+Artifact mode (two positional ``BENCH_<scenario>.json`` files, as
+written by ``benchmarks/common.write_artifact``): diffs the emitted
+medians row by row and the self-check verdicts, and exits non-zero when
+any median regressed more than ``--threshold`` (default 10%) or a
+self-check that passed in the baseline fails in the candidate — CI runs
+this as a non-blocking report step against the cached baseline artifact:
+
+  python -m repro.analysis.perf_compare BENCH_A.json BENCH_B.json
 """
 
 from __future__ import annotations
@@ -10,7 +22,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Dict, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.analysis import roofline
 
@@ -62,12 +74,96 @@ def compare(base_dir: str, opt_dir: str, mesh: Optional[str] = "pod16x16",
     return "\n".join(lines)
 
 
+def _load_artifact(path: str) -> Dict[str, Any]:
+    with open(path) as fh:
+        doc = json.load(fh)
+    if not isinstance(doc, dict) or "medians" not in doc:
+        raise SystemExit(f"{path}: not a BENCH_<scenario>.json artifact "
+                         f"(missing 'medians')")
+    return doc
+
+
+def compare_artifacts(base: Dict[str, Any], cand: Dict[str, Any],
+                      threshold_pct: float = 10.0
+                      ) -> Tuple[str, List[str]]:
+    """Diff two benchmark artifacts -> (report text, regression list).
+
+    A median regresses when the candidate's us_per_call exceeds the
+    baseline's by more than ``threshold_pct``; a self-check regresses
+    when it passed in the baseline but fails (or disappears) in the
+    candidate.  Rows present on only one side are reported, not failed.
+    """
+    regressions: List[str] = []
+    b_rows = {r["name"]: r for r in base.get("medians", [])}
+    c_rows = {r["name"]: r for r in cand.get("medians", [])}
+    hdr = (f"{'benchmark':44s} {'baseline':>11s} {'candidate':>11s} "
+           f"{'delta':>8s}")
+    lines = [f"# {base.get('scenario', '?')}: "
+             f"{base.get('commit', '?')[:12]} -> "
+             f"{cand.get('commit', '?')[:12]}",
+             hdr, "-" * len(hdr)]
+    for name in sorted(b_rows.keys() | c_rows.keys()):
+        b, c = b_rows.get(name), c_rows.get(name)
+        if b is None or c is None:
+            lines.append(f"{name:44s} "
+                         f"{'-' if b is None else format(b['us_per_call'], '9.1f') + 'us':>11s} "
+                         f"{'-' if c is None else format(c['us_per_call'], '9.1f') + 'us':>11s} "
+                         f"{'new' if b is None else 'gone':>8s}")
+            continue
+        bv, cv = float(b["us_per_call"]), float(c["us_per_call"])
+        delta_pct = 100.0 * (cv - bv) / bv if bv > 0 else 0.0
+        mark = ""
+        if delta_pct > threshold_pct:
+            mark = " <-- REGRESSED"
+            regressions.append(
+                f"median {name!r}: {bv:.1f}us -> {cv:.1f}us "
+                f"(+{delta_pct:.1f}% > {threshold_pct:.0f}%)")
+        lines.append(f"{name:44s} {bv:9.1f}us {cv:9.1f}us "
+                     f"{delta_pct:+7.1f}%{mark}")
+    b_checks = {c["name"]: c.get("passed", False)
+                for c in base.get("self_checks", [])}
+    c_checks = {c["name"]: c.get("passed", False)
+                for c in cand.get("self_checks", [])}
+    for name in sorted(b_checks.keys() | c_checks.keys()):
+        was, now = b_checks.get(name), c_checks.get(name)
+        verdict = {True: "pass", False: "FAIL", None: "-"}
+        mark = ""
+        if was is True and now is not True:
+            mark = " <-- REGRESSED"
+            regressions.append(f"self-check {name!r}: pass -> "
+                               f"{'missing' if now is None else 'fail'}")
+        lines.append(f"{'check: ' + name:44s} {verdict[was]:>11s} "
+                     f"{verdict[now]:>11s} {'':>8s}{mark}")
+    return "\n".join(lines), regressions
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("artifacts", nargs="*", metavar="BENCH.json",
+                    help="two benchmark artifacts (baseline, candidate) "
+                         "for artifact-diff mode; omit for roofline mode")
     ap.add_argument("--base", default="results/dryrun_base")
     ap.add_argument("--opt", default="results/dryrun_opt")
     ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="artifact mode: %% median regression that fails "
+                         "the comparison (default 10)")
     args = ap.parse_args(argv)
+    if args.artifacts:
+        if len(args.artifacts) != 2:
+            ap.error("artifact mode takes exactly two BENCH_*.json files")
+        report, regressions = compare_artifacts(
+            _load_artifact(args.artifacts[0]),
+            _load_artifact(args.artifacts[1]),
+            threshold_pct=args.threshold)
+        print(report)
+        if regressions:
+            print(f"\n{len(regressions)} regression(s):")
+            for r in regressions:
+                print(f"  - {r}")
+            return 1
+        print("\nno regressions")
+        return 0
     print(compare(args.base, args.opt, mesh=args.mesh))
     return 0
 

@@ -157,12 +157,20 @@ class ContinuousBatchingScheduler:
                  max_pending: Optional[int] = None,
                  interactive_weight: int = 4,
                  device_sampling: bool = True,
-                 max_prefill_batch: Optional[int] = None):
+                 max_prefill_batch: Optional[int] = None,
+                 client_weights: Optional[Dict[str, float]] = None):
         self.engine = engine
         self.num_slots = num_slots
         self.max_pending = max_pending
         self.interactive_weight = max(1, interactive_weight)
         self.device_sampling = device_sampling
+        # per-client weighted fair dequeue (start-time fair queueing):
+        # each client tag advances a virtual clock by admitted-cost/weight
+        # and the lowest clock is admitted next, so within a priority
+        # class token share converges to the weight ratio.  Tags absent
+        # from the map weigh 1.0; untagged traffic shares one key.
+        self.client_weights: Dict[str, float] = dict(client_weights or {})
+        self._client_vt: Dict[Any, float] = {}
         # admissions per prefill forward: bounded by the engine's batch
         # buckets (and optionally tighter)
         cap = engine.batch_buckets.sizes[-1]
@@ -230,6 +238,13 @@ class ContinuousBatchingScheduler:
         self._share_device_ms = 0.0
         self._share_host_ms = 0.0
         self._share_transfer = 0.0
+        # lifetime cost totals the per-request attributions must conserve
+        # against (usage-ledger acceptance bar): decode device/host ms and
+        # token counts sum here exactly as the per-trace bumps do
+        self.decode_device_ms_total = 0.0
+        self.decode_host_ms_total = 0.0
+        self.decode_tokens_total = 0         # every generated token
+        self.prefill_tokens_total = 0        # prompt tokens forwarded
         self.prefill_transfer_bytes = 0      # first-token path
         self.prefill_forwards = 0
         self.prefill_requests = 0            # admitted through them
@@ -411,7 +426,9 @@ class ContinuousBatchingScheduler:
         self._share_ticks += 1
         self._share_device_ms += 1e3 * device_s * inv
         self._share_transfer += transfer * inv
+        self.decode_device_ms_total += 1e3 * device_s
         now = time.perf_counter()
+        free_later: List[int] = []
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
@@ -425,7 +442,7 @@ class ContinuousBatchingScheduler:
             if reason is not None:
                 self._finish(req, reason, now)
                 finished.append(req)
-                self._free_slot(b)
+                free_later.append(b)
             else:
                 self._last_token[b] = t
                 self._ctr[b] = len(req.output)
@@ -436,8 +453,9 @@ class ContinuousBatchingScheduler:
             self._notify(req, t)
         if self.device_sampling and self._samp_dev is not None:
             # no slot changed hands: next tick's inputs never leave the
-            # device (a _free_slot above cleared _samp_dev, falling back
-            # to a host re-upload built from the mirrors)
+            # device (a finish this tick clears _samp_dev via the
+            # deferred _free_slot below, falling back to a host re-upload
+            # built from the mirrors)
             self._tok_dev, self._ctr_dev = tok_dev, ctr_dev
         self._push(self.device_ms_window, 1e3 * device_s)
         self._push(self.prefill_ms_window, 1e3 * prefill_s)
@@ -450,11 +468,14 @@ class ContinuousBatchingScheduler:
         h["prefill_ms"].observe(1e3 * prefill_s)
         h["tick_transfer_bytes"].observe(transfer)
         # ``inv`` is this tick's 1/active from before the token loop: the
-        # host cost was shared by the slots that decoded, not by whoever
-        # remains after finishes freed slots.  (A request that finished
-        # THIS tick was flushed mid-loop and misses this one host share —
-        # a sub-ms rounding accepted for the O(1) design.)
+        # host cost is shared by the slots that decoded this tick.  Slots
+        # that finished are freed only BELOW, after this accrual, so a
+        # finishing request's flush still carries its final-tick share —
+        # per-request attribution sums to the global accumulators.
         self._share_host_ms += host_ms * inv
+        self.decode_host_ms_total += host_ms
+        for b in free_later:
+            self._free_slot(b)
         return finished
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
@@ -476,12 +497,54 @@ class ContinuousBatchingScheduler:
         hi, lo = self.queue, self.bulk_queue
         if not lo:
             self._rr_credit = 0
-            return hi.popleft() if hi else None
+            return self._pop_fair(hi) if hi else None
         if hi and self._rr_credit < self.interactive_weight:
             self._rr_credit += 1
-            return hi.popleft()
+            return self._pop_fair(hi)
         self._rr_credit = 0
-        return lo.popleft()
+        return self._pop_fair(lo)
+
+    @staticmethod
+    def _client_of(req: Request) -> Optional[str]:
+        return getattr(req.ctx, "client", None)
+
+    def _pop_fair(self, dq: Deque[Request]) -> Request:
+        """Pop the next request from ``dq`` under per-client start-time
+        fair queueing.  Single-client deques (including the all-untagged
+        common case) take the plain FIFO fast path; with competing tags,
+        the client with the LOWEST virtual clock pops its oldest request
+        and advances its clock by cost/weight (cost = prompt + decode
+        budget in tokens), so admitted token share converges to the
+        weight ratio.  Clocks lazily renormalize to the winner's clock —
+        an idle client re-enters at "now" instead of cashing banked
+        credit (same principle as the interactive/bulk RR credit)."""
+        first_c = self._client_of(dq[0])
+        firsts: Dict[Optional[str], int] = {}   # tag -> oldest index
+        multi = False
+        for i, req in enumerate(dq):
+            c = self._client_of(req)
+            if c not in firsts:
+                firsts[c] = i
+                if c != first_c:
+                    multi = True
+        if not multi:                       # one distinct client: FIFO
+            return dq.popleft()
+        # lowest clock wins; ties break by arrival (firsts preserves
+        # first-occurrence order).  floor = the winner's clock, which all
+        # clocks renormalize against.
+        floor = min(self._client_vt.get(c, 0.0) for c in firsts)
+        for c, i in firsts.items():
+            if self._client_vt.get(c, 0.0) > floor:
+                continue
+            req = dq[i]
+            del dq[i]
+            cost = float(len(req.prompt) + req.max_new_tokens)
+            w = self.client_weights.get(c, 1.0) if c else 1.0
+            self._client_vt[c] = floor + cost / max(w, 1e-9)
+            if len(self._client_vt) > 4096:  # bounded against tag churn
+                self._client_vt.clear()
+            return req
+        return dq.popleft()                  # unreachable
 
     def _admit(self, finished: List[Request]) -> float:
         """Admit up to one pending request per free slot, batching the
@@ -558,6 +621,9 @@ class ContinuousBatchingScheduler:
             seed = req.prompt + req.output
             tokens[i, :len(seed)] = seed
             lengths[i] = len(seed)
+            self.prefill_tokens_total += len(seed)
+            if req.trace is not None:
+                req.trace.bump("prefill_tokens", len(seed))
         batch = {"tokens": jnp.asarray(tokens),
                  "lengths": jnp.asarray(lengths)}
         if reqs[0].extras:
@@ -629,10 +695,12 @@ class ContinuousBatchingScheduler:
                                                  jnp.asarray(write_mask))
             prefill_s += time.perf_counter() - t1
         t_end = time.perf_counter()
+        per_ms = 1e3 * prefill_s / n         # even split: one forward, n rows
         for req in reqs:                     # every row got its first token
             if req.trace is not None:
                 req.trace.span("prefill", t0, t_end,
                                group_size=n, seq_bucket=S)
+                req.trace.bump("prefill_ms", per_ms)
             self._notify(req, req.output[-1])
         return prefill_s
 
@@ -760,6 +828,7 @@ class ContinuousBatchingScheduler:
             self.prefill_transfer_bytes += host.nbytes
             firsts = [reqs[i].sampler.sample(host[i]) for i in range(n)]
         prefill_s = time.perf_counter() - t0
+        per_ms = 1e3 * prefill_s / n         # even split: one forward, n rows
         now = time.perf_counter()
         for i, (req, match, new_pages, suffix, _, _) in enumerate(items):
             if req.trace is not None:
@@ -767,6 +836,10 @@ class ContinuousBatchingScheduler:
                                seq_bucket=S, ctx_bucket=C,
                                prefix_reused_tokens=match.ctx_tokens,
                                suffix_tokens=len(suffix))
+                # attribution counts the tokens actually FORWARDED — a
+                # prefix-cache hit is not billed to the reusing client
+                req.trace.bump("prefill_tokens", len(suffix))
+                req.trace.bump("prefill_ms", per_ms)
             req.pages = list(match.pages) + list(new_pages)
             seed = req.prompt + req.output
             # publish BEFORE the first-token finish check: even a request
@@ -774,6 +847,7 @@ class ContinuousBatchingScheduler:
             self.pager.register_prefix(seed, req.pages)
             self.prefill_tokens_forwarded += len(suffix)
             self.prefill_tokens_reused += match.ctx_tokens
+            self.prefill_tokens_total += len(suffix)
             first = int(firsts[i])
             self._record_token(req, first, now)
             reason = self._finish_reason(req, first)
@@ -1009,7 +1083,10 @@ class ContinuousBatchingScheduler:
 
     def _record_token(self, req: Request, token: int, now: float) -> None:
         req.output.append(token)
+        self.decode_tokens_total += 1
         tid = req.trace.trace_id if req.trace is not None else None
+        if req.trace is not None:
+            req.trace.bump("decode_tokens")
         if req.first_token_at is None:
             req.first_token_at = now
             ttft = now - req.submitted_at
@@ -1077,11 +1154,13 @@ class SchedulerService:
     def __init__(self, engine: InferenceEngine, num_slots: int = 4, *,
                  max_pending: Optional[int] = None,
                  interactive_weight: int = 4,
-                 device_sampling: bool = True):
+                 device_sampling: bool = True,
+                 client_weights: Optional[Dict[str, float]] = None):
         self.scheduler = ContinuousBatchingScheduler(
             engine, num_slots, max_pending=max_pending,
             interactive_weight=interactive_weight,
-            device_sampling=device_sampling)
+            device_sampling=device_sampling,
+            client_weights=client_weights)
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._events: Dict[int, threading.Event] = {}
@@ -1286,6 +1365,10 @@ class SchedulerService:
                 "prefill_forwards": s.prefill_forwards,
                 "prefill_requests": s.prefill_requests,
                 "prefill_s_total": s.prefill_s_total,
+                "device_ms_total": s.decode_device_ms_total,
+                "host_ms_total": s.decode_host_ms_total,
+                "decode_tokens_total": s.decode_tokens_total,
+                "prefill_tokens_total": s.prefill_tokens_total,
                 "compiled_steps": s.engine.decode_cache_size(),
                 "host_ms_hist": h["decode_host_ms"].snapshot(),
                 "device_ms_hist": h["decode_device_ms"].snapshot(),

@@ -36,7 +36,8 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               max_queue: int = 64, generate_token_budget=None,
               default_deadline_ms=None, trace: bool = True,
               flight_recorder_size: int = 256,
-              profile_dir=None) -> FlexServeApp:
+              profile_dir=None, slo_config=None,
+              client_weights=None) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -65,7 +66,8 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
                         default_deadline_ms=default_deadline_ms,
                         trace=trace,
                         flight_recorder_size=flight_recorder_size,
-                        profile_dir=profile_dir)
+                        profile_dir=profile_dir, slo_policies=slo_config,
+                        client_weights=client_weights)
 
 
 def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
@@ -75,7 +77,8 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     generate_token_budget=None,
                     default_deadline_ms=None, trace: bool = True,
                     flight_recorder_size: int = 256,
-                    profile_dir=None) -> FlexServeApp:
+                    profile_dir=None, slo_config=None,
+                    client_weights=None) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
     generation engine is ALSO store-versioned: the first decode-capable
@@ -112,7 +115,8 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                        default_deadline_ms=default_deadline_ms,
                        trace=trace,
                        flight_recorder_size=flight_recorder_size,
-                       profile_dir=profile_dir)
+                       profile_dir=profile_dir, slo_policies=slo_config,
+                       client_weights=client_weights)
     if engine_member is not None and app.generation is not None:
         res = manager.load_engine(engine_member)
         print(f"[serve] generation engine {res['engine']} "
@@ -154,8 +158,32 @@ def main(argv=None) -> int:
     ap.add_argument("--profile-dir", default=None, metavar="DIR",
                     help="enable POST /v1/debug/profile; captures land "
                          "under this directory")
+    ap.add_argument("--slo-config", default=None, metavar="FILE",
+                    help="JSON SLO policy file ({'policies': [...]}); "
+                         "enables the SLO autopilot: windowed burn-rate "
+                         "evaluation with automatic canary promotion / "
+                         "rollback, auditable at GET /v1/slo")
+    ap.add_argument("--client-weight", action="append", default=None,
+                    metavar="TAG=W",
+                    help="per-client-tag fair-share weight (repeatable); "
+                         "any weight enables weighted admission quotas + "
+                         "weighted fair dequeue on the generate plane "
+                         "(unlisted tags weigh 1.0)")
     ap.add_argument("--full", action="store_true")
     args = ap.parse_args(argv)
+
+    client_weights = None
+    if args.client_weight:
+        client_weights = {}
+        for spec in args.client_weight:
+            tag, sep, w = spec.partition("=")
+            if not sep or not tag:
+                ap.error(f"--client-weight needs TAG=WEIGHT, got {spec!r}")
+            try:
+                client_weights[tag] = float(w)
+            except ValueError:
+                ap.error(f"--client-weight {spec!r}: weight must be a "
+                         f"number")
 
     kw = dict(num_classes=args.num_classes, max_len=args.max_len,
               max_batch=args.max_batch, full=args.full,
@@ -164,7 +192,8 @@ def main(argv=None) -> int:
               default_deadline_ms=args.default_deadline_ms,
               trace=not args.no_trace,
               flight_recorder_size=args.flight_recorder_size,
-              profile_dir=args.profile_dir)
+              profile_dir=args.profile_dir, slo_config=args.slo_config,
+              client_weights=client_weights)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:
@@ -182,13 +211,17 @@ def main(argv=None) -> int:
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "
           f"{len(app.registry)} model(s): {app.registry.names()}")
     print("[serve] routes: GET /health /healthz /metrics[?format="
-          "prometheus] /v1/trace/{id} /v1/traces /v1/models "
-          "/v1/models/{name} /v1/engines; POST /v1/infer /v1/detect "
-          "/v1/generate (+\"stream\": true for token streaming)"
+          "prometheus] /v1/trace/{id} /v1/traces /v1/usage /v1/slo "
+          "/v1/models /v1/models/{name} /v1/engines; POST /v1/infer "
+          "/v1/detect /v1/generate (+\"stream\": true for token streaming)"
           + (" /v1/debug/profile" if args.profile_dir else "")
           + (" /v1/models/{name}/load|unload|rollback|gc "
              "/v1/engines/{name}/load|rollback"
              if app.manager else ""))
+    if app.slo is not None:
+        print(f"[serve] SLO autopilot: "
+              f"{app.slo.stats()['policies']} policy(ies) from "
+              f"{args.slo_config} — decisions audit at GET /v1/slo")
     try:
         server.httpd.serve_forever()
     except KeyboardInterrupt:

@@ -1,3 +1,5 @@
+from repro.core.slo import (SLIStore, SLOController, SLOPolicy, UsageLedger,
+                            load_policies)
 from repro.serving.admission import (AdmissionController, DeadlineError,
                                      RequestContext, ShedError, make_context)
 from repro.serving.client import FlexServeClient, HTTPStatusError
@@ -21,4 +23,6 @@ __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
            "default_engine_factory", "GenerationError", "GenerationService",
            "GenerationStream",
            "FlightRecorder", "Trace", "Histogram", "Reservoir",
-           "DeviceProfiler", "prometheus_exposition"]
+           "DeviceProfiler", "prometheus_exposition",
+           "SLIStore", "SLOController", "SLOPolicy", "UsageLedger",
+           "load_policies"]

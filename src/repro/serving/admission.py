@@ -159,6 +159,7 @@ class Ticket:
     priority: str
     cost: int
     admitted_s: float
+    client: Optional[str] = None       # quota tag (None: quotas disabled)
     _released: bool = field(default=False)
 
     def release(self) -> None:
@@ -173,15 +174,25 @@ class AdmissionController:
 
     _EWMA_ALPHA = 0.2
 
+    MAX_CLIENT_TAGS = 1024        # distinct tags tracked per plane
+
     def __init__(self, *, max_queue: int = 64, bulk_fraction: float = 0.5,
                  default_deadline_ms: Optional[float] = None,
                  min_retry_after_s: float = 0.05,
-                 plane_budgets: Optional[Dict[str, int]] = None):
+                 plane_budgets: Optional[Dict[str, int]] = None,
+                 client_weights: Optional[Dict[str, float]] = None):
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
         self.max_queue = max_queue
         self.bulk_fraction = bulk_fraction
         self.bulk_max = max(1, int(max_queue * bulk_fraction))
+        # per-client quotas: ACTIVE only when a weight map is given (even
+        # an empty one — unknown tags then weigh 1.0).  While several tags
+        # hold budget, each is capped at its weighted share; a lone tag
+        # still gets the whole plane, and any tag always gets at least
+        # one request in flight (no hard starvation of big requests).
+        self.client_weights = (dict(client_weights)
+                               if client_weights is not None else None)
         # per-plane budget overrides, each in ITS plane's cost units
         # (e.g. {"generate": tokens}); planes not named use max_queue
         self.plane_budgets = dict(plane_budgets or {})
@@ -223,8 +234,24 @@ class AdmissionController:
                 "deadline_miss": {},
                 "last_release_s": None,
                 "ewma_release_gap_s": None,   # per cost unit
+                "clients": {},                # tag -> cost/admitted/shed
             }
         return st
+
+    def _client(self, st: Dict[str, Any],
+                tag: str) -> "tuple[str, Dict[str, Any]]":
+        """(possibly folded tag, its entry) — unseen tags past the cap
+        fold into ``"_overflow"`` so tag churn cannot grow memory."""
+        clients = st["clients"]
+        ent = clients.get(tag)
+        if ent is None:
+            if len(clients) >= self.MAX_CLIENT_TAGS:
+                tag = "_overflow"
+                ent = clients.get(tag)
+                if ent is not None:
+                    return tag, ent
+            ent = clients[tag] = {"cost": 0, "admitted": 0, "shed": 0}
+        return tag, ent
 
     def admit(self, plane: str, ctx: RequestContext,
               cost: int = 1) -> Ticket:
@@ -261,19 +288,51 @@ class AdmissionController:
                 if tr is not None:
                     tr.event("shed", t=now, plane=plane, cost=cost,
                              depth=depth, budget=budget,
+                             reason="queue_full",
                              retry_after_s=round(retry, 3))
                 raise ShedError(
                     f"{plane} queue full "
                     f"({depth}/{budget} units, "
                     f"priority={ctx.priority})",
                     retry_after_s=retry)
+            tag = None
+            if self.client_weights is not None:
+                tag, ent = self._client(st, ctx.client or "_untagged")
+                # weighted-share quota: enforced only while OTHER tags
+                # hold budget (a lone tag gets the whole plane), and a
+                # tag holding nothing always admits one request
+                holders = [t for t, e in st["clients"].items()
+                           if e["cost"] > 0 and t != tag]
+                if holders and ent["cost"] > 0:
+                    w = self.client_weights.get(tag, 1.0)
+                    wsum = w + sum(self.client_weights.get(t, 1.0)
+                                   for t in holders)
+                    share = budget * w / wsum
+                    if ent["cost"] + cost > share:
+                        ent["shed"] += 1
+                        st["shed"][ctx.priority] += 1
+                        retry = self._retry_after_locked(
+                            st, ent["cost"] + cost)
+                        if tr is not None:
+                            tr.event("shed", t=now, plane=plane,
+                                     cost=cost, reason="client_quota",
+                                     client=tag, held=ent["cost"],
+                                     share=round(share, 1),
+                                     retry_after_s=round(retry, 3))
+                        raise ShedError(
+                            f"{plane} quota for client {tag!r} full "
+                            f"({ent['cost']}/{share:.0f} of "
+                            f"{budget} units)",
+                            retry_after_s=retry)
+                ent["cost"] += cost
+                ent["admitted"] += 1
             st["depth"][ctx.priority] += cost
             st["admitted"][ctx.priority] += 1
             st["high_water"] = max(st["high_water"], depth + cost)
         if tr is not None:
             tr.event("admitted", t=now, plane=plane, cost=cost,
                      depth=depth + cost, budget=budget)
-        return Ticket(self, plane, ctx.priority, cost, now)
+        return Ticket(self, plane, ctx.priority, cost, now, client=tag)
 
     def _release(self, ticket: Ticket) -> None:
         now = time.perf_counter()
@@ -284,6 +343,10 @@ class AdmissionController:
             st = self._plane(ticket.plane)
             st["depth"][ticket.priority] = max(
                 0, st["depth"][ticket.priority] - ticket.cost)
+            if ticket.client is not None:
+                ent = st["clients"].get(ticket.client)
+                if ent is not None:
+                    ent["cost"] = max(0, ent["cost"] - ticket.cost)
             # drain-rate estimate: gap between consecutive releases,
             # normalized per cost unit released — sampled only while the
             # plane is still BUSY, so the gap measures service, not the
@@ -335,11 +398,15 @@ class AdmissionController:
                     "ewma_release_gap_ms": (
                         1e3 * st["ewma_release_gap_s"]
                         if st["ewma_release_gap_s"] is not None else None),
+                    **({"clients": {t: dict(e)
+                                    for t, e in st["clients"].items()}}
+                       if self.client_weights is not None else {}),
                 }
                 for name, st in self._planes.items()}
             return {
                 "max_queue": self.max_queue,
                 "bulk_max": self.bulk_max,
                 "default_deadline_ms": self.default_deadline_ms,
+                "quotas_enabled": self.client_weights is not None,
                 "planes": planes,
             }

@@ -134,6 +134,14 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                                     engines: {alias: {...}}},
                        "lifecycle": {loads, unloads, swaps, rollbacks, ...}
                                     (zeroed without a ModelManager),
+                       "usage": {clients, versions, requests, errors,
+                                 prefill_tokens, decode_tokens, device_ms,
+                                 decode_device_ms, decode_host_ms,
+                                 prefill_ms, transfer_bytes}
+                                (cost-attribution totals; zeroed at boot),
+                       "slo": {policies, evaluations, decisions,
+                               promotions, rollbacks, breaches}
+                              (zeroed without an SLO config),
                        "telemetry": {capacity, in_flight, completed,
                                      completed_total, leaked_total}}
 
@@ -175,8 +183,46 @@ GET  /v1/trace/{trace_id}
     header; shed (429) and deadline (504) requests leave timelines too.
 
 GET  /v1/traces  -> {"in_flight": [...ids], "recent": [{trace_id, plane,
-                     status, finish_reason, duration_ms}, ...],
+                     client, status, finish_reason, duration_ms,
+                     "version"?}, ...],
                      "telemetry": {capacity, in_flight, completed, ...}}
+    Query filters (combinable): ``?status=504`` (exact HTTP status),
+    ``?client=tenant-a`` (exact client tag), ``?min_duration_ms=250``
+    (at-least duration), ``?limit=50`` (max rows, default 20).  With a
+    filter active the whole completed ring is scanned before the limit
+    applies; 400 on malformed values.
+
+SLO autopilot & cost accounting (PR 8; see repro.core.slo):
+
+GET  /v1/usage   -> {"clients": {tag: usage}, "versions": {label: usage},
+                     "totals": usage}
+    where usage = {requests, errors, prefill_tokens, decode_tokens,
+                   device_ms, decode_device_ms, decode_host_ms,
+                   prefill_ms, transfer_bytes,
+                   "planes": {plane: {requests, device_ms, tokens}}}.
+    Per-client / per-version cost attribution rolled up from the
+    scheduler's per-request O(1) cost counters at trace-seal time
+    (device_ms = decode share + prefill share).  Untagged requests land
+    under "_untagged", engine-less planes under "_unversioned".
+    Query filters: ``?client=tag`` / ``?version=label`` narrow the
+    corresponding table to one key.
+
+GET  /v1/slo     -> {"enabled", policies (count), evaluations, decisions
+                     (count or list), promotions, rollbacks, breaches,
+                     "policies": [{...policy fields, "eval": {state:
+                        "observing"|"healthy"|"breach"|"no_target"|
+                        "no_traffic", engine, fast/slow: {sli, burn_rate,
+                        failed}}}, ...],
+                     "decisions": [{seq, trace_id, unix_time, policy,
+                        action: "promote"|"rollback", alias, engine,
+                        stable_engine, error, fast_burn, slow_burn,
+                        failed_objectives, window_count, result}, ...],
+                     "sli": {plane|client|version: {name: {count,
+                        error_rate, deadline_miss_rate, p50_ms, p95_ms,
+                        p99_ms, ttft_p95_ms, ...}}}}
+    ``?window_s=60`` selects the SLI snapshot window.  Every autopilot
+    decision is also a sealed trace (GET /v1/trace/slo-<policy>-<seq>)
+    so promotions and rollbacks are auditable like any request.
 
 POST /v1/debug/profile   {"duration_ms"?: 1000, "mode"?: "auto"}
     -> 202 {"mode": "jax"|"python", "artifact": path, "duration_ms",

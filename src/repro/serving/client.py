@@ -327,9 +327,30 @@ class FlexServeClient:
             "GET", f"/v1/trace/{urllib.parse.quote(trace_id, safe='')}",
             retries=0)
 
-    def traces(self) -> Dict[str, Any]:
-        """Flight recorder index: in-flight + recently completed traces."""
-        return self._request("GET", "/v1/traces", retries=0)
+    def traces(self, **filters: Any) -> Dict[str, Any]:
+        """Flight recorder index: in-flight + recently completed traces.
+        Keyword filters pass through as query parameters — ``status=504``,
+        ``client="tenant-a"``, ``min_duration_ms=250``, ``limit=50``."""
+        qs = urllib.parse.urlencode(
+            {k: v for k, v in filters.items() if v is not None})
+        return self._request("GET", f"/v1/traces{'?' + qs if qs else ''}",
+                             retries=0)
+
+    def usage(self, client: Optional[str] = None,
+              version: Optional[str] = None) -> Dict[str, Any]:
+        """Per-client / per-version cost attribution (GET /v1/usage),
+        optionally narrowed to one client tag and/or version label."""
+        qs = urllib.parse.urlencode(
+            {k: v for k, v in (("client", client), ("version", version))
+             if v is not None})
+        return self._request("GET", f"/v1/usage{'?' + qs if qs else ''}",
+                             retries=0)
+
+    def slo(self, window_s: Optional[float] = None) -> Dict[str, Any]:
+        """SLO autopilot status: policies with their latest evaluation,
+        the decision audit log, and an SLI snapshot (GET /v1/slo)."""
+        qs = f"?window_s={window_s}" if window_s is not None else ""
+        return self._request("GET", f"/v1/slo{qs}", retries=0)
 
     def start_profile(self, duration_ms: int = 1000,
                       mode: str = "auto") -> Dict[str, Any]:

@@ -316,10 +316,13 @@ class GenerationService:
                  num_slots: int = 4, default_alias: str = "stable",
                  drain_timeout_s: float = 30.0,
                  max_pending: Optional[int] = None,
-                 max_stream_buffer: int = 32):
+                 max_stream_buffer: int = 32,
+                 client_weights: Optional[Dict[str, float]] = None):
         self.num_slots = num_slots
         self.default_alias = default_alias
         self.drain_timeout_s = drain_timeout_s
+        # per-client weighted fair dequeue inside every engine's scheduler
+        self.client_weights = client_weights
         # backstop bound on each engine's pending deque; the app-level
         # AdmissionController sheds earlier (and with better hints), this
         # keeps a directly-driven service bounded too
@@ -354,7 +357,8 @@ class GenerationService:
         streams never pay compile latency."""
         service = SchedulerService(engine,
                                    num_slots=num_slots or self.num_slots,
-                                   max_pending=self.max_pending)
+                                   max_pending=self.max_pending,
+                                   client_weights=self.client_weights)
         warm_s = service.warm() if warm else 0.0
         entry = _EngineEntry(name, version, service)
         with self._lock:
@@ -364,23 +368,63 @@ class GenerationService:
             alias = alias or self.default_alias
             old = self._aliases.get(alias)
             self._aliases[alias] = entry
+            # alias re-pointing (promote/demote) lets several aliases
+            # share one entry: only retire the displaced entry once no
+            # alias references it anymore
+            still = any(e is old for e in self._aliases.values())
         drained, drain_s = True, 0.0
-        if old is not None:
-            # refuse-new FIRST: a submit racing the swap either landed
-            # before this (drain waits for it) or raises and is retried
-            # on the alias's new entry — no stream is ever stranded in a
-            # closing scheduler
-            old.service.begin_retire()
-            t0 = time.perf_counter()
-            drained = old.service.drain(self.drain_timeout_s)
-            drain_s = time.perf_counter() - t0
-            old.service.close()
+        if old is not None and not still:
+            drained, drain_s = self._retire(old)
         with self._stats_lock:
             self._swaps += 1
         return {"alias": alias, "engine": entry.label,
                 "previous_engine": old.label if old is not None else None,
                 "drained": drained, "drain_ms": 1e3 * drain_s,
                 "warm_ms": 1e3 * warm_s}
+
+    def _retire(self, old: _EngineEntry) -> "tuple[bool, float]":
+        # refuse-new FIRST: a submit racing the swap either landed
+        # before this (drain waits for it) or raises and is retried
+        # on the alias's new entry — no stream is ever stranded in a
+        # closing scheduler
+        old.service.begin_retire()
+        t0 = time.perf_counter()
+        drained = old.service.drain(self.drain_timeout_s)
+        drain_s = time.perf_counter() - t0
+        old.service.close()
+        return drained, drain_s
+
+    def repoint(self, from_alias: str, to_alias: str) -> Dict[str, Any]:
+        """Point ``to_alias`` at ``from_alias``'s engine entry — the
+        canary-promotion primitive (``repoint("canary", "stable")`` makes
+        the canary's engine the stable one with NO reload and NO warmup:
+        both aliases share the live entry, scheduler and all).  The entry
+        ``to_alias`` displaced drains and closes only if no other alias
+        still references it.  Demotion is the same call reversed."""
+        with self._lock:
+            if self._closed:
+                raise GenerationError("generation service is closed")
+            try:
+                src = self._aliases[from_alias]
+            except KeyError:
+                raise GenerationError(
+                    f"no generation engine under alias {from_alias!r}; "
+                    f"available: {sorted(self._aliases)}") from None
+            old = self._aliases.get(to_alias)
+            if old is src:
+                return {"alias": to_alias, "engine": src.label,
+                        "previous_engine": src.label, "changed": False}
+            self._aliases[to_alias] = src
+            still = any(e is old for e in self._aliases.values())
+        drained, drain_s = True, 0.0
+        if old is not None and not still:
+            drained, drain_s = self._retire(old)
+        with self._stats_lock:
+            self._swaps += 1
+        return {"alias": to_alias, "engine": src.label,
+                "previous_engine": old.label if old is not None else None,
+                "changed": True, "drained": drained,
+                "drain_ms": 1e3 * drain_s}
 
     @property
     def ready(self) -> bool:
@@ -417,6 +461,7 @@ class GenerationService:
         sampling = sampling or SamplingParams()
         while True:
             entry = self.entry_for(alias)
+            self._annotate_version(ctx, entry, alias)
             try:
                 return entry.service.submit_and_wait(
                     prompts, sampling=sampling, ctx=ctx, timeout=timeout)
@@ -448,6 +493,7 @@ class GenerationService:
         sampling = sampling or SamplingParams()
         while True:
             entry = self.entry_for(alias)
+            self._annotate_version(ctx, entry, alias)
             stream = GenerationStream(
                 self, entry, sampling, ctx=ctx,
                 max_buffered=max_buffered or self.max_stream_buffer,
@@ -471,6 +517,17 @@ class GenerationService:
         with self._stats_lock:
             self._streams["started"] += 1
         return stream
+
+    def _annotate_version(self, ctx: Optional[RequestContext],
+                          entry: _EngineEntry,
+                          alias: Optional[str]) -> None:
+        """Stamp the serving engine's identity on the request trace so
+        the SLI/usage aggregators can attribute it per version (and the
+        SLO controller can evaluate the alias's traffic)."""
+        tr = getattr(ctx, "trace", None)
+        if tr is not None and hasattr(tr, "annotate"):
+            tr.annotate("version", entry.label)
+            tr.annotate("alias", alias or self.default_alias)
 
     def _finished(self, req: Request) -> None:
         key = ("cancelled" if req.finish_reason == "cancelled" else
@@ -522,6 +579,11 @@ class GenerationService:
                                "prefill_transfer_bytes_total": 0,
                                "prefill_forwards": 0,
                                "prefill_requests": 0,
+                               "prefill_s_total": 0.0,
+                               "device_ms_total": 0.0,
+                               "host_ms_total": 0.0,
+                               "decode_tokens_total": 0,
+                               "prefill_tokens_total": 0,
                                "compiled_steps": None,
                                "host_ms_hist": zero_ms,
                                "device_ms_hist": zero_ms,
@@ -541,5 +603,8 @@ class GenerationService:
             self._closed = True
             entries = list(self._aliases.values())
             self._aliases.clear()
-        for e in entries:
-            e.service.close()
+        seen: set = set()
+        for e in entries:              # aliases may share one entry
+            if id(e) not in seen:
+                seen.add(id(e))
+                e.service.close()

@@ -123,7 +123,8 @@ class ModelManager:
         self._stats_lock = threading.Lock()
         self._counters = {"loads": 0, "unloads": 0, "swaps": 0,
                           "rollbacks": 0, "engine_loads": 0,
-                          "engine_rollbacks": 0, "gc_runs": 0}
+                          "engine_rollbacks": 0, "engine_promotes": 0,
+                          "engine_demotes": 0, "gc_runs": 0}
         self._warm_total_s = 0.0
         self._last_warm_s = 0.0
         self._version_traffic: Dict[str, Dict[str, int]] = {}
@@ -166,6 +167,14 @@ class ModelManager:
         interactive = sum(1 for c in (ctxs or [])
                           if getattr(c, "priority", None) != "bulk")
         bulk = len(ctxs or []) - interactive
+        if ctxs and active:
+            # composite ensemble version label, so infer-plane requests
+            # attribute per version like generate-plane ones do
+            label = ",".join(f"{n}@v{v}" for n, v in sorted(active.items()))
+            for c in ctxs:
+                tr = getattr(c, "trace", None)
+                if tr is not None and hasattr(tr, "annotate"):
+                    tr.annotate("version", label)
         with self._stats_lock:
             for name, version in active.items():
                 t = self._version_traffic.setdefault(
@@ -340,6 +349,63 @@ class ModelManager:
                 self._counters["engine_loads"] -= 1   # rollback, not a load
             result["rolled_back_to"] = prev[1]
             return result
+
+    def engine_version_label(self, alias: Optional[str] = None
+                             ) -> Optional[str]:
+        """``"name@vN"`` currently served under an engine alias, or None —
+        the SLO controller's resolve callback."""
+        nv = self._engine_active.get(alias or self.default_alias)
+        return f"{nv[0]}@v{nv[1]}" if nv is not None else None
+
+    def promote_engine(self, alias: str = "canary", *,
+                       to_alias: Optional[str] = None) -> Dict[str, Any]:
+        """Make ``alias``'s engine the ``to_alias`` (default: stable)
+        engine — canary promotion.  A pointer flip, not a reload: both
+        aliases share the already-warm live entry, so promotion costs no
+        compile and truncates nothing (the displaced stable engine drains
+        in-flight streams before closing).  The displaced version is
+        recorded as ``to_alias``'s rollback target."""
+        gen = self._require_generation()
+        to_alias = to_alias or self.default_alias
+        with self._admin_lock:
+            src = self._engine_active.get(alias)
+            if src is None:
+                raise LifecycleError(
+                    f"no engine under alias {alias!r} to promote")
+            swap = gen.repoint(alias, to_alias)
+            old = self._engine_active.get(to_alias)
+            self._engine_active[to_alias] = src
+            if old is not None and old != src:
+                self._engine_previous[to_alias] = old
+            with self._stats_lock:
+                self._counters["engine_promotes"] += 1
+            return {"name": src[0], "version": src[1], "from_alias": alias,
+                    "promoted": swap.get("changed", True), **swap}
+
+    def demote_engine(self, alias: str = "canary", *,
+                      to_alias: Optional[str] = None) -> Dict[str, Any]:
+        """Point a misbehaving ``alias`` back at ``to_alias``'s (default:
+        stable's) engine — canary auto-rollback.  The breaching engine
+        drains its in-flight streams and closes once no alias references
+        it; canary traffic lands on the stable engine immediately."""
+        gen = self._require_generation()
+        to_alias = to_alias or self.default_alias
+        with self._admin_lock:
+            src = self._engine_active.get(to_alias)
+            if src is None:
+                raise LifecycleError(
+                    f"no engine under alias {to_alias!r} to demote "
+                    f"{alias!r} onto")
+            swap = gen.repoint(to_alias, alias)
+            old = self._engine_active.get(alias)
+            self._engine_active[alias] = src
+            if old is not None and old != src:
+                self._engine_previous[alias] = old
+            with self._stats_lock:
+                self._counters["engine_demotes"] += 1
+            return {"name": src[0], "version": src[1],
+                    "demoted_from": f"{old[0]}@v{old[1]}" if old else None,
+                    **swap}
 
     # --- retention GC ---------------------------------------------------------
 

@@ -37,6 +37,8 @@ from repro.core.batching import BucketSpec
 from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
 from repro.core.registry import ModelRegistry
+from repro.core.slo import (ZERO_SLO, SLIStore, SLOController, UsageLedger,
+                            load_policies)
 from repro.serving import api
 from repro.serving.admission import (AdmissionController, DeadlineError,
                                      RequestContext, ShedError)
@@ -51,7 +53,8 @@ from repro.serving.telemetry import (DeviceProfiler, FlightRecorder,
 # key set (and the Prometheus exposition) is identical either way
 _ZERO_LIFECYCLE: Dict[str, Any] = {
     "loads": 0, "unloads": 0, "swaps": 0, "rollbacks": 0,
-    "engine_loads": 0, "engine_rollbacks": 0, "gc_runs": 0,
+    "engine_loads": 0, "engine_rollbacks": 0,
+    "engine_promotes": 0, "engine_demotes": 0, "gc_runs": 0,
     "last_warm_ms": 0.0, "warm_total_ms": 0.0, "per_version": {},
     "aliases": {}, "engine_aliases": {}}
 
@@ -83,7 +86,12 @@ class FlexServeApp:
                  generate_token_budget: Optional[int] = None,
                  trace: bool = True,
                  flight_recorder_size: int = 256,
-                 profile_dir: Optional[str] = None):
+                 profile_dir: Optional[str] = None,
+                 slo_policies: Any = None,
+                 slo_interval_s: float = 2.0,
+                 sli_bucket_s: float = 10.0,
+                 sli_n_buckets: int = 60,
+                 client_weights: Optional[Dict[str, float]] = None):
         if manager is not None and ensemble is not None:
             raise ValueError("pass either a static ensemble or a manager")
         self.manager = manager
@@ -96,8 +104,16 @@ class FlexServeApp:
         # monotonic for uptime arithmetic; the wall time is only reported
         self._t0 = time.monotonic()
         self._started_unix = time.time()
+        # SLI/usage aggregation rides the flight recorder's completion
+        # hook: both stay zeroed (but present in /metrics) with tracing
+        # off, so the schema is identical either way
+        self.sli = SLIStore(bucket_s=sli_bucket_s, n_buckets=sli_n_buckets)
+        self.usage = UsageLedger()
+        self.slo: Optional[SLOController] = None
         self.recorder: Optional[FlightRecorder] = (
-            FlightRecorder(capacity=flight_recorder_size) if trace else None)
+            FlightRecorder(capacity=flight_recorder_size,
+                           on_complete=self._ingest_trace)
+            if trace else None)
         self.profiler: Optional[DeviceProfiler] = (
             DeviceProfiler(artifact_dir=profile_dir)
             if profile_dir is not None else None)
@@ -114,7 +130,8 @@ class FlexServeApp:
         self.admission = AdmissionController(
             max_queue=max_queue, bulk_fraction=bulk_fraction,
             default_deadline_ms=default_deadline_ms,
-            plane_budgets={"generate": self.generate_token_budget})
+            plane_budgets={"generate": self.generate_token_budget},
+            client_weights=client_weights)
         self.coalescer: Optional[BatchCoalescer] = None
         self.generation: Optional[GenerationService] = None
         if coalesce and (ensemble is not None or manager is not None):
@@ -127,9 +144,18 @@ class FlexServeApp:
             self.generation = GenerationService(
                 engine, num_slots=num_slots,
                 max_pending=max(num_slots, max_queue),
-                max_stream_buffer=max_stream_buffer)
+                max_stream_buffer=max_stream_buffer,
+                client_weights=client_weights)
             if manager is not None:
                 manager.attach_generation(self.generation)
+        policies = load_policies(slo_policies) if slo_policies else []
+        if policies:
+            self.slo = SLOController(
+                self.sli, policies,
+                resolve=self._slo_resolve, promote=self._slo_promote,
+                rollback=self._slo_rollback, recorder=self.recorder,
+                interval_s=slo_interval_s)
+            self.slo.start()
 
     @property
     def ensemble(self) -> Optional[Ensemble]:
@@ -150,12 +176,71 @@ class FlexServeApp:
     def close(self) -> None:
         """Stop background dispatch threads (idempotent)."""
         self._closing = True
+        if self.slo is not None:
+            self.slo.close()
         if self.coalescer is not None:
             self.coalescer.close()
             self.coalescer = None
         if self.generation is not None:
             self.generation.close()
             self.generation = None
+
+    # --- SLO autopilot glue ---------------------------------------------------
+
+    def _ingest_trace(self, tr) -> None:
+        """FlightRecorder completion hook: fold one sealed trace into the
+        windowed SLIs and the per-client/per-version usage ledger.  499
+        (client cancelled) is not an availability error; a deadline miss
+        is either a 504 or a request whose streams all hit 'deadline'."""
+        if tr.plane == "slo":                 # autopilot audit traces
+            return
+        status = tr.status if tr.status is not None else 200
+        end_s = tr.end_s if tr.end_s is not None else tr.start_s
+        ttft_ms = None
+        for ev in tr.events:
+            if ev.get("name") == "first_token":
+                ttft_ms = 1e3 * (ev["t"] - tr.start_s)
+                break
+        error = status >= 500
+        miss = status == 504 or tr.finish_reason == "deadline"
+        version = tr.attrs.get("version")
+        self.sli.ingest(plane=tr.plane, client=tr.client, version=version,
+                        latency_ms=1e3 * (end_s - tr.start_s), error=error,
+                        deadline_miss=miss, ttft_ms=ttft_ms)
+        self.usage.ingest(plane=tr.plane, client=tr.client, version=version,
+                          error=error, counters=tr.counters)
+
+    def _slo_resolve(self, alias: str) -> Optional[str]:
+        """Version label currently serving ``alias`` (None when unknown)."""
+        if self.manager is not None:
+            label = self.manager.engine_version_label(alias)
+            if label is not None:
+                return label
+        if self.generation is not None:
+            try:
+                return self.generation.entry_for(alias).label
+            except GenerationError:
+                return None
+        return None
+
+    def _slo_promote(self, policy) -> Dict[str, Any]:
+        if self.manager is not None and \
+                self.manager.engine_version_label(policy.alias) is not None:
+            return self.manager.promote_engine(policy.alias,
+                                               to_alias=policy.promote_to)
+        if self.generation is None:
+            raise GenerationError("no generation service to actuate")
+        return self.generation.repoint(policy.alias, policy.promote_to)
+
+    def _slo_rollback(self, policy) -> Dict[str, Any]:
+        if self.manager is not None and \
+                self.manager.engine_version_label(policy.promote_to) \
+                is not None:
+            return self.manager.demote_engine(policy.alias,
+                                              to_alias=policy.promote_to)
+        if self.generation is None:
+            raise GenerationError("no generation service to actuate")
+        return self.generation.repoint(policy.promote_to, policy.alias)
 
     # --- readiness ------------------------------------------------------------
 
@@ -216,7 +301,11 @@ class FlexServeApp:
         if method == "GET" and path.startswith("/v1/trace/"):
             return self._trace_lookup(path[len("/v1/trace/"):])
         if method == "GET" and path == "/v1/traces":
-            return self._traces_index()
+            return self._traces_index(query)
+        if method == "GET" and path == "/v1/usage":
+            return self._usage(query)
+        if method == "GET" and path == "/v1/slo":
+            return self._slo_status(query)
         if path == "/v1/debug/profile":
             return self._profile_admin(method, body)
         if method == "GET" and path == "/v1/models":
@@ -296,12 +385,53 @@ class FlexServeApp:
                      f"recorder, or never admitted)")
         return tr.snapshot()
 
-    def _traces_index(self) -> Dict[str, Any]:
+    def _traces_index(self,
+                      query: Optional[Dict[str, str]] = None
+                      ) -> Dict[str, Any]:
         if self.recorder is None:
             raise api.ApiError(404, "tracing is disabled on this endpoint")
+        query = query or {}
+        try:
+            limit = int(query.get("limit", 20))
+            min_ms = (float(query["min_duration_ms"])
+                      if "min_duration_ms" in query else None)
+            want_status = (int(query["status"]) if "status" in query
+                           else None)
+        except ValueError as e:
+            raise api.ApiError(400, f"bad traces filter: {e}") from None
+        if limit < 1:
+            raise api.ApiError(400, "'limit' must be an integer >= 1")
+        want_client = query.get("client")
+        filtered = (want_status is not None or want_client is not None
+                    or min_ms is not None)
+        # with filters active, scan the whole ring so matches older than
+        # the newest `limit` rows still surface
+        rows = self.recorder.recent(
+            n=self.recorder.capacity if filtered else limit)
+        if want_status is not None:
+            rows = [r for r in rows if r["status"] == want_status]
+        if want_client is not None:
+            rows = [r for r in rows if r["client"] == want_client]
+        if min_ms is not None:
+            rows = [r for r in rows if r["duration_ms"] >= min_ms]
         return {"telemetry": self.recorder.stats(),
                 "in_flight": self.recorder.in_flight(),
-                "recent": self.recorder.recent()}
+                "recent": rows[:limit]}
+
+    def _usage(self, query: Dict[str, str]) -> Dict[str, Any]:
+        return self.usage.snapshot(client=query.get("client"),
+                                   version=query.get("version"))
+
+    def _slo_status(self, query: Dict[str, str]) -> Dict[str, Any]:
+        try:
+            window_s = float(query.get("window_s", 60.0))
+        except ValueError as e:
+            raise api.ApiError(400, f"bad slo query: {e}") from None
+        if self.slo is not None:
+            return {"enabled": True,
+                    **self.slo.status(window_s=window_s)}
+        return {"enabled": False, **dict(ZERO_SLO), "policies": [],
+                "decisions": [], "sli": self.sli.snapshot(window_s)}
 
     def _profile_admin(self, method: str, body: bytes) -> Dict[str, Any]:
         if self.profiler is None:
@@ -373,6 +503,11 @@ class FlexServeApp:
         if self.generation is not None:
             out["generate"] = self.generation.stats()
         out["admission"] = self.admission.stats()
+        # always present (zeroed with tracing off) so the /metrics schema
+        # — and the Prometheus exposition — is stable across configs
+        out["usage"] = self.usage.totals()
+        out["slo"] = (self.slo.stats() if self.slo is not None
+                      else dict(ZERO_SLO))
         if self.recorder is not None:
             out["telemetry"] = self.recorder.stats()
         if fmt == "prometheus":

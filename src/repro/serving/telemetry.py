@@ -95,8 +95,8 @@ class Trace:
 
     __slots__ = ("trace_id", "plane", "client", "priority", "start_s",
                  "start_unix", "end_s", "status", "finish_reason", "error",
-                 "spans", "events", "counters", "_recorder", "_lock",
-                 "streaming")
+                 "spans", "events", "counters", "attrs", "_recorder",
+                 "_lock", "streaming")
 
     def __init__(self, trace_id: str, plane: str,
                  client: Optional[str] = None, priority: str = "interactive",
@@ -115,6 +115,7 @@ class Trace:
         self.spans: List[Dict[str, Any]] = []
         self.events: List[Dict[str, Any]] = []
         self.counters: Dict[str, float] = {}
+        self.attrs: Dict[str, Any] = {}
         self._recorder = recorder
         self._lock = threading.Lock()
         self.streaming = False
@@ -144,6 +145,11 @@ class Trace:
         """Add to an aggregate counter (per-tick decode accounting etc.)."""
         c = self.counters
         c[name] = c.get(name, 0.0) + value
+
+    def annotate(self, key: str, value: Any) -> None:
+        """Attach an identity attribute (model version, engine alias)
+        consumed by the SLI/usage aggregators at trace-seal time."""
+        self.attrs[key] = value
 
     # -- completion --------------------------------------------------------
 
@@ -203,6 +209,8 @@ class Trace:
             ],
             "counters": {k: round(v, 3) for k, v in self.counters.items()},
         }
+        if self.attrs:
+            out["attrs"] = dict(self.attrs)
         out["duration_ms"] = round(out["duration_ms"], 3)
         return out
 
@@ -239,7 +247,8 @@ class FlightRecorder:
 
     def __init__(self, capacity: int = 256,
                  log_fn: Optional[Callable[[str], None]] = None,
-                 max_in_flight: Optional[int] = None):
+                 max_in_flight: Optional[int] = None,
+                 on_complete: Optional[Callable[[Trace], None]] = None):
         if capacity < 1:
             raise ValueError("flight recorder capacity must be >= 1")
         self.capacity = capacity
@@ -250,6 +259,9 @@ class FlightRecorder:
         self._max_in_flight = max_in_flight or max(4 * capacity, 1024)
         self._lock = threading.Lock()
         self._log_fn = log_fn
+        # sealed-trace tap: the SLI/usage aggregators subscribe here so
+        # they see exactly the stream the recorder sees
+        self.on_complete = on_complete
         self._completed_total = 0
         self._leaked_total = 0
 
@@ -282,6 +294,12 @@ class FlightRecorder:
                 logger.info("%s", tr.log_line())
         except Exception:
             pass   # telemetry must never take down the request path
+        hook = self.on_complete
+        if hook is not None:
+            try:
+                hook(tr)
+            except Exception:
+                pass   # aggregation errors must not reach the request path
 
     # -- queries -----------------------------------------------------------
 
@@ -303,9 +321,12 @@ class FlightRecorder:
         with self._lock:
             ring = list(self._ring)[-n:]
         return [{"trace_id": t.trace_id, "plane": t.plane,
-                 "status": t.status, "finish_reason": t.finish_reason,
+                 "client": t.client, "status": t.status,
+                 "finish_reason": t.finish_reason,
                  "duration_ms": round(((t.end_s or t.start_s) - t.start_s)
-                                      * 1000.0, 3)}
+                                      * 1000.0, 3),
+                 **({"version": t.attrs["version"]}
+                    if "version" in t.attrs else {})}
                 for t in reversed(ring)]
 
     def stats(self) -> Dict[str, Any]:

@@ -24,7 +24,7 @@ HIST_KEYS = {"le", "counts", "count", "sum"}
 # documented top-level /metrics sections (api.py docstring): the schema-
 # stability contract — present at boot, present under traffic
 SECTIONS = ("uptime_s", "requests", "routes", "coalesce", "lifecycle",
-            "generate", "admission", "telemetry")
+            "generate", "admission", "usage", "slo", "telemetry")
 
 
 def _build_app(tmpdir=None, **kw):
@@ -149,6 +149,17 @@ def test_metrics_schema_zero_at_boot():
         assert gen["pager"]["oom_events"] == 0
         t = m["telemetry"]
         assert t["completed_total"] == 0 and t["in_flight"] == 0
+        # PR 8: usage + slo sections are schema-stable too — present and
+        # zeroed even with no SLO policies configured
+        u = m["usage"]
+        for uk in ("requests", "errors", "prefill_tokens", "decode_tokens",
+                   "device_ms", "decode_host_ms"):
+            assert u[uk] == 0, uk
+        assert u["clients"] == 0 and u["versions"] == 0
+        s = m["slo"]
+        assert s["policies"] == 0
+        assert s["promotions"] == 0 and s["rollbacks"] == 0
+        assert s["breaches"] == 0 and s["evaluations"] == 0
         assert m["uptime_s"] >= 0.0
     finally:
         app.close()
@@ -196,11 +207,13 @@ def test_prometheus_exposition_roundtrip(client):
     text = client.metrics(format="prometheus")
     assert isinstance(text, str)
     samples, types = _parse_prometheus(text)
-    # all five stats sections are scrapeable
+    # every stats section is scrapeable
     for section in ("admission", "coalesce", "generate", "lifecycle",
-                    "telemetry"):
+                    "usage", "slo", "telemetry"):
         assert any(n.startswith(f"flexserve_{section}_")
                    for n in samples), f"no {section} samples"
+    # PR 8 cost accounting reaches the scrape path
+    assert samples["flexserve_usage_requests"][0][1] >= 1
     assert any(n.startswith("flexserve_generate_pager_") for n in samples)
     # histogram families: cumulative buckets, +Inf == count
     hist = "flexserve_generate_request_latency_ms_hist"
