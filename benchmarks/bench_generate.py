@@ -9,7 +9,12 @@ transfer encoding, per-request sampling, slot admission under concurrency
 — and reports what a caller actually feels:
 
   gen_stream_c{N}  — aggregate tokens/s, streams/s, ttft p50/p95 ms,
-                     inter-token p50/p95 ms at N concurrent clients.
+                     inter-token p50/p95 ms at N concurrent clients,
+                     plus the speculation summary rolled up from each
+                     stream's done event (proposed / accepted /
+                     acceptance_rate — zeros on a plain engine; pass
+                     ``--speculative`` to serve from a draft+target
+                     pair and exercise the acceptance path).
 
 ``--scenario trace_overhead`` measures the cost of the telemetry
 subsystem itself: identical open-loop rounds against ONE endpoint whose
@@ -38,7 +43,7 @@ import jax
 
 from benchmarks.common import emit, write_artifact, write_junit
 from repro.configs import get_config, reduce_for_smoke
-from repro.core import InferenceEngine
+from repro.core import InferenceEngine, SpeculativeEngine
 from repro.core.scheduler import pctl
 from repro.models import build_model
 from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
@@ -54,21 +59,43 @@ def _check(name: str, ok: bool, detail: str) -> None:
         raise RuntimeError(f"bench_generate self-check {name}: {detail}")
 
 
-def _build_engine(max_len: int = 64, max_batch: int = 8) -> InferenceEngine:
+def _build_engine(max_len: int = 64, max_batch: int = 8,
+                  speculative: bool = False) -> InferenceEngine:
     cfg = reduce_for_smoke(get_config("yi-9b"))
     cfg = dataclasses.replace(cfg, num_layers=4, d_model=64, num_heads=2,
                               head_dim=32, num_kv_heads=2, d_ff=128)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    return InferenceEngine(model, params, max_len=max_len,
-                           max_batch=max_batch)
+    target = InferenceEngine(model, params, max_len=max_len,
+                             max_batch=max_batch)
+    if not speculative:
+        return target
+    # acceptance-friendly pair (see bench_scheduler._spec_pair): zero
+    # the upper layers' output projections so the target equals its own
+    # 1-layer truncation, served as the draft
+    params["layers"]["attn"]["wo"] = \
+        params["layers"]["attn"]["wo"].at[1:].set(0.0)
+    params["layers"]["mlp"]["w_down"] = \
+        params["layers"]["mlp"]["w_down"].at[1:].set(0.0)
+    dcfg = dataclasses.replace(cfg, num_layers=1)
+    dmodel = build_model(dcfg)
+    dparams = {"embed": params["embed"],
+               "final_norm": params["final_norm"], "head": params["head"],
+               "layers": jax.tree_util.tree_map(lambda x: x[:1],
+                                                params["layers"])}
+    return SpeculativeEngine(
+        InferenceEngine(model, params, max_len=max_len,
+                        max_batch=max_batch),
+        InferenceEngine(dmodel, dparams, max_len=max_len,
+                        max_batch=max_batch),
+        max_window=4)
 
 
 def _stream_round(host: str, port: int, clients: int, per_client: int,
-                  max_new_tokens: int):
+                  max_new_tokens: int, temperature: float = 0.7):
     """Open loop: every client streams request after request; returns
     (elapsed_s, tokens_total, ttfts, gaps, failures, shed, rejected,
-    evicted).
+    evicted, (spec_proposed, spec_accepted)).
 
     Shed (429) and deadline-rejected (504, never admitted) streams are
     counted SEPARATELY from failures — they are the endpoint doing its
@@ -81,6 +108,7 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
     failures: List[str] = []
     shed, rejected, evicted = [0], [0], [0]
     tokens_total = [0]
+    spec = [0, 0]                    # proposed, accepted (done summaries)
 
     def one_client(cid: int) -> None:
         cl = FlexServeClient(host, port, retries=0)   # observe every shed
@@ -92,7 +120,7 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
                     events = cl.generate_stream(
                         [1 + cid, 2 + i, 3],
                         max_new_tokens=max_new_tokens,
-                        temperature=0.7, seed=1000 * cid + i)
+                        temperature=temperature, seed=1000 * cid + i)
                 except HTTPStatusError as e:
                     if e.status == 429:
                         shed[0] += 1                 # += int: GIL-safe
@@ -112,12 +140,16 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
                         tokens_total[0] += 1
                     elif ev["event"] == "error":
                         failures.append(ev["error"])
-                    elif ev.get("finish_reason") == "deadline":
-                        evicted[0] += 1              # admitted, then cut
-                    elif ev["token_count"] != max_new_tokens:
-                        failures.append(
-                            f"truncated stream: {ev['token_count']} "
-                            f"of {max_new_tokens} tokens")
+                    else:                            # terminal "done" event
+                        sp = ev.get("speculation") or {}
+                        spec[0] += sp.get("proposed", 0)
+                        spec[1] += sp.get("accepted", 0)
+                        if ev.get("finish_reason") == "deadline":
+                            evicted[0] += 1          # admitted, then cut
+                        elif ev["token_count"] != max_new_tokens:
+                            failures.append(
+                                f"truncated stream: {ev['token_count']} "
+                                f"of {max_new_tokens} tokens")
         finally:
             cl.close()
 
@@ -126,12 +158,13 @@ def _stream_round(host: str, port: int, clients: int, per_client: int,
         for f in [ex.submit(one_client, c) for c in range(clients)]:
             f.result()
     return (time.perf_counter() - t0, tokens_total[0], ttfts, gaps,
-            failures, shed[0], rejected[0], evicted[0])
+            failures, shed[0], rejected[0], evicted[0],
+            (spec[0], spec[1]))
 
 
 def run(clients: int = 4, per_client: int = 6,
-        max_new_tokens: int = 16) -> None:
-    engine = _build_engine()
+        max_new_tokens: int = 16, speculative: bool = False) -> None:
+    engine = _build_engine(speculative=speculative)
     app = FlexServeApp(engine=engine, num_slots=4)
     # pre-compile the decode data path (fused step, batched-prefill group
     # buckets, slot scatter) so no measured stream pays compile latency
@@ -139,11 +172,16 @@ def run(clients: int = 4, per_client: int = 6,
     srv = FlexServeServer(app).start()
     host, port = srv.address
     try:
+        # seeded-greedy streams on the speculative pair: the draft
+        # proposes argmax tokens, so greedy requests sit at the
+        # acceptance ceiling while sampled ones would drive adaptive-k
+        # straight to its non-speculative floor
+        temp = 0.0 if speculative else 0.7
         # one warm round covers the HTTP path at measurement concurrency
-        _stream_round(host, port, clients, 1, max_new_tokens)
-        (dt, tokens, ttfts, gaps, failures, shed, rejected,
-         evicted) = _stream_round(host, port, clients, per_client,
-                                  max_new_tokens)
+        _stream_round(host, port, clients, 1, max_new_tokens, temp)
+        (dt, tokens, ttfts, gaps, failures, shed, rejected, evicted,
+         (proposed, accepted)) = _stream_round(
+             host, port, clients, per_client, max_new_tokens, temp)
         if failures:
             raise RuntimeError(f"{len(failures)} failed streams: "
                                f"{failures[:3]}")
@@ -159,7 +197,14 @@ def run(clients: int = 4, per_client: int = 6,
              f"ttft_p50_ms={1e3 * pctl(ttfts, 0.5):.1f} "
              f"ttft_p95_ms={1e3 * pctl(ttfts, 0.95):.1f} "
              f"itl_p50_ms={1e3 * pctl(gaps, 0.5):.2f} "
-             f"itl_p95_ms={1e3 * pctl(gaps, 0.95):.2f}")
+             f"itl_p95_ms={1e3 * pctl(gaps, 0.95):.2f} "
+             f"spec_proposed={proposed} spec_accepted={accepted} "
+             f"acceptance_rate="
+             f"{accepted / proposed if proposed else 0.0:.3f}")
+        if speculative:
+            _check("speculative_stream_acceptance_reported", proposed > 0,
+                   "speculative engine served the round but no done event "
+                   "carried a speculation summary")
         # server-side decode-tick breakdown (device-resident data path):
         # host vs device ms per tick and the device->host bytes per tick
         # on the sampling path — num_slots int32s, never the logits
@@ -279,7 +324,7 @@ def run_trace_overhead(max_new_tokens: int = 16, rounds: int = 6) -> None:
             order = (True, False) if r % 2 == 0 else (False, True)
             for traced in order:
                 app.recorder = recorder if traced else None
-                (dt, tokens, _, _, failures, _, _, _) = _stream_round(
+                (dt, tokens, _, _, failures, _, _, _, _) = _stream_round(
                     host, port, clients, per_client, max_new_tokens)
                 if failures:
                     raise RuntimeError(f"{len(failures)} failed streams: "
@@ -348,6 +393,9 @@ def main(argv=None) -> int:
     ap.add_argument("--clients", type=int, default=4)
     ap.add_argument("--per-client", type=int, default=6)
     ap.add_argument("--max-new-tokens", type=int, default=16)
+    ap.add_argument("--speculative", action="store_true",
+                    help="serve the stream scenario from a draft+target "
+                         "speculative pair and report acceptance")
     ap.add_argument("--rounds", type=int, default=6,
                     help="interleaved rounds per side (trace_overhead)")
     ap.add_argument("--junit", default=None, metavar="PATH",
@@ -359,7 +407,8 @@ def main(argv=None) -> int:
     try:
         if args.scenario in ("stream", "all"):
             run(clients=args.clients, per_client=args.per_client,
-                max_new_tokens=args.max_new_tokens)
+                max_new_tokens=args.max_new_tokens,
+                speculative=args.speculative)
         if args.scenario in ("trace_overhead", "all"):
             run_trace_overhead(max_new_tokens=args.max_new_tokens,
                                rounds=args.rounds)

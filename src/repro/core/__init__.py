@@ -1,6 +1,6 @@
 from repro.core.batching import BucketSpec, FlexibleBatcher, pad_sequences
 from repro.core.engine import (InferenceEngine, PagedInferenceEngine,
-                               page_kv_bytes)
+                               SpeculativeEngine, page_kv_bytes)
 from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.kv_pager import (BlockAllocator, KVPager, PagerOOM,
                                  PrefixCache, pages_for_budget)

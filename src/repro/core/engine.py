@@ -418,6 +418,314 @@ class PagedInferenceEngine(InferenceEngine):
             "ContinuousBatchingScheduler / SchedulerService")
 
 
+class SpeculativeEngine(InferenceEngine):
+    """Draft-propose / target-verify pair behind the one-engine contract.
+
+    Wraps a TARGET engine (whose streams are the product) and a smaller
+    DRAFT engine of the same family.  Per speculative tick, a jitted
+    per-window-size program:
+
+      1. scans the draft W steps (greedy argmax proposals — the draft's
+         KV advances through the window, its last sample is discarded),
+      2. runs the target's verify forward over the W-token window in ONE
+         batched pass (KV for every window position committed in place),
+      3. accepts/rejects ON DEVICE via exact-match against the
+         sequential draws (``speculative_accept``, PR 5 fold_in RNG) —
+         rejected positions roll back as a pure length update,
+
+    and returns (draws, counts, next_token, state, ctr+counts): only
+    token ids and per-slot accepted counts ever cross to host.  Seeded
+    streams are byte-identical to non-speculative decoding by
+    construction (greedy exact, sampled draw-for-draw).
+
+    The combined decode state nests both engines' caches under one
+    shared ``length`` (and, when paged, ONE shared ``page_table`` —
+    draft and target pools are indexed by the same pages, so prefix
+    sharing, park-pinning and rollback cover the pair for free; the
+    draft pool is physically smaller via its fewer layers/heads).
+
+    ``decode_sample`` (the non-speculative tick, also the adaptive-k
+    level-1 backoff) reuses the TARGET's fused decode program on a view
+    of the combined state — no extra compiled step, so mixed
+    speculative/non-speculative traffic keeps ``compiled_steps`` flat.
+    Level-1 ticks skip the draft entirely; its KV goes stale for those
+    positions, which can only lower acceptance (never correctness) until
+    the slot turns over.
+
+    Constraints: dense GQA transformer family, no sliding window (the
+    verify window's multi-position writes don't compose with ring
+    caches), draft/target share vocab, max_len and — when paged — page
+    geometry.
+    """
+
+    def __init__(self, target: InferenceEngine, draft: InferenceEngine, *,
+                 max_window: int = 4):
+        # NOTE: deliberately no super().__init__ — the pair's jitted
+        # programs are the sub-engines' plus the per-level spec steps.
+        tcfg = target.model.config
+        dcfg = draft.model.config
+        for name, cfg, eng in (("target", tcfg, target),
+                               ("draft", dcfg, draft)):
+            if cfg.family != "dense" or cfg.attn_kind != "gqa":
+                raise ValueError(
+                    f"speculative {name} must be a dense GQA transformer, "
+                    f"got {cfg.family}/{cfg.attn_kind}")
+            if cfg.sliding_window is not None or eng.window is not None:
+                raise ValueError(
+                    f"speculative {name} cannot use a sliding window")
+        if tcfg.vocab_size != dcfg.vocab_size:
+            raise ValueError(
+                f"draft vocab {dcfg.vocab_size} != target vocab "
+                f"{tcfg.vocab_size}")
+        if target.max_len != draft.max_len:
+            raise ValueError(
+                f"draft max_len {draft.max_len} != target {target.max_len}")
+        self.paged = bool(getattr(target, "paged", False))
+        if self.paged != bool(getattr(draft, "paged", False)):
+            raise ValueError("draft and target must both be paged or dense")
+        if self.paged:
+            for attr in ("page_size", "num_pages", "max_pages_per_seq"):
+                if getattr(target, attr) != getattr(draft, attr):
+                    raise ValueError(
+                        f"draft {attr} {getattr(draft, attr)} != target "
+                        f"{getattr(target, attr)} (the pair shares one "
+                        f"page table)")
+            self.page_size = target.page_size
+            self.max_pages_per_seq = target.max_pages_per_seq
+            self.num_pages = target.num_pages
+            # admission cost of a page now covers both pools
+            self.page_bytes = target.page_bytes + draft.page_bytes
+            self.ctx_buckets = target.ctx_buckets
+        if max_window < 2:
+            raise ValueError(f"max_window must be >= 2, got {max_window}")
+        self.target = target
+        self.draft = draft
+        self.model = target.model
+        self.params = target.params
+        self.max_len = target.max_len
+        self.window = None
+        self.batch_buckets = target.batch_buckets
+        self.seq_buckets = target.seq_buckets
+        self.prefill_calls = 0
+        self.decode_calls = 0
+        self._sample = target._sample
+        self._state_axes = None
+        self._insert_rows = None
+        self.speculative = True
+        # adaptive-k ladder: 1 (plain target tick) then powers of two
+        self.spec_levels = [1]
+        w = 2
+        while w <= max_window:
+            self.spec_levels.append(w)
+            w *= 2
+        self.max_window = self.spec_levels[-1]
+        self._spec_steps: Dict[int, Any] = {}
+        # draft/verify device-ms split estimate for telemetry: per-token
+        # work is roughly proportional to parameter bytes streamed
+        t_bytes = _param_bytes(target.params)
+        d_bytes = _param_bytes(draft.params)
+        self.draft_share = d_bytes / max(t_bytes + d_bytes, 1)
+
+    # --- combined-state plumbing ---------------------------------------------
+
+    @property
+    def _shared_keys(self):
+        return ("length", "page_table") if self.paged else ("length",)
+
+    def _view(self, state, which: str):
+        return {**state[which],
+                **{k: state[k] for k in self._shared_keys}}
+
+    def _caches(self, view):
+        return {k: v for k, v in view.items() if k not in self._shared_keys}
+
+    def _combine(self, tview, dview):
+        out = {"target": self._caches(tview),
+               "draft": self._caches(dview)}
+        for k in self._shared_keys:
+            out[k] = tview[k]
+        return out
+
+    def new_state(self, batch: int):
+        t = self.target.new_state(batch)
+        d = self.draft.new_state(batch)
+        return self._combine(t, d)
+
+    def state_batch_axes(self):
+        if self._state_axes is None:
+            s2 = jax.eval_shape(lambda: self.new_state(2))
+            s3 = jax.eval_shape(lambda: self.new_state(3))
+            self._state_axes = jax.tree_util.tree_map(
+                lambda a, b: next(
+                    (i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y), None),
+                s2, s3)
+        return self._state_axes
+
+    # --- prefill / decode ----------------------------------------------------
+
+    def prefill(self, batch: Dict[str, Any], state):
+        """Both halves of the pair prefill (the draft must see the prompt
+        to propose); the TARGET's first-token logits are the product."""
+        self.prefill_calls += 1
+        logits, new_t = self.target.prefill(batch, self._view(state,
+                                                              "target"))
+        _, new_d = self.draft.prefill(batch, self._view(state, "draft"))
+        return logits, self._combine(new_t, new_d)
+
+    def paged_prefill(self, state, tokens, lengths, ctx_table, ctx_lens,
+                      dest_table):
+        """Paged pair prefill: the draft runs first and its pass-through
+        length/page_table arrays re-seed the target's view (each paged
+        prefill donates its state, so the shared arrays must be re-taken
+        from the returned state between the two calls)."""
+        self.prefill_calls += 1
+        _, new_d = self.draft.paged_prefill(
+            self._view(state, "draft"), tokens, lengths, ctx_table,
+            ctx_lens, dest_table)
+        tview = {**state["target"], "length": new_d["length"],
+                 "page_table": new_d["page_table"]}
+        logits, new_t = self.target.paged_prefill(
+            tview, tokens, lengths, ctx_table, ctx_lens, dest_table)
+        return logits, self._combine(new_t, new_d)
+
+    def decode(self, token, state):
+        self.decode_calls += 1
+        logits, new_t = self.target.decode(token, self._view(state,
+                                                             "target"))
+        return logits, self._combine(new_t,
+                                     self._view_stale_draft(state, new_t))
+
+    def _view_stale_draft(self, state, new_tview):
+        # level-1 / plain ticks advance only the target; the draft keeps
+        # its (now stale) caches and follows the shared length
+        return {**state["draft"],
+                **{k: new_tview[k] for k in self._shared_keys}}
+
+    def decode_sample(self, token, state, samp: Dict[str, Any], ctr):
+        """Non-speculative tick on the pair: the TARGET's own fused
+        decode-sample program over a view of the combined state — level-1
+        backoff compiles nothing new."""
+        self.decode_calls += 1
+        with _annotate("flexserve.decode_sample"):
+            toks, new_t, ctr2 = self.target._decode_sample(
+                self.target.params, token, self._view(state, "target"),
+                samp["temperature"], samp["top_k"], samp["top_p"],
+                samp["key"], ctr)
+        return toks, self._combine(new_t,
+                                   self._view_stale_draft(state, new_t)), \
+            ctr2
+
+    # --- the speculative tick ------------------------------------------------
+
+    def speculative_step(self, w: int, token, state, samp: Dict[str, Any],
+                         ctr, spec_on):
+        """One draft-propose + verify + accept tick at window size ``w``
+        (a spec level >= 2).  Returns ``(draws (B, w), counts (B),
+        next_token (B), new_state, ctr + counts)`` — row b emitted
+        ``draws[b, :counts[b]]``; rows with ``spec_on[b]`` False advance
+        exactly one (sequential-identical) token."""
+        self.decode_calls += 1
+        fn = self._spec_steps.get(w)
+        if fn is None:
+            fn = self._spec_steps[w] = self._build_spec_step(w)
+        with _annotate("flexserve.speculative_step"):
+            return fn(self.target.params, self.draft.params, state, token,
+                      samp["temperature"], samp["top_k"], samp["top_p"],
+                      samp["key"], ctr, spec_on)
+
+    def _build_spec_step(self, W: int):
+        from repro.core.sampling import speculative_accept
+        from repro.models.paged import paged_decode_step, paged_verify_step
+        from repro.models.transformer import verify_decode_step
+        target, draft, paged = self.target, self.draft, self.paged
+        tcfg = target.model.config
+        dcfg = draft.model.config
+        shared_keys = self._shared_keys
+        if paged:
+            ps = self.page_size
+
+            def d_decode(p, tok, s):
+                return paged_decode_step(p, tok, s, dcfg, page_size=ps)
+
+            def t_verify(p, toks, s):
+                return paged_verify_step(p, toks, s, tcfg, page_size=ps)
+        else:
+            def d_decode(p, tok, s):
+                return draft.model.decode(p, tok, s)
+
+            def t_verify(p, toks, s):
+                return verify_decode_step(p, toks, s, tcfg)
+
+        def spec_step(tp, dp, state, token, temp, top_k, top_p, key, ctr,
+                      spec_on):
+            shared = {k: state[k] for k in shared_keys}
+            dview = {**state["draft"], **shared}
+
+            # draft scan: W greedy proposals from the last emitted token.
+            # All W iterations WRITE draft KV (the final sample is
+            # discarded), so a fully-accepted window leaves the draft
+            # cache sequentially exact for the next tick.
+            def draft_iter(carry, _):
+                tok, dv = carry
+                logits, dv = d_decode(dp, tok, dv)
+                nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+                return (nxt, dv), nxt
+
+            (_, dview), props = jax.lax.scan(draft_iter, (token, dview),
+                                             None, length=W)
+            drafts = props[:W - 1].T                        # (B, W-1)
+            window_toks = jnp.concatenate(
+                [token[:, None], drafts], axis=1)           # (B, W)
+            tview = {**state["target"], **shared}
+            vlogits, tview = t_verify(tp, window_toks, tview)
+            draws, counts = speculative_accept(
+                vlogits, drafts, temp, top_k, top_p, key, ctr)
+            counts = jnp.where(spec_on, counts, 1)
+            rows = jnp.arange(token.shape[0])
+            next_tok = draws[rows, counts - 1]
+            new_state = {"target": {k: v for k, v in tview.items()
+                                    if k not in shared_keys},
+                         "draft": {k: v for k, v in dview.items()
+                                   if k not in shared_keys},
+                         "length": state["length"] + counts}
+            if paged:
+                new_state["page_table"] = state["page_table"]
+            return draws, counts, next_tok, new_state, ctr + counts
+
+        return jax.jit(spec_step, donate_argnums=(2,))
+
+    # --- introspection --------------------------------------------------------
+
+    def decode_cache_size(self) -> Optional[int]:
+        """Total compiled decode-tick variants across the pair: the
+        target's fused step (also the level-1 path) plus one program per
+        speculative window size."""
+        total = 0
+        fns = [self.target._decode_sample] + list(self._spec_steps.values())
+        for fn in fns:
+            probe = getattr(fn, "_cache_size", None)
+            if not callable(probe):
+                return None
+            total += probe()
+        return total
+
+    def ctx_bucket_for(self, n_ctx_pages: int) -> int:
+        if n_ctx_pages == 0:
+            return 0
+        return self.ctx_buckets.bucket_for(n_ctx_pages)
+
+    def generate(self, *args, **kwargs):
+        raise NotImplementedError(
+            "SpeculativeEngine has no standalone generate(): drive it "
+            "through ContinuousBatchingScheduler / SchedulerService")
+
+
+def _param_bytes(params) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+               for x in jax.tree_util.tree_leaves(params))
+
+
 def page_kv_bytes(cfg, page_size: int) -> int:
     """HBM bytes one KV page costs across every layer (k and v)."""
     from repro.models.attention import cache_dtype

@@ -61,24 +61,43 @@ class SamplingParams:
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
     stop: Tuple[int, ...] = ()
+    speculation: bool = True            # per-request speculative-decode opt-out
+
+    def __post_init__(self):
+        # every construction path validates — a malformed request can't
+        # reach the scheduler and blow up as a 500 deep in a decode tick
+        self.validate()
 
     @property
     def greedy(self) -> bool:
         return self.temperature <= 0.0
 
     def validate(self) -> "SamplingParams":
-        if not np.isfinite(self.temperature) or self.temperature < 0:
+        try:
+            temp_ok = np.isfinite(self.temperature)
+        except TypeError:
+            temp_ok = False
+        if not temp_ok or self.temperature < 0:
             raise SamplingError(
                 f"'temperature' must be a finite float >= 0, "
                 f"got {self.temperature!r}")
-        if self.top_k < 0:
+        if not isinstance(self.top_k, (int, np.integer)) or self.top_k < 0:
             raise SamplingError(f"'top_k' must be >= 0, got {self.top_k!r}")
-        if not 0.0 < self.top_p <= 1.0:
+        try:
+            top_p_ok = 0.0 < self.top_p <= 1.0
+        except TypeError:
+            top_p_ok = False
+        if not top_p_ok:
             raise SamplingError(
                 f"'top_p' must be in (0, 1], got {self.top_p!r}")
-        if self.max_new_tokens < 1:
+        if not isinstance(self.max_new_tokens, (int, np.integer)) \
+                or self.max_new_tokens < 1:
             raise SamplingError(
                 f"'max_new_tokens' must be >= 1, got {self.max_new_tokens!r}")
+        if not isinstance(self.stop, (list, tuple)) or not all(
+                isinstance(t, (int, np.integer)) for t in self.stop):
+            raise SamplingError("'stop' must be a list of token ids, "
+                                f"got {self.stop!r}")
         return self
 
     @classmethod
@@ -109,6 +128,10 @@ class SamplingParams:
         eos = req.get("eos_id")
         if eos is not None and not isinstance(eos, int):
             raise SamplingError(f"'eos_id' must be an integer, got {eos!r}")
+        speculation = req.get("speculation", True)
+        if not isinstance(speculation, bool):
+            raise SamplingError(
+                f"'speculation' must be a boolean, got {speculation!r}")
         return cls(
             temperature=_num("temperature", 0.0, float),
             top_k=_num("top_k", 0, int),
@@ -118,6 +141,7 @@ class SamplingParams:
                                 default_max_new_tokens, int),
             eos_id=eos,
             stop=tuple(stop),
+            speculation=speculation,
         ).validate()
 
     def for_row(self, row: int) -> "SamplingParams":
@@ -150,6 +174,8 @@ class SamplingParams:
             out["eos_id"] = self.eos_id
         if self.stop:
             out["stop"] = list(self.stop)
+        if not self.speculation:
+            out["speculation"] = False
         return out
 
 
@@ -311,3 +337,46 @@ def sample_tokens(logits, temperature, top_k, top_p, key, ctr):
         return jnp.where(greedy_rows, argmax, sampled.astype(jnp.int32))
 
     return jax.lax.cond(jnp.all(greedy_rows), lambda: argmax, stochastic)
+
+
+# --- speculative accept/reject ------------------------------------------------
+
+
+def speculative_accept(logits, drafts, temperature, top_k, top_p, key, ctr):
+    """Batched accept/reject over one verify window (runs inside the
+    jitted speculative step).
+
+    ``logits`` (B, W, V) are the target's verify-forward logits: row
+    ``[b, i]`` is the distribution for output token ``ctr[b] + i``
+    (exactly what the sequential decode loop would have produced at that
+    step, given the drafts matched so far).  ``drafts`` (B, W-1) are the
+    draft engine's proposals for output tokens ``ctr .. ctr+W-2``.
+
+    Acceptance is EXACT-MATCH against the sequential draw: every row's
+    token j is sampled with the PR 5 contract —
+    ``categorical(fold_in(key, ctr+j), filtered logits)`` — via ONE
+    flattened ``sample_tokens`` call (repeating a row's params W times
+    preserves the all-greedy / filters-off regime selection, so the
+    filtered logits and draws are bitwise those of the sequential path).
+    A draft survives iff it EQUALS that draw; the first mismatch's draw
+    doubles as the correction token (residual resample).  Emitted tokens
+    are therefore byte-identical to non-speculative decoding by
+    construction: greedy exact, sampled draw-for-draw.
+
+    Returns (draws (B, W) int32 — the sequential draws, of which each
+    row's first ``counts[b]`` are the emitted tokens — and counts (B,)
+    int32 in [1, W]).
+    """
+    B, W, V = logits.shape
+
+    def rep(a):
+        return jnp.repeat(a, W, axis=0)
+
+    ctr_flat = (ctr[:, None] + jnp.arange(W)[None, :]).reshape(-1)
+    draws = sample_tokens(logits.reshape(B * W, V), rep(temperature),
+                          rep(top_k), rep(top_p), rep(key),
+                          ctr_flat).reshape(B, W)
+    # leading run of draft==draw matches, +1 for the correction/bonus token
+    hits = (draws[:, :W - 1] == drafts).astype(jnp.int32)
+    counts = jnp.cumprod(hits, axis=1).sum(axis=1) + 1
+    return draws, counts.astype(jnp.int32)

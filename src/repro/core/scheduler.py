@@ -108,11 +108,16 @@ class Request:
     # taken at slot ATTACH; the delta against them at slot DETACH is the
     # request's decode accounting (see step()).  Keeps the per-tick trace
     # cost O(1) instead of O(slots).
-    share_mark: Optional[Tuple[int, float, float, float]] = None
+    share_mark: Optional[Tuple[int, float, float, float,
+                               float, float]] = None
     # paged engines only: the KV pages this request owns references to.
     # Pages stay pinned while the request parks, so resume is O(1)
     # (re-point the slot's page-table row, no recompute).
     pages: Optional[List[int]] = None
+    # speculative engines only: draft tokens proposed for / accepted by
+    # this request (the stream's end-of-stream acceptance summary)
+    spec_proposed: int = 0
+    spec_accepted: int = 0
 
     @property
     def priority(self) -> str:
@@ -150,6 +155,27 @@ ZERO_PAGER_STATS: Dict[str, Any] = {
     "resumes_without_recompute": 0, "preempt_recompute": 0,
     "prefill_tokens_forwarded": 0, "prefill_tokens_reused": 0,
 }
+
+# speculation stats schema, zeroed for plain engines (stable /metrics
+# "generate.speculation" section either way)
+ZERO_SPECULATION_STATS: Dict[str, Any] = {
+    "enabled": False, "max_window": 0, "window": 0,
+    "acceptance_ema": 0.0, "spec_ticks": 0, "proposed_tokens": 0,
+    "accepted_tokens": 0, "acceptance_rate": 0.0, "k_hist": {},
+    "draft_ms_total": 0.0, "verify_ms_total": 0.0,
+    "draft_share_estimate": 0.0,
+}
+
+# adaptive-k controller: acceptance EMA with hysteresis.  Below the low
+# water mark the window halves (down to level 1 = plain ticks); above
+# the high water mark it doubles back.  At level 1 a probe tick runs
+# every SPEC_PROBE_INTERVAL ticks so a workload that turns acceptance-
+# friendly again can climb out — between probes the tick stream is the
+# plain fused step, which is what bounds the adversarial case near 1x.
+SPEC_EMA_ALPHA = 0.2
+SPEC_LOW_WATER = 0.4
+SPEC_HIGH_WATER = 0.8
+SPEC_PROBE_INTERVAL = 64
 
 
 class ContinuousBatchingScheduler:
@@ -204,6 +230,27 @@ class ContinuousBatchingScheduler:
         # paged engine: host-side page bookkeeping.  The device only ever
         # sees the (num_slots, max_pages) int32 page table + per-slot
         # lengths, re-uploaded (~KB) only when a slot changes hands.
+        # speculative engine pair: per-slot opt-out mask + the adaptive-k
+        # controller (spec level index into engine.spec_levels; level 0 is
+        # the plain fused step).  Byte-identity does NOT depend on the
+        # controller: emitted tokens are always the sequential draws, so
+        # any level trajectory yields the same streams.
+        self.speculative = (bool(getattr(engine, "speculative", False))
+                            and device_sampling)
+        self._spec_on = np.zeros((num_slots,), bool)
+        self._spec_dev: Optional[Any] = None
+        if self.speculative:
+            self._spec_levels: List[int] = list(engine.spec_levels)
+            self._spec_level = len(self._spec_levels) - 1
+            self._accept_ema = 1.0
+            self._spec_probe = SPEC_PROBE_INTERVAL
+            self.spec_ticks = 0
+            self.spec_proposed_total = 0
+            self.spec_accepted_total = 0
+            self.spec_draft_ms_total = 0.0
+            self.spec_verify_ms_total = 0.0
+            self.spec_k_hist: Dict[int, int] = {
+                w: 0 for w in self._spec_levels}
         self.paged = bool(getattr(engine, "paged", False))
         if self.paged:
             self.pager = KVPager(engine.num_pages, engine.page_size)
@@ -238,6 +285,8 @@ class ContinuousBatchingScheduler:
         self._share_device_ms = 0.0
         self._share_host_ms = 0.0
         self._share_transfer = 0.0
+        self._share_draft_ms = 0.0       # speculative ticks only: the
+        self._share_verify_ms = 0.0      # device-ms draft/verify split
         # lifetime cost totals the per-request attributions must conserve
         # against (usage-ledger acceptance bar): decode device/host ms and
         # token counts sum here exactly as the per-trace bumps do
@@ -377,7 +426,9 @@ class ContinuousBatchingScheduler:
             return finished
         if self.paged:
             self._sync_paged_state()
+        spec_w = self._spec_window_for_tick()
         t_dev = time.perf_counter()
+        draws = counts = None
         if self.device_sampling:
             # fused decode + on-device sampling: ONLY the (num_slots,)
             # token-id vector crosses to host this tick.  Sampling params,
@@ -391,11 +442,26 @@ class ContinuousBatchingScheduler:
                     "key": jnp.asarray(self._keys)}
                 self._tok_dev = jnp.asarray(self._last_token)
                 self._ctr_dev = jnp.asarray(self._ctr)
-            tok_dev, self.state, ctr_dev = self.engine.decode_sample(
-                self._tok_dev, self.state, self._samp_dev, self._ctr_dev)
-            tokens = np.asarray(tok_dev)             # blocks: device sync
-            transfer = tokens.nbytes
-            host = greedy = None
+                self._spec_dev = jnp.asarray(self._spec_on)
+            if spec_w is not None:
+                # draft-propose + verify + accept in one device program:
+                # the host sees token ids and per-slot accepted counts —
+                # (num_slots, w) + (num_slots,) int32 — never logits
+                (draws_dev, counts_dev, tok_dev, self.state,
+                 ctr_dev) = self.engine.speculative_step(
+                    spec_w, self._tok_dev, self.state, self._samp_dev,
+                    self._ctr_dev, self._spec_dev)
+                draws = np.asarray(draws_dev)        # blocks: device sync
+                counts = np.asarray(counts_dev)
+                transfer = draws.nbytes + counts.nbytes
+                tokens = host = greedy = None
+            else:
+                tok_dev, self.state, ctr_dev = self.engine.decode_sample(
+                    self._tok_dev, self.state, self._samp_dev,
+                    self._ctr_dev)
+                tokens = np.asarray(tok_dev)         # blocks: device sync
+                transfer = tokens.nbytes
+                host = greedy = None
         else:
             token = jnp.asarray(self._last_token)
             # reference host path: full logits cross when any slot samples
@@ -414,6 +480,8 @@ class ContinuousBatchingScheduler:
         self.steps += 1
         self.decode_ticks += 1
         self.decode_transfer_bytes += transfer
+        if self.speculative:
+            self._spec_account(spec_w, counts, device_s)
         self._push(self.tick_transfer_window, transfer)
         # per-request decode accounting rides as counters, not spans: a
         # request may decode for thousands of ticks and a span per tick
@@ -426,31 +494,56 @@ class ContinuousBatchingScheduler:
         self._share_ticks += 1
         self._share_device_ms += 1e3 * device_s * inv
         self._share_transfer += transfer * inv
+        if spec_w is not None:
+            d_ms = 1e3 * device_s * self.engine.draft_share
+            self._share_draft_ms += d_ms * inv
+            self._share_verify_ms += (1e3 * device_s - d_ms) * inv
         self.decode_device_ms_total += 1e3 * device_s
         now = time.perf_counter()
         free_later: List[int] = []
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            if tokens is not None:
-                t = int(tokens[b])
+            if draws is not None:
+                # row b emitted its accepted window (the last entry is
+                # the verify forward's own draw: correction token on a
+                # rejection, bonus token on full acceptance)
+                emitted = [int(t) for t in draws[b, :counts[b]]]
+                if self._spec_on[b]:
+                    req.spec_proposed += spec_w - 1
+                    req.spec_accepted += int(counts[b]) - 1
+                    if req.trace is not None:
+                        req.trace.bump("spec_proposed", spec_w - 1)
+                        req.trace.bump("spec_accepted",
+                                       int(counts[b]) - 1)
+            elif tokens is not None:
+                emitted = [int(tokens[b])]
             else:
-                t = (int(greedy[b]) if host is None
-                     else req.sampler.sample(host[b]))
-            self._record_token(req, t, now)
-            reason = self._finish_reason(req, t)
-            if reason is not None:
-                self._finish(req, reason, now)
-                finished.append(req)
-                free_later.append(b)
-            else:
-                self._last_token[b] = t
+                emitted = [int(greedy[b]) if host is None
+                           else req.sampler.sample(host[b])]
+            reason = None
+            for t in emitted:
+                self._record_token(req, t, now)
+                reason = self._finish_reason(req, t)
+                if reason is not None:
+                    # mid-window finish: the device advanced the full
+                    # accepted count, but the slot frees below and the
+                    # next admission re-uploads state — the extra
+                    # positions are never attended
+                    self._finish(req, reason, now)
+                    finished.append(req)
+                    free_later.append(b)
+                    self._notify(req, t)
+                    break
+                self._notify(req, t)
+            if reason is None:
+                self._last_token[b] = emitted[-1]
                 self._ctr[b] = len(req.output)
                 if self.paged:
-                    # mirror the device's length += 1 for continuing rows
-                    # (no re-upload needed while nothing else changes)
-                    self._lengths[b] += 1
-            self._notify(req, t)
+                    # mirror the device's per-row length advance for
+                    # continuing rows (no re-upload needed while nothing
+                    # else changes)
+                    self._lengths[b] += len(emitted)
         if self.device_sampling and self._samp_dev is not None:
             # no slot changed hands: next tick's inputs never leave the
             # device (a finish this tick clears _samp_dev via the
@@ -684,6 +777,7 @@ class ContinuousBatchingScheduler:
                 self._top_ks[b] = p.top_k
                 self._top_ps[b] = p.top_p
                 self._keys[b] = req.base_key
+                self._spec_on[b] = p.speculation
                 self._samp_dev = None        # re-upload on the next tick
                 src_rows[b] = i
                 write_mask[b] = True
@@ -868,6 +962,7 @@ class ContinuousBatchingScheduler:
                 self._top_ks[b] = p.top_k
                 self._top_ps[b] = p.top_p
                 self._keys[b] = req.base_key
+                self._spec_on[b] = p.speculation
                 self._samp_dev = None
                 self._state_dirty = True
         for req in reqs:
@@ -892,6 +987,7 @@ class ContinuousBatchingScheduler:
         self._top_ks[b] = p.top_k
         self._top_ps[b] = p.top_p
         self._keys[b] = req.base_key
+        self._spec_on[b] = p.speculation
         self._samp_dev = None
         self._state_dirty = True
         self.resumes_fast += 1
@@ -900,31 +996,38 @@ class ContinuousBatchingScheduler:
                             pages=len(req.pages))
 
     def _ensure_decode_pages(self) -> None:
-        """Before a decode tick, make sure every active slot owns the page
-        its next token lands in; allocate one page on the boundary.  When
-        the pool is dry even after cache eviction, RECOMPUTE-preempt the
-        slot: release its pages and requeue it at the front (the O(1)
-        reattach path doesn't apply — its pages are gone)."""
+        """Before a decode tick, make sure every active slot owns the
+        pages its next tokens land in; allocate on the boundary.  A plain
+        tick writes one position; a speculative engine may commit up to
+        max_window positions per tick, so its slots keep the whole window
+        covered (clamped at the per-sequence table — positions past
+        max_len route to the dump page and the request finishes with
+        reason "length" before they could matter).  When the pool is dry
+        even after cache eviction, RECOMPUTE-preempt the slot: release
+        its pages and requeue it at the front (the O(1) reattach path
+        doesn't apply — its pages are gone)."""
         ps = self.engine.page_size
+        lookahead = (self.engine.max_window if self.speculative else 1)
         for b, req in enumerate(self.slots):
             if req is None:
                 continue
-            if self._lengths[b] // ps < len(req.pages):
-                continue
-            try:
-                pg = self.pager.alloc(1)
-            except PagerOOM:
-                self._release_pages(req)
-                self._free_slot(b)
-                self._queue_for(req).appendleft(req)
-                self.preempt_recompute += 1
-                if req.trace is not None:
-                    req.trace.event("preempt", req_id=req.req_id,
-                                    cause="pager_oom", recompute=True)
-                continue
-            req.pages.extend(pg)
-            self._table[b, len(req.pages) - 1] = pg[0]
-            self._state_dirty = True
+            need = min(int(self._lengths[b] + lookahead - 1) // ps + 1,
+                       self.engine.max_pages_per_seq)
+            while len(req.pages) < need:
+                try:
+                    pg = self.pager.alloc(1)
+                except PagerOOM:
+                    self._release_pages(req)
+                    self._free_slot(b)
+                    self._queue_for(req).appendleft(req)
+                    self.preempt_recompute += 1
+                    if req.trace is not None:
+                        req.trace.event("preempt", req_id=req.req_id,
+                                        cause="pager_oom", recompute=True)
+                    break
+                req.pages.extend(pg)
+                self._table[b, len(req.pages) - 1] = pg[0]
+                self._state_dirty = True
 
     def _sync_paged_state(self) -> None:
         """Upload the host page-table/length mirrors when dirty.  While no
@@ -951,6 +1054,76 @@ class ContinuousBatchingScheduler:
                 "prefill_tokens_forwarded": self.prefill_tokens_forwarded,
                 "prefill_tokens_reused": self.prefill_tokens_reused}
 
+    # --- speculative decoding ----------------------------------------------------
+
+    def _spec_window_for_tick(self) -> Optional[int]:
+        """Pick this tick's verify-window size, or None for a plain fused
+        tick.  Level 0 is the plain step with a periodic probe tick so the
+        controller can climb back when acceptance recovers."""
+        if not self.speculative:
+            return None
+        if not any(self._spec_on[b] and self.slots[b] is not None
+                   for b in range(self.num_slots)):
+            return None                  # every active slot opted out
+        if self._spec_level == 0:
+            self._spec_probe -= 1
+            if self._spec_probe > 0:
+                return None
+            self._spec_probe = SPEC_PROBE_INTERVAL
+            return self._spec_levels[1]
+        return self._spec_levels[self._spec_level]
+
+    def _spec_account(self, spec_w: Optional[int], counts: Optional[Any],
+                      device_s: float) -> None:
+        """Per-tick speculation bookkeeping + the adaptive-k update.  The
+        draft/verify device-ms split is an ESTIMATE (one fused program —
+        the split is prorated by the pair's parameter-byte ratio)."""
+        if spec_w is None:
+            self.spec_k_hist[1] += 1
+            return
+        self.spec_ticks += 1
+        self.spec_k_hist[spec_w] += 1
+        draft_ms = 1e3 * device_s * self.engine.draft_share
+        self.spec_draft_ms_total += draft_ms
+        self.spec_verify_ms_total += 1e3 * device_s - draft_ms
+        spec_rows = [b for b in range(self.num_slots)
+                     if self.slots[b] is not None and self._spec_on[b]]
+        n = len(spec_rows)
+        proposed = n * (spec_w - 1)
+        accepted = int(counts[spec_rows].sum()) - n
+        self.spec_proposed_total += proposed
+        self.spec_accepted_total += accepted
+        if proposed > 0:
+            rate = accepted / proposed
+            self._accept_ema += SPEC_EMA_ALPHA * (rate - self._accept_ema)
+            if self._accept_ema < SPEC_LOW_WATER and self._spec_level > 0:
+                self._spec_level -= 1
+                if self._spec_level == 0:
+                    self._spec_probe = SPEC_PROBE_INTERVAL
+            elif (self._accept_ema > SPEC_HIGH_WATER
+                  and self._spec_level < len(self._spec_levels) - 1):
+                self._spec_level += 1
+
+    def speculation_stats(self) -> Optional[Dict[str, Any]]:
+        if not self.speculative:
+            return None
+        proposed = self.spec_proposed_total
+        return {
+            "enabled": True,
+            "max_window": self.engine.max_window,
+            "window": self._spec_levels[self._spec_level],
+            "acceptance_ema": self._accept_ema,
+            "spec_ticks": self.spec_ticks,
+            "proposed_tokens": proposed,
+            "accepted_tokens": self.spec_accepted_total,
+            "acceptance_rate": (self.spec_accepted_total / proposed
+                                if proposed else 0.0),
+            "k_hist": {str(w): c for w, c in self.spec_k_hist.items()},
+            "draft_ms_total": self.spec_draft_ms_total,
+            "verify_ms_total": self.spec_verify_ms_total,
+            "draft_share_estimate": self.engine.draft_share,
+        }
+
     # --- internals -------------------------------------------------------------
 
     def _mark_share(self, req: Request) -> None:
@@ -959,7 +1132,8 @@ class ContinuousBatchingScheduler:
         them and the per-tick accumulation is the whole tracing-off cost."""
         if req.trace is not None:
             req.share_mark = (self._share_ticks, self._share_device_ms,
-                              self._share_host_ms, self._share_transfer)
+                              self._share_host_ms, self._share_transfer,
+                              self._share_draft_ms, self._share_verify_ms)
 
     def _flush_share(self, req: Request) -> None:
         """Slot DETACH hook: fold the attach→detach accumulator delta into
@@ -976,6 +1150,10 @@ class ContinuousBatchingScheduler:
             tr.bump("decode_device_ms", self._share_device_ms - m[1])
             tr.bump("decode_host_ms", self._share_host_ms - m[2])
             tr.bump("decode_transfer_bytes", self._share_transfer - m[3])
+            draft = self._share_draft_ms - m[4]
+            if draft:                    # speculative ticks in residency
+                tr.bump("decode_draft_ms", draft)
+                tr.bump("decode_verify_ms", self._share_verify_ms - m[5])
 
     def _free_slot(self, b: int) -> None:
         """Release slot ``b`` and reset its sampling-param row to greedy,
@@ -989,6 +1167,7 @@ class ContinuousBatchingScheduler:
         self._top_ks[b] = 0
         self._top_ps[b] = 1.0
         self._keys[b] = 0
+        self._spec_on[b] = False
         self._samp_dev = None
         if self.paged:
             # zero the table row so the vacant slot's decode-step writes
@@ -1299,6 +1478,28 @@ class SchedulerService:
                 for i in range(g):
                     tmp.submit([1 + (i % 7)] * probe_len, max_new_tokens=2)
                 tmp.run()
+        e = s.engine
+        if getattr(e, "speculative", False) and s.device_sampling:
+            # compile EVERY speculative window size (draft scan + verify
+            # forward + accept kernel are one program per level) on a
+            # throwaway state, so the adaptive-k controller can move
+            # between levels mid-traffic without a compile stall
+            st = e.new_state(s.num_slots)
+            samp = {"temperature": jnp.zeros((s.num_slots,), jnp.float32),
+                    "top_k": jnp.zeros((s.num_slots,), jnp.int32),
+                    "top_p": jnp.ones((s.num_slots,), jnp.float32),
+                    "key": jnp.zeros((s.num_slots, 2), jnp.uint32)}
+            tok = jnp.zeros((s.num_slots,), jnp.int32)
+            ctr = jnp.zeros((s.num_slots,), jnp.int32)
+            on = jnp.ones((s.num_slots,), bool)
+            for w in e.spec_levels[1:]:
+                _, _, tok, st, ctr = e.speculative_step(w, tok, st, samp,
+                                                        ctr, on)
+            # the PLAIN one-token step too: opted-out requests (and the
+            # level-0 backoff) ride the target's fused decode_sample
+            tok, st, ctr = e.decode_sample(tok, st, samp, ctr)
+            jax.block_until_ready(tok)
+            del st
         return time.perf_counter() - t0
 
     @property
@@ -1378,6 +1579,8 @@ class SchedulerService:
             return {
                 "decode": decode,
                 "pager": s.pager_stats() or dict(ZERO_PAGER_STATS),
+                "speculation": (s.speculation_stats()
+                                or dict(ZERO_SPECULATION_STATS)),
                 "steps": s.steps, "active_slots": s.active,
                 "pending": s.pending,
                 "pending_high_water": s.pending_high_water,

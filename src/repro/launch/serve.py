@@ -18,13 +18,14 @@ swaps under traffic.  /v1/generate supports token streaming
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 
 import jax
 
 from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
 from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
-                        ModelRegistry)
+                        ModelRegistry, SpeculativeEngine)
 from repro.models.build import build_model
 from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
                            ModelStore)
@@ -37,7 +38,8 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               default_deadline_ms=None, trace: bool = True,
               flight_recorder_size: int = 256,
               profile_dir=None, slo_config=None,
-              client_weights=None) -> FlexServeApp:
+              client_weights=None, draft_model=None,
+              draft_layers=None, spec_window: int = 4) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -59,6 +61,24 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
                                              "hybrid"):
             engine = InferenceEngine(model, params, max_len=max_len,
                                      max_batch=max_batch)
+    if engine is not None and draft_model is not None:
+        # speculative pair: a (usually shallower) draft proposes, the
+        # target verifies — seeded output stays byte-identical either way
+        dcfg = get_config(draft_model)
+        if not full:
+            dcfg = reduce_for_smoke(dcfg)
+        if draft_layers:
+            dcfg = dataclasses.replace(dcfg, num_layers=int(draft_layers))
+        dmodel = build_model(dcfg)
+        dparams = dmodel.init(jax.random.PRNGKey(seed + 1000))
+        engine = SpeculativeEngine(
+            engine,
+            InferenceEngine(dmodel, dparams, max_len=max_len,
+                            max_batch=max_batch),
+            max_window=spec_window)
+        print(f"[serve] speculative decoding: draft {draft_model} "
+              f"({dcfg.num_layers} layers) proposing up to "
+              f"{engine.max_window} tokens/tick")
     ensemble = Ensemble(members, max_batch=max_batch)
     return FlexServeApp(registry, ensemble, engine, num_slots=num_slots,
                         max_queue=max_queue,
@@ -78,7 +98,9 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     default_deadline_ms=None, trace: bool = True,
                     flight_recorder_size: int = 256,
                     profile_dir=None, slo_config=None,
-                    client_weights=None) -> FlexServeApp:
+                    client_weights=None, draft_model=None,
+                    draft_layers=None, spec_window: int = 4
+                    ) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
     generation engine is ALSO store-versioned: the first decode-capable
@@ -118,9 +140,36 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                        profile_dir=profile_dir, slo_policies=slo_config,
                        client_weights=client_weights)
     if engine_member is not None and app.generation is not None:
-        res = manager.load_engine(engine_member)
+        draft_member = None
+        if draft_model is not None:
+            # publish the draft checkpoint as its own store version (its
+            # manifest records the truncated depth) so the speculative
+            # pair rides the normal engine lifecycle: load / canary /
+            # promote / rollback move target+draft as one unit
+            draft_member = f"{draft_model}#draft"
+            if store.latest_version(draft_member) is None:
+                dcfg = get_config(draft_model)
+                if not full:
+                    dcfg = reduce_for_smoke(dcfg)
+                if draft_layers:
+                    dcfg = dataclasses.replace(
+                        dcfg, num_layers=int(draft_layers))
+                dmodel = build_model(dcfg)
+                dparams = dmodel.init(jax.random.PRNGKey(seed + 1000))
+                v = store.publish(draft_member, dparams, config=draft_model,
+                                  source=dcfg.source,
+                                  meta={"reduced": not full,
+                                        "num_classes": num_classes,
+                                        "num_layers": dcfg.num_layers,
+                                        "init_seed": seed + 1000,
+                                        "max_len": max_len,
+                                        "max_batch": max_batch})
+                print(f"[serve] published draft {draft_member} v{v}")
+        res = manager.load_engine(engine_member, draft=draft_member,
+                                  max_window=spec_window)
         print(f"[serve] generation engine {res['engine']} "
-              f"(alias {res['alias']})")
+              f"(alias {res['alias']})"
+              + (f" + draft {res['draft']}" if res.get("draft") else ""))
     return app
 
 
@@ -163,6 +212,21 @@ def main(argv=None) -> int:
                          "enables the SLO autopilot: windowed burn-rate "
                          "evaluation with automatic canary promotion / "
                          "rollback, auditable at GET /v1/slo")
+    ap.add_argument("--draft-model", default=None, metavar="ARCH",
+                    choices=list(ASSIGNED_ARCHS),
+                    help="enable speculative decoding: serve this arch as "
+                         "the draft proposer (usually with --draft-layers "
+                         "to truncate its depth); seeded outputs stay "
+                         "byte-identical to non-speculative decoding, and "
+                         "requests opt out per-call with "
+                         "\"speculation\": false")
+    ap.add_argument("--draft-layers", type=int, default=None,
+                    help="truncate the draft model to this many layers "
+                         "(a shallow draft is what makes proposing cheap)")
+    ap.add_argument("--spec-window", type=int, default=4,
+                    help="max draft tokens proposed per decode tick; the "
+                         "scheduler adapts the live window to measured "
+                         "acceptance")
     ap.add_argument("--client-weight", action="append", default=None,
                     metavar="TAG=W",
                     help="per-client-tag fair-share weight (repeatable); "
@@ -193,7 +257,8 @@ def main(argv=None) -> int:
               trace=not args.no_trace,
               flight_recorder_size=args.flight_recorder_size,
               profile_dir=args.profile_dir, slo_config=args.slo_config,
-              client_weights=client_weights)
+              client_weights=client_weights, draft_model=args.draft_model,
+              draft_layers=args.draft_layers, spec_window=args.spec_window)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:

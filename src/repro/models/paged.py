@@ -160,6 +160,88 @@ def paged_decode_step(params, token, state, cfg: ModelConfig, *,
     return logits, new_state
 
 
+def paged_verify_step(params, tokens, state, cfg: ModelConfig, *,
+                      page_size: int, window: Optional[int] = None):
+    """Speculative verify through the page table: tokens (B, W) ->
+    (logits (B, W, V), new state).
+
+    Window position i of row b lands at absolute position
+    ``lengths[b] + i``; KV for every window position is scatter-written
+    into the row's pages first (positions past the table — a row at its
+    context ceiling mid-window — route to the dump page instead of
+    clobbering the row's last valid page), then query i attends against
+    the gathered view masked to ``lengths + i + 1`` — bitwise the
+    sequential ``paged_decode_step`` outputs, same as the dense
+    ``verify_decode_step``.  Rejected positions are rolled back by the
+    caller's accepted-length update alone; no cache mutation, no host
+    round-trip.  ``state["length"]`` passes through untouched."""
+    window = window if window is not None else cfg.sliding_window
+    lengths = state["length"]
+    table = state["page_table"]
+    B, W = tokens.shape
+    MP = table.shape[1]
+    rows = jnp.arange(B)[:, None]
+    positions = lengths[:, None] + jnp.arange(W)[None, :]      # (B, W)
+    logical = positions // page_size
+    # writes past the page table go to the dump page (never validly read);
+    # in-table writes go through the row's table like the sequential step
+    pg = jnp.where(logical < MP,
+                   table[rows, jnp.minimum(logical, MP - 1)], 0)
+    off = positions % page_size
+    x = params["embed"][tokens]                                # (B, W, D)
+    x = shard(x, "batch", None, None)
+
+    def scan_stack(x, stacked, cache, moe):
+        def step(x, xs):
+            lp, pool = xs
+            h = apply_norm(lp["ln1"], x, cfg)
+            q, k, v = attn.project_qkv(lp["attn"], h, cfg,
+                                       positions=positions)
+            pk = pool["k"].at[pg, off].set(k.astype(pool["k"].dtype))
+            pv = pool["v"].at[pg, off].set(v.astype(pool["v"].dtype))
+            if opt.enabled("pallas_paged_decode"):
+                from repro.kernels.decode_attention.ops import (
+                    paged_decode_attention)
+                outs = [paged_decode_attention(q[:, i], pk, pv, table,
+                                               lengths + i + 1,
+                                               window=window)
+                        for i in range(W)]
+            else:
+                ck, cv = _gathered_view(pk, pv, table)
+                outs = [attn.decode_attention_ref(q[:, i], ck, cv,
+                                                  lengths + i + 1,
+                                                  window=window)
+                        for i in range(W)]
+            out = jnp.stack(outs, axis=1).reshape(
+                B, W, cfg.num_heads * cfg.head_dim)
+            attn_out = out @ lp["attn"]["wo"] + lp["attn"].get("bo", 0.0)
+            if cfg.parallel_block:
+                x2 = x + attn_out + apply_mlp(lp["mlp"], h, cfg)
+            else:
+                x2 = x + attn_out
+                h2 = apply_norm(lp["ln2"], x2, cfg)
+                if moe:
+                    mo, _ = moe_block(lp["moe"], h2, cfg)
+                    x2 = x2 + mo
+                else:
+                    x2 = x2 + apply_mlp(lp["mlp"], h2, cfg)
+            return x2, {"k": pk, "v": pv}
+
+        return jax.lax.scan(step, x, (stacked, cache))
+
+    new_state = dict(state)
+    if "cache_dense" in state:
+        x, nc = scan_stack(x, params["dense_layers"], state["cache_dense"],
+                           False)
+        new_state["cache_dense"] = nc
+    x, nc = scan_stack(x, params["layers"], state["cache"],
+                       cfg.moe is not None)
+    new_state["cache"] = nc
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = project_logits(params, h, cfg)                    # (B, W, V)
+    return logits, new_state
+
+
 def _suffix_mask(S: int, n_ctx: int, ctx_lens, suf_lens,
                  window: Optional[int]):
     """(B, 1, S, n_ctx + S) mask for context-aware prefill: suffix query i

@@ -300,6 +300,94 @@ def decode_step(params, token, state, cfg: ModelConfig, *,
 
 
 # ---------------------------------------------------------------------------
+# Verify window (speculative decoding): W tokens against the cache, one pass
+# ---------------------------------------------------------------------------
+
+
+def _layer_verify(cfg: ModelConfig, moe: bool, window, x, lp, cache_layer,
+                  lengths):
+    """One block over a W-token verify window.  x (B, W, D).
+
+    KV for ALL W input positions is written first; the attention for
+    query i then masks to ``lengths + i + 1`` valid positions — exactly
+    the state the sequential single-token step would have seen at step i
+    (later window positions hold this window's writes instead of stale
+    garbage, but both are masked to NEG_INF before the softmax, so the
+    per-query outputs are bitwise the sequential ones).  The per-query
+    attention runs as a static Python loop calling the same
+    ``decode_attention_ref`` with the same (B, H, hd) shapes as the
+    sequential path — never a fused multi-query einsum whose reduction
+    order could differ."""
+    B, W, _ = x.shape
+    h = apply_norm(lp["ln1"], x, cfg)
+    positions = lengths[:, None] + jnp.arange(W)[None, :]        # (B, W)
+    q, k, v = attn.project_qkv(lp["attn"], h, cfg, positions=positions)
+    ck, cv = cache_layer["k"], cache_layer["v"]
+    rows = jnp.arange(B)[:, None]
+    # scatter writes; positions beyond Smax drop (jax scatter OOB default),
+    # matching the dense cache's behavior at the max_len boundary
+    ck = ck.at[rows, positions].set(k.astype(ck.dtype))
+    cv = cv.at[rows, positions].set(v.astype(cv.dtype))
+    outs = [attn.decode_attention_ref(q[:, i], ck, cv, lengths + i + 1,
+                                      window=window) for i in range(W)]
+    out = jnp.stack(outs, axis=1).reshape(B, W,
+                                          cfg.num_heads * cfg.head_dim)
+    attn_out = out @ lp["attn"]["wo"] + lp["attn"].get("bo", 0.0)
+    if cfg.parallel_block:
+        x = x + attn_out + apply_mlp(lp["mlp"], h, cfg)
+    else:
+        x = x + attn_out
+        h2 = apply_norm(lp["ln2"], x, cfg)
+        if moe:
+            mo, _ = moe_block(lp["moe"], h2, cfg)
+            x = x + mo
+        else:
+            x = x + apply_mlp(lp["mlp"], h2, cfg)
+    return x, {"k": ck, "v": cv}
+
+
+def _scan_verify(cfg, stacked, cache, x, lengths, *, moe: bool, window):
+    def step(x, xs):
+        lp, cache_layer = xs
+        x, new_cache = _layer_verify(cfg, moe, window, x, lp, cache_layer,
+                                     lengths)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(step, x, (stacked, cache))
+    return x, new_cache
+
+
+def verify_decode_step(params, tokens, state, cfg: ModelConfig, *,
+                       window: Optional[int] = None):
+    """Speculative verify: W tokens (B, W) -> (logits (B, W, V), state).
+
+    Row [b, i] of the logits is the next-token distribution after
+    consuming ``tokens[b, :i+1]`` — bitwise what ``decode_step`` would
+    emit if fed those tokens one at a time.  KV for every window position
+    is written (accepted positions are thereby committed; rejected ones
+    are dead weight masked out by the caller's accepted length — the
+    rollback is a length update, no cache mutation).  ``state["length"]``
+    is NOT advanced here: the speculative step owns the accepted-length
+    accounting.  Requires a non-ring cache (window=None serving)."""
+    window = window if window is not None else cfg.sliding_window
+    lengths = state["length"]
+    x = params["embed"][tokens]                            # (B, W, D)
+    x = shard(x, "batch", None, None)
+    new_state = dict(state)
+    if "cache_dense" in state:
+        x, nc = _scan_verify(cfg, params["dense_layers"],
+                             state["cache_dense"], x, lengths, moe=False,
+                             window=window)
+        new_state["cache_dense"] = nc
+    x, nc = _scan_verify(cfg, params["layers"], state["cache"], x, lengths,
+                         moe=cfg.moe is not None, window=window)
+    new_state["cache"] = nc
+    h = apply_norm(params["final_norm"], x, cfg)
+    logits = project_logits(params, h, cfg)                # (B, W, V)
+    return logits, new_state
+
+
+# ---------------------------------------------------------------------------
 # Prefill: full-sequence forward that also fills the cache
 # ---------------------------------------------------------------------------
 

@@ -40,18 +40,28 @@ Request plane (every inference route; all fields optional):
 POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16,
                     "temperature"?: 0.8, "top_k"?: 40, "top_p"?: 0.95,
                     "seed"?: 7, "stop"?: [50256], "eos_id"?: 2,
-                    "stream"?: false, "target"?: "canary"}
+                    "speculation"?: true, "stream"?: false,
+                    "target"?: "canary"}
     -> {"outputs": [[...], ...], "steps": n, "prompt_lengths": [...],
         "finish_reasons": ["length"|"eos"|"stop", ...]}
+
+    ``speculation`` (default true) opts a request out of speculative
+    decoding when false; it is a no-op on a non-speculative engine.
+    Seeded outputs are byte-identical either way — speculation changes
+    latency, never tokens.
 
     With ``"stream": true`` (exactly ONE prompt) the response is chunked
     transfer encoding, application/x-ndjson — one JSON event per chunk:
         {"event": "token", "token": t, "index": i}          per token
         {"event": "done", "tokens": [...], "finish_reason": ...,
          "token_count": n, "prompt_length": l, "ttft_ms": ...,
-         "total_ms": ..., "engine": "name@vN", "sampling": {...}}
-    (or a terminal {"event": "error", "error": ...}).  Disconnecting
-    mid-stream cancels the request and frees its decode slot.
+         "total_ms": ..., "engine": "name@vN", "sampling": {...},
+         "speculation": {"proposed": p, "accepted": a,
+                         "acceptance_rate": a/p}}
+    (or a terminal {"event": "error", "error": ...}).  The terminal
+    ``speculation`` summary is zeros on a non-speculative engine or an
+    opted-out request.  Disconnecting mid-stream cancels the request and
+    frees its decode slot.
 
 GET  /v1/models    -> {"models": [{name, version, arch, family, params,
                                    source, param_hash?}, ...]}
@@ -128,6 +138,17 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                                             prefill_tokens_forwarded,
                                             prefill_tokens_reused}
                                            (zeroed for dense engines),
+                                    speculation: {enabled, max_window,
+                                                  window, acceptance_ema,
+                                                  spec_ticks,
+                                                  proposed_tokens,
+                                                  accepted_tokens,
+                                                  acceptance_rate, k_hist,
+                                                  draft_ms_total,
+                                                  verify_ms_total,
+                                                  draft_share_estimate}
+                                           (zeroed for non-speculative
+                                            engines),
                                     streams: {started, completed,
                                               cancelled, failed,
                                               deadline, paused},

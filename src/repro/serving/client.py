@@ -465,14 +465,15 @@ class FlexServeClient:
     @staticmethod
     def _generate_body(prompts, max_new_tokens, eos_id, *,
                        temperature=None, top_k=None, top_p=None, seed=None,
-                       stop=None, target=None, priority=None,
-                       deadline_ms=None, client_tag=None,
+                       stop=None, speculation=None, target=None,
+                       priority=None, deadline_ms=None, client_tag=None,
                        trace_id=None) -> Dict[str, Any]:
         body: Dict[str, Any] = {"prompts": [list(p) for p in prompts],
                                 "max_new_tokens": max_new_tokens,
                                 "eos_id": eos_id}
         for key, val in (("temperature", temperature), ("top_k", top_k),
                          ("top_p", top_p), ("seed", seed), ("stop", stop),
+                         ("speculation", speculation),
                          ("target", target), ("priority", priority),
                          ("deadline_ms", deadline_ms),
                          ("client", client_tag), ("trace_id", trace_id)):
@@ -485,7 +486,8 @@ class FlexServeClient:
                  eos_id: Optional[int] = None,
                  **sampling: Any) -> Dict[str, Any]:
         """Blocking generate; ``sampling`` may carry temperature / top_k /
-        top_p / seed / stop / target (an engine version alias)."""
+        top_p / seed / stop / speculation (False opts this request out of
+        speculative decoding) / target (an engine version alias)."""
         return self._request(
             "POST", "/v1/generate",
             self._generate_body(prompts, max_new_tokens, eos_id, **sampling))
@@ -496,8 +498,10 @@ class FlexServeClient:
                         **sampling: Any) -> Iterator[Dict[str, Any]]:
         """Streamed generate for ONE prompt: yields event dicts (see
         repro.serving.api) as the server decodes.  Consume to the terminal
-        event, or ``close()`` the client to abandon mid-stream (the server
-        cancels the request and frees its slot)."""
+        event — on a speculative engine its ``"speculation"`` summary
+        carries proposed/accepted/acceptance_rate — or ``close()`` the
+        client to abandon mid-stream (the server cancels the request and
+        frees its slot)."""
         body = self._generate_body([prompt], max_new_tokens, eos_id,
                                    **sampling)
         body["stream"] = True

@@ -57,7 +57,7 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 from repro.core.engine import GenerationResult, InferenceEngine
 from repro.core.sampling import SamplingParams
 from repro.core.scheduler import (Request, SchedulerBusy, SchedulerService,
-                                  ZERO_PAGER_STATS)
+                                  ZERO_PAGER_STATS, ZERO_SPECULATION_STATS)
 from repro.core.telemetry import BYTES_BUCKETS, Histogram
 from repro.serving.admission import RequestContext, ShedError
 
@@ -217,7 +217,14 @@ class GenerationStream:
               "prompt_length": len(req.prompt),
               "total_ms": 1e3 * (req.latency_s or 0.0),
               "engine": self._entry.label,
-              "sampling": self._sampling.describe()}
+              "sampling": self._sampling.describe(),
+              # speculative-decoding acceptance summary: zeros when the
+              # serving engine is non-speculative or the request opted out
+              "speculation": {
+                  "proposed": req.spec_proposed,
+                  "accepted": req.spec_accepted,
+                  "acceptance_rate": (req.spec_accepted / req.spec_proposed
+                                      if req.spec_proposed else 0.0)}}
         if req.ttft_s is not None:
             ev["ttft_ms"] = 1e3 * req.ttft_s
         if req.pause_count:
@@ -591,7 +598,10 @@ class GenerationService:
                                "transfer_bytes_hist": zero_bytes},
                     # paged-KV engines overwrite the zeroed KVPager schema
                     # (page utilization, prefix hit rate, fast resumes)
-                    "pager": dict(ZERO_PAGER_STATS)})
+                    "pager": dict(ZERO_PAGER_STATS),
+                    # speculative engines overwrite the zeroed schema
+                    # (acceptance EMA, window histogram, draft/verify ms)
+                    "speculation": dict(ZERO_SPECULATION_STATS)})
         default = engines.get(self.default_alias)
         if default is not None:
             out.update({k: v for k, v in default.items() if k != "engine"})

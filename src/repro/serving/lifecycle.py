@@ -39,7 +39,7 @@ from typing import Any, Callable, Dict, Hashable, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro.core.engine import InferenceEngine
+from repro.core.engine import InferenceEngine, SpeculativeEngine
 from repro.core.ensemble import Ensemble, EnsembleMember
 from repro.core.registry import ModelRegistry
 from repro.serving.modelstore import ModelStore
@@ -55,13 +55,19 @@ def default_factory(manifest: Dict[str, Any]):
     The manifest's ``config`` names the arch; ``reduced`` (default True)
     selects the smoke-size variant; ``num_classes`` sizes the
     classification readout (last-position logits), matching launch/serve.
+    ``num_layers`` (optional) truncates the stack — how a published
+    speculative DRAFT checkpoint records its reduced depth.
     """
+    import dataclasses
+
     from repro.configs import get_config, reduce_for_smoke
     from repro.models.build import build_model
 
     cfg = get_config(manifest["config"])
     if manifest.get("reduced", True):
         cfg = reduce_for_smoke(cfg)
+    if manifest.get("num_layers"):
+        cfg = dataclasses.replace(cfg, num_layers=int(manifest["num_layers"]))
     model = build_model(cfg)
     num_classes = int(manifest.get("num_classes", 16))
 
@@ -112,6 +118,11 @@ class ModelManager:
         self.generation = None          # attach_generation() wires this
         self._engine_active: Dict[str, Tuple[str, int]] = {}
         self._engine_previous: Dict[str, Tuple[str, int]] = {}
+        # speculative pairs: alias -> (draft name, draft version).  The
+        # pair serves as ONE entry, so promote/demote/rollback move the
+        # draft with its target and gc protects both checkpoints.
+        self._engine_drafts: Dict[str, Tuple[str, int]] = {}
+        self._engine_prev_drafts: Dict[str, Optional[Tuple[str, int]]] = {}
         self._admin_lock = threading.RLock()
         # alias -> {member name -> active version}; maps are replaced
         # wholesale under the admin lock, so hot-path readers always see a
@@ -298,14 +309,24 @@ class ModelManager:
 
     def load_engine(self, name: str, version: Optional[int] = None, *,
                     alias: Optional[str] = None,
-                    warm: bool = True) -> Dict[str, Any]:
+                    warm: bool = True,
+                    draft: Optional[str] = None,
+                    draft_version: Optional[int] = None,
+                    max_window: int = 4) -> Dict[str, Any]:
         """Materialize a store version (restore + hash verify) as an
         InferenceEngine and hot-swap it under an engine alias.  In-flight
         decode streams drain on the displaced engine before it is closed;
         new requests land on the new engine immediately.  ``warm``
         (default) pre-compiles the new engine's decode data path BEFORE
         the alias flips, so the swap never stalls live streams on jit
-        compiles (mirrors the model plane's warm-before-publish)."""
+        compiles (mirrors the model plane's warm-before-publish).
+
+        ``draft`` names a second store model to materialize as the
+        proposer of a speculative pair: both checkpoints restore + hash
+        verify, and the alias serves ONE ``SpeculativeEngine`` wrapping
+        them — so canary/promote/demote/rollback move the pair as a unit
+        and neither checkpoint is gc-eligible while the alias lives.
+        ``max_window`` bounds the per-tick proposal window."""
         gen = self._require_generation()
         alias = alias or self.default_alias
         with self._admin_lock:
@@ -317,16 +338,46 @@ class ModelManager:
             manifest = self.store.manifest(name, version)  # raises StoreError
             rm = self._materialize(name, version, manifest)
             engine = self._engine_factory(manifest, rm.model, rm.params)
+            draft_nv: Optional[Tuple[str, int]] = None
+            if draft is not None:
+                if draft_version is None:
+                    draft_version = self.store.latest_version(draft)
+                    if draft_version is None:
+                        raise LifecycleError(
+                            f"store has no published versions of draft "
+                            f"{draft!r}")
+                dmanifest = self.store.manifest(draft, draft_version)
+                drm = self._materialize(draft, draft_version, dmanifest)
+                draft_engine = self._engine_factory(dmanifest, drm.model,
+                                                    drm.params)
+                try:
+                    engine = SpeculativeEngine(engine, draft_engine,
+                                               max_window=max_window)
+                except ValueError as e:
+                    raise LifecycleError(
+                        f"incompatible speculative pair {name} v{version} "
+                        f"+ {draft} v{draft_version}: {e}") from None
+                draft_nv = (draft, draft_version)
             swap = gen.install(name, version, engine, alias=alias,
                                warm=warm)
             old = self._engine_active.get(alias)
+            old_draft = self._engine_drafts.get(alias)
             self._engine_active[alias] = (name, version)
+            if draft_nv is not None:
+                self._engine_drafts[alias] = draft_nv
+            else:
+                self._engine_drafts.pop(alias, None)
             if old is not None and old != (name, version):
                 self._engine_previous[alias] = old
+                self._engine_prev_drafts[alias] = old_draft
             with self._stats_lock:
                 self._counters["engine_loads"] += 1
             return {"name": name, "version": version,
-                    "manifest": manifest, **swap}
+                    "manifest": manifest,
+                    "speculative": draft_nv is not None,
+                    "draft": (f"{draft_nv[0]}@v{draft_nv[1]}"
+                              if draft_nv is not None else None),
+                    **swap}
 
     def rollback_engine(self, name: Optional[str] = None, *,
                         alias: Optional[str] = None,
@@ -342,8 +393,12 @@ class ModelManager:
                 raise LifecycleError(
                     f"alias {alias!r} previously served engine "
                     f"{prev[0]!r} v{prev[1]}, not {name!r}")
-            result = self.load_engine(prev[0], prev[1], alias=alias,
-                                      warm=warm)
+            prev_draft = self._engine_prev_drafts.get(alias)
+            result = self.load_engine(
+                prev[0], prev[1], alias=alias, warm=warm,
+                draft=prev_draft[0] if prev_draft is not None else None,
+                draft_version=(prev_draft[1] if prev_draft is not None
+                               else None))
             with self._stats_lock:
                 self._counters["engine_rollbacks"] += 1
                 self._counters["engine_loads"] -= 1   # rollback, not a load
@@ -374,9 +429,16 @@ class ModelManager:
                     f"no engine under alias {alias!r} to promote")
             swap = gen.repoint(alias, to_alias)
             old = self._engine_active.get(to_alias)
+            old_draft = self._engine_drafts.get(to_alias)
             self._engine_active[to_alias] = src
+            src_draft = self._engine_drafts.get(alias)
+            if src_draft is not None:
+                self._engine_drafts[to_alias] = src_draft
+            else:
+                self._engine_drafts.pop(to_alias, None)
             if old is not None and old != src:
                 self._engine_previous[to_alias] = old
+                self._engine_prev_drafts[to_alias] = old_draft
             with self._stats_lock:
                 self._counters["engine_promotes"] += 1
             return {"name": src[0], "version": src[1], "from_alias": alias,
@@ -398,9 +460,16 @@ class ModelManager:
                     f"{alias!r} onto")
             swap = gen.repoint(to_alias, alias)
             old = self._engine_active.get(alias)
+            old_draft = self._engine_drafts.get(alias)
             self._engine_active[alias] = src
+            src_draft = self._engine_drafts.get(to_alias)
+            if src_draft is not None:
+                self._engine_drafts[alias] = src_draft
+            else:
+                self._engine_drafts.pop(alias, None)
             if old is not None and old != src:
                 self._engine_previous[alias] = old
+                self._engine_prev_drafts[alias] = old_draft
             with self._stats_lock:
                 self._counters["engine_demotes"] += 1
             return {"name": src[0], "version": src[1],
@@ -422,6 +491,10 @@ class ModelManager:
                           if n == name}
             protected |= {v for n, v in self._engine_previous.values()
                           if n == name}
+            protected |= {v for n, v in self._engine_drafts.values()
+                          if n == name}
+            protected |= {nv[1] for nv in self._engine_prev_drafts.values()
+                          if nv is not None and nv[0] == name}
             result = self.store.gc(name, keep_last_n, protected=protected)
             with self._stats_lock:
                 self._counters["gc_runs"] += 1
@@ -531,4 +604,6 @@ class ModelManager:
         out["aliases"] = {a: dict(m) for a, m in self._active.items()}
         out["engine_aliases"] = {a: f"{n}@v{v}" for a, (n, v)
                                  in self._engine_active.items()}
+        out["engine_drafts"] = {a: f"{n}@v{v}" for a, (n, v)
+                                in self._engine_drafts.items()}
         return out

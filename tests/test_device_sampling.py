@@ -289,6 +289,46 @@ def test_batched_prefill_groups_by_sequence_bucket(engine):
     sched.run()
 
 
+def test_warm_precompiles_speculative_steps_compile_flat(engine):
+    """SchedulerService.warm() on a speculative pair pre-compiles the
+    draft scan + verify-window forward + accept/reject kernel for every
+    adaptive-k level; mixed spec/non-spec traffic then compiles NOTHING
+    new (compiled_steps flat)."""
+    import dataclasses
+
+    from repro.core import SpeculativeEngine
+    from repro.core.scheduler import SchedulerService
+    from repro.models.build import build_model
+
+    # yi-9b: the smoke arch without a sliding window (a speculative
+    # verify window cannot slide)
+    cfg, model, params = smoke_model("yi-9b")
+    dcfg = dataclasses.replace(cfg, num_layers=1)
+    dmodel = build_model(dcfg)
+    spec = SpeculativeEngine(
+        InferenceEngine(model, params, max_len=96, max_batch=4),
+        InferenceEngine(dmodel, dmodel.init(jax.random.PRNGKey(3)),
+                        max_len=96, max_batch=4),
+        max_window=4)
+    svc = SchedulerService(spec, num_slots=2)
+    try:
+        svc.warm(seq_lens=[16], group_sizes=[1, 2])
+        compiled = spec.decode_cache_size()
+        assert compiled is not None and compiled > 0
+        mixed = [SamplingParams(max_new_tokens=5, seed=9),
+                 SamplingParams(max_new_tokens=5, temperature=0.8,
+                                top_k=8, seed=10, speculation=False),
+                 SamplingParams(max_new_tokens=4, temperature=1.1,
+                                top_p=0.9, seed=11)]
+        for s in mixed:
+            svc.submit_and_wait([[2, 7, 1]], sampling=s)
+        assert spec.decode_cache_size() == compiled, \
+            "mixed spec/non-spec traffic recompiled a decode step"
+        assert svc.stats()["speculation"]["enabled"] is True
+    finally:
+        svc.close()
+
+
 def test_batched_prefill_matches_single_admission(engine):
     """Requests admitted through one grouped forward decode the same
     tokens as requests admitted one at a time (greedy, exact)."""

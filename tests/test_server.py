@@ -1,6 +1,7 @@
 """REST endpoint integration tests (paper's deployment shell)."""
 
 import concurrent.futures
+import dataclasses
 import json
 
 import jax
@@ -9,8 +10,9 @@ import pytest
 
 from conftest import smoke_model
 from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
-                        ModelRegistry)
+                        ModelRegistry, SpeculativeEngine)
 from repro.serving import FlexServeApp, FlexServeClient, FlexServeServer
+from repro.serving.client import HTTPStatusError
 
 
 @pytest.fixture(scope="module")
@@ -109,6 +111,91 @@ def test_metrics_exposes_coalescing_stats(client):
     # bounded jit cache, reported per bucket
     assert sum(m["ensemble_compiles"].values()) <= 8
     assert "steps" in m["generate"]
+
+
+def test_invalid_sampling_params_are_400_with_structured_body(client):
+    """Malformed sampling fields must be rejected at the API boundary as
+    400 with a client-readable error naming the field — never surfacing
+    as a 500 from deep inside a decode tick (regression)."""
+    cases = [
+        ({"temperature": -0.5}, "temperature"),
+        ({"temperature": "hot"}, "temperature"),
+        ({"top_p": 1.5}, "top_p"),
+        ({"top_p": 0.0}, "top_p"),
+        ({"top_k": -3}, "top_k"),
+        ({"stop": "not-a-list"}, "stop"),
+        ({"stop": [1, "two"]}, "stop"),
+        ({"max_new_tokens": 0}, "max_new_tokens"),
+        ({"speculation": "yes"}, "speculation"),
+    ]
+    for bad, field in cases:
+        body = {"prompts": [[1, 2, 3]], "max_new_tokens": 2, **bad}
+        with pytest.raises(HTTPStatusError) as ei:
+            client._request("POST", "/v1/generate", body, retries=0)
+        assert ei.value.status == 400, (bad, ei.value.status)
+        assert field in str(ei.value), (bad, str(ei.value))
+
+
+@pytest.fixture(scope="module")
+def spec_server():
+    """Endpoint whose generation engine is a speculative target+draft
+    pair (1-layer draft of the same smoke arch)."""
+    cfg, model, params = smoke_model("yi-9b")
+    dcfg = dataclasses.replace(cfg, num_layers=1)
+    from repro.models.build import build_model
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(11))
+    registry = ModelRegistry()
+    registry.register("yi#0", model, params)
+    engine = SpeculativeEngine(
+        InferenceEngine(model, params, max_len=64, max_batch=4),
+        InferenceEngine(dmodel, dparams, max_len=64, max_batch=4),
+        max_window=4)
+    srv = FlexServeServer(
+        FlexServeApp(registry, None, engine, num_slots=2)).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture(scope="module")
+def spec_client(spec_server):
+    host, port = spec_server.address
+    return FlexServeClient(host, port)
+
+
+def test_speculative_stream_summary_and_metrics(spec_client):
+    """End to end over HTTP: the stream terminal carries the acceptance
+    summary, /metrics exposes generate.speculation, and per-request
+    opt-out zeroes the request's speculative work."""
+    events = list(spec_client.generate_stream([3, 1, 4, 1, 5],
+                                              max_new_tokens=8, seed=13))
+    done = events[-1]
+    assert done["event"] == "done"
+    spec = done["speculation"]
+    assert spec["proposed"] > 0
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+    assert spec["accepted"] <= spec["proposed"]
+
+    # byte-identity: the opted-out stream of the same seeded request
+    # produces the same tokens, with zero speculative work
+    opt_out = list(spec_client.generate_stream([3, 1, 4, 1, 5],
+                                               max_new_tokens=8, seed=13,
+                                               speculation=False))
+    assert opt_out[-1]["event"] == "done"
+    assert opt_out[-1]["tokens"] == done["tokens"]
+    assert opt_out[-1]["speculation"] == {
+        "proposed": 0, "accepted": 0, "acceptance_rate": 0.0}
+
+    m = spec_client.metrics()
+    sp = m["generate"]["speculation"]
+    assert sp["enabled"] is True
+    assert sp["spec_ticks"] > 0
+    assert sp["proposed_tokens"] >= spec["proposed"]
+    assert sp["max_window"] == 4
+
+    # prometheus exposition flattens the section into gauges
+    text = spec_client.metrics(format="prometheus")
+    assert "flexserve_generate_speculation_proposed_tokens" in text
 
 
 @pytest.mark.slow

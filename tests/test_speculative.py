@@ -1,0 +1,453 @@
+"""Speculative decoding: draft-propose + target-verify on one device.
+
+The acceptance anchors:
+  * the verify-window forward is BITWISE identical to running the
+    sequential decode step over the same tokens (dense and paged) — the
+    whole byte-identity contract stands on this;
+  * a SpeculativeEngine emits streams byte-identical to the sequential
+    reference draw-for-draw across temperatures/top-k/top-p/seeds
+    (greedy exact, sampled via the same fold_in(key, ctr) draws);
+  * with a functionally-equal draft, greedy windows fully accept;
+  * scheduler-level: speculative and plain schedulers produce identical
+    streams, park/resume and deadline eviction mid-verify-window leave
+    pager refcounts exact, and mixed speculative/non-speculative traffic
+    keeps the compiled-step count flat.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import smoke_model
+from repro.core import (ContinuousBatchingScheduler, InferenceEngine,
+                        PagedInferenceEngine, SamplingParams)
+from repro.core.engine import SpeculativeEngine
+from repro.core.sampling import base_key, speculative_accept, sample_tokens
+from repro.models import build_model
+
+ARCH = "yi-9b"                      # dense GQA, no sliding window
+
+
+def _models():
+    cfg, model, params = smoke_model(ARCH)
+    dcfg = dataclasses.replace(cfg, num_layers=1)
+    dmodel = build_model(dcfg)
+    dparams = dmodel.init(jax.random.PRNGKey(7))
+    return (cfg, model, params), (dcfg, dmodel, dparams)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    (cfg, model, params), (dcfg, dmodel, dparams) = _models()
+    target = InferenceEngine(model, params, max_len=64, max_batch=4)
+    draft = InferenceEngine(dmodel, dparams, max_len=64, max_batch=4)
+    return target, SpeculativeEngine(target, draft, max_window=4)
+
+
+@pytest.fixture(scope="module")
+def paged_pair():
+    (cfg, model, params), (dcfg, dmodel, dparams) = _models()
+    target = PagedInferenceEngine(model, params, max_len=64, max_batch=4,
+                                  page_size=16)
+    draft = PagedInferenceEngine(dmodel, dparams, max_len=64, max_batch=4,
+                                 page_size=16, num_pages=target.num_pages)
+    return target, SpeculativeEngine(target, draft, max_window=4)
+
+
+# --- the bitwise bar: verify window == sequential decode ----------------------
+
+
+def _rand_state(state, seed):
+    """Fill cache leaves with random values (shape-preserving) so the
+    equality check isn't trivially about zeros; length/table leaves kept."""
+    rng = np.random.default_rng(seed)
+
+    def fill(leaf):
+        if leaf.dtype in (jnp.int32, jnp.uint32):
+            return leaf
+        return jnp.asarray(rng.normal(0, 0.3, leaf.shape), leaf.dtype)
+
+    return jax.tree_util.tree_map(fill, state)
+
+
+def test_dense_verify_window_bitwise_matches_sequential():
+    """verify_decode_step over a W-token window produces the SAME logits,
+    bit for bit, as W sequential decode_step calls — per-query attention
+    with sequential shapes, no fused multi-query path."""
+    from repro.models import transformer
+    (cfg, model, params), _ = _models()
+    B, W = 2, 4
+    state = _rand_state(model.init_state(B, 64), 0)
+    state["length"] = jnp.asarray([5, 9], jnp.int32)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, W)), jnp.int32)
+
+    seq_logits = []
+    seq_state = dict(state)
+    for i in range(W):
+        lg, seq_state = transformer.decode_step(params, toks[:, i],
+                                                seq_state, cfg)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, axis=1)             # (B, W, V)
+
+    ver_logits, ver_state = transformer.verify_decode_step(
+        params, toks, dict(state), cfg)
+    assert np.array_equal(np.asarray(seq_logits), np.asarray(ver_logits))
+    # verify leaves length for the accept step to advance
+    assert np.array_equal(np.asarray(ver_state["length"]),
+                          np.asarray(state["length"]))
+    # the committed KV is identical too (positions < length + W)
+    for k in ("k", "v"):
+        assert np.array_equal(np.asarray(seq_state["cache"][k]),
+                              np.asarray(ver_state["cache"][k]))
+
+
+def test_paged_verify_window_bitwise_matches_sequential():
+    from repro.models import paged
+    (cfg, model, params), _ = _models()
+    B, W, ps = 2, 4, 16
+    state = _rand_state(paged.init_paged_state(cfg, B, 8, ps, 4), 2)
+    state["length"] = jnp.asarray([5, 17], jnp.int32)
+    state["page_table"] = jnp.asarray([[1, 2, 0, 0], [3, 4, 5, 0]],
+                                      jnp.int32)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, W)), jnp.int32)
+
+    seq_logits = []
+    seq_state = dict(state)
+    for i in range(W):
+        lg, seq_state = paged.paged_decode_step(params, toks[:, i],
+                                                seq_state, cfg,
+                                                page_size=ps)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, axis=1)
+
+    ver_logits, ver_state = paged.paged_verify_step(
+        params, toks, dict(state), cfg, page_size=ps)
+    assert np.array_equal(np.asarray(seq_logits), np.asarray(ver_logits))
+    for k in ("k", "v"):
+        assert np.array_equal(np.asarray(seq_state["cache"][k]),
+                              np.asarray(ver_state["cache"][k]))
+
+
+# --- accept/reject kernel -----------------------------------------------------
+
+
+def test_speculative_accept_greedy_counts_and_draws():
+    rng = np.random.default_rng(4)
+    B, W, V = 3, 4, 32
+    logits = jnp.asarray(rng.normal(size=(B, W, V)), jnp.float32)
+    argmax = np.asarray(jnp.argmax(logits, -1))            # (B, W)
+    drafts = argmax[:, :W - 1].copy()
+    drafts[1, 1] = (drafts[1, 1] + 1) % V                  # reject at j=1
+    drafts[2, 0] = (drafts[2, 0] + 1) % V                  # reject at j=0
+    draws, counts = speculative_accept(
+        logits, jnp.asarray(drafts), jnp.zeros((B,)),
+        jnp.zeros((B,), jnp.int32), jnp.ones((B,)),
+        jnp.zeros((B, 2), jnp.uint32), jnp.zeros((B,), jnp.int32))
+    assert np.array_equal(np.asarray(draws), argmax)
+    assert list(np.asarray(counts)) == [W, 2, 1]
+
+
+def test_speculative_accept_draws_match_sequential_sampling():
+    """Stochastic draws of the accept kernel are EXACTLY the sequential
+    sample_tokens draws at counters ctr..ctr+W-1 — the draw-for-draw
+    contract that makes rejection invisible to the stream."""
+    rng = np.random.default_rng(5)
+    B, W, V = 2, 3, 64
+    logits = jnp.asarray(rng.normal(size=(B, W, V)), jnp.float32)
+    temp = jnp.asarray([0.9, 1.3])
+    top_k = jnp.asarray([0, 8], jnp.int32)
+    top_p = jnp.asarray([0.85, 1.0])
+    key = jnp.asarray(np.stack([base_key(11), base_key(12)]))
+    ctr = jnp.asarray([4, 9], jnp.int32)
+    draws, _ = speculative_accept(
+        logits, jnp.zeros((B, W - 1), jnp.int32), temp, top_k, top_p,
+        key, ctr)
+    for j in range(W):
+        want = sample_tokens(logits[:, j], temp, top_k, top_p, key,
+                             ctr + j)
+        assert np.array_equal(np.asarray(draws[:, j]), np.asarray(want))
+
+
+# --- engine-level byte-identity -----------------------------------------------
+
+
+def _prefill_batch(prompts, S=16):
+    B = len(prompts)
+    tokens = np.zeros((B, S), np.int32)
+    lengths = np.ones((B,), np.int32)
+    for i, p in enumerate(prompts):
+        tokens[i, :len(p)] = p
+        lengths[i] = len(p)
+    return {"tokens": jnp.asarray(tokens), "lengths": jnp.asarray(lengths)}
+
+
+def _samp(params_list):
+    B = len(params_list)
+    out = {"temperature": np.zeros((B,), np.float32),
+           "top_k": np.zeros((B,), np.int32),
+           "top_p": np.ones((B,), np.float32),
+           "key": np.zeros((B, 2), np.uint32)}
+    for i, p in enumerate(params_list):
+        out["temperature"][i] = p.temperature
+        out["top_k"][i] = p.top_k
+        out["top_p"][i] = p.top_p
+        out["key"][i] = base_key(p.resolve_seed())
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
+def _sequential_tokens(engine, prompts, samp, n):
+    state = engine.new_state(len(prompts))
+    logits, state = engine.prefill(_prefill_batch(prompts), state)
+    ctr = jnp.zeros((len(prompts),), jnp.int32)
+    tok = engine.sample(logits, samp, ctr)
+    out = [np.asarray(tok)]
+    ctr = ctr + 1
+    for _ in range(n - 1):
+        tok, state, ctr = engine.decode_sample(tok, state, samp, ctr)
+        out.append(np.asarray(tok))
+    return np.stack(out, axis=1)                           # (B, n)
+
+
+def _speculative_tokens(spec, prompts, samp, n, w=4, spec_on=None):
+    B = len(prompts)
+    state = spec.new_state(B)
+    logits, state = spec.prefill(_prefill_batch(prompts), state)
+    ctr = jnp.zeros((B,), jnp.int32)
+    tok = spec.sample(logits, samp, ctr)
+    ctr = ctr + 1
+    streams = [[int(t)] for t in np.asarray(tok)]
+    if spec_on is None:
+        spec_on = np.ones((B,), bool)
+    all_counts = []
+    while min(len(s) for s in streams) < n:
+        draws, counts, tok, state, ctr = spec.speculative_step(
+            w, tok, state, samp, ctr, jnp.asarray(spec_on))
+        draws, counts = np.asarray(draws), np.asarray(counts)
+        all_counts.append(counts.copy())
+        for b in range(B):
+            streams[b].extend(int(t) for t in draws[b, :counts[b]])
+    return (np.stack([s[:n] for s in streams]),
+            np.stack(all_counts))
+
+
+MIXED = [SamplingParams(temperature=0.0),
+         SamplingParams(temperature=0.9, seed=21),
+         SamplingParams(temperature=1.2, top_k=8, seed=22),
+         SamplingParams(temperature=0.7, top_p=0.8, seed=23)]
+PROMPTS = [[1, 2, 3], [9, 8, 7], [4, 4], [5, 1, 2, 6]]
+
+
+def test_spec_engine_bytematch_sequential_dense(pair):
+    """The tentpole contract, dense: a random (low-acceptance) draft and
+    heterogeneous per-row sampling still emit streams byte-identical to
+    the sequential reference."""
+    target, spec = pair
+    samp = _samp(MIXED)
+    want = _sequential_tokens(target, PROMPTS, samp, 12)
+    got, _ = _speculative_tokens(spec, PROMPTS, samp, 12)
+    assert np.array_equal(want, got)
+
+
+def test_spec_engine_bytematch_sequential_paged(paged_pair):
+    target, spec = paged_pair
+    # raw paged engines need scheduler plumbing for prefill; drive the
+    # pair through schedulers below instead — here check construction
+    assert spec.paged and spec.max_window == 4
+    assert spec.page_bytes == target.page_bytes + spec.draft.page_bytes
+
+
+def test_spec_engine_full_acceptance_with_equal_draft():
+    """Greedy + a draft that IS the target: every window fully accepts
+    (counts == W each tick) — direct evidence the verify forward is
+    bitwise-faithful to the draft's sequential decode."""
+    (cfg, model, params), _ = _models()
+    target = InferenceEngine(model, params, max_len=64, max_batch=4)
+    twin = InferenceEngine(model, params, max_len=64, max_batch=4)
+    spec = SpeculativeEngine(target, twin, max_window=4)
+    samp = _samp([SamplingParams(temperature=0.0)] * 2)
+    got, counts = _speculative_tokens(spec, [[1, 2, 3], [7, 8]], samp,
+                                      12, w=4)
+    assert (counts == 4).all()
+    want = _sequential_tokens(target, [[1, 2, 3], [7, 8]], samp, 12)
+    assert np.array_equal(want, got)
+
+
+def test_spec_engine_opt_out_rows_advance_one(pair):
+    target, spec = pair
+    samp = _samp(MIXED[:2])
+    spec_on = np.asarray([True, False])
+    got, counts = _speculative_tokens(spec, PROMPTS[:2], samp, 8,
+                                      spec_on=spec_on)
+    assert (counts[:, 1] == 1).all()        # opted-out row: sequential
+    want = _sequential_tokens(target, PROMPTS[:2], samp, 8)
+    assert np.array_equal(want, got)
+
+
+# --- scheduler-level byte-identity and lifecycle ------------------------------
+
+
+def _sched_run(engine, work, num_slots=4, **kw):
+    s = ContinuousBatchingScheduler(engine, num_slots=num_slots, **kw)
+    reqs = [s.submit(p, sampling=sp) for p, sp in work]
+    s.run()
+    assert all(r.done for r in reqs)
+    return s, [(r.output, r.finish_reason) for r in reqs]
+
+
+def _workload(n=6, budget=10):
+    out = []
+    for i in range(n):
+        out.append(([1 + i, 2 + (i % 3), 3], SamplingParams(
+            max_new_tokens=budget,
+            temperature=(0.0 if i % 3 == 0 else 0.8 + 0.1 * i),
+            top_k=(8 if i % 3 == 1 else 0), seed=400 + i)))
+    return out
+
+
+def test_spec_scheduler_bytematch_plain_dense(pair):
+    target, spec = pair
+    _, want = _sched_run(target, _workload())
+    s, got = _sched_run(spec, _workload())
+    assert got == want
+    st = s.speculation_stats()
+    assert st["spec_ticks"] > 0 and st["proposed_tokens"] > 0
+
+
+def test_spec_scheduler_bytematch_plain_paged(paged_pair):
+    target, spec = paged_pair
+    _, want = _sched_run(target, _workload())
+    s, got = _sched_run(spec, _workload())
+    assert got == want
+    # all pages released on finish: refcounts exact
+    assert s.pager.allocator.used_pages == len(s.pager.prefix)
+
+
+def test_spec_request_opt_out_field_respected(pair):
+    _, spec = pair
+    work = [([1, 2, 3], SamplingParams(max_new_tokens=6, seed=31,
+                                       temperature=0.8)),
+            ([4, 5], SamplingParams(max_new_tokens=6, speculation=False))]
+    s, got = _sched_run(spec, work, num_slots=2)
+    reqs = s.completed
+    opted_out = [r for r in reqs if not r.sampling.speculation]
+    assert opted_out and all(r.spec_proposed == 0 for r in opted_out)
+    opted_in = [r for r in reqs if r.sampling.speculation]
+    assert any(r.spec_proposed > 0 for r in opted_in)
+
+
+def test_spec_park_resume_and_deadline_mid_window(paged_pair):
+    """Park/resume and deadline eviction land BETWEEN verify windows (the
+    scheduler reaps before each tick); streams stay byte-identical and
+    pager refcounts come back exact."""
+    target, spec = paged_pair
+
+    def drive(engine):
+        s = ContinuousBatchingScheduler(engine, num_slots=2)
+        a = s.submit([5, 6, 7], sampling=SamplingParams(
+            max_new_tokens=14, temperature=0.9, seed=42))
+        b = s.submit([8, 9], sampling=SamplingParams(max_new_tokens=14))
+        for _ in range(3):
+            s.step()
+        s.pause(a)
+        for _ in range(2):
+            s.step()
+        assert s.resume(a)
+        s.run()
+        return s, [a.output, b.output]
+
+    ps, spec_out = drive(spec)
+    ds, plain_out = drive(target)
+    assert spec_out == plain_out
+    assert ps.pager.allocator.used_pages == len(ps.pager.prefix)
+
+    class _Ctx:
+        priority = "interactive"
+
+        def __init__(self):
+            self.deadline = None
+
+        def expired(self, now):
+            return self.deadline is not None and now >= self.deadline
+
+    s = ContinuousBatchingScheduler(spec, num_slots=2)
+    ctx = _Ctx()
+    victim = s.submit([3, 1, 4], sampling=SamplingParams(
+        max_new_tokens=40, temperature=0.9, seed=9), ctx=ctx)
+    survivor = s.submit([2, 7], sampling=SamplingParams(max_new_tokens=8))
+    for _ in range(2):
+        s.step()
+    ctx.deadline = 0.0                       # expires mid-stream
+    s.run()
+    assert victim.finish_reason == "deadline"
+    assert survivor.done and len(survivor.output) == 8
+    assert victim.pages is None              # released on eviction
+    assert s.pager.allocator.used_pages == len(s.pager.prefix)
+
+
+def test_spec_compiled_steps_flat_across_mixed_traffic(pair):
+    """Satellite: after warm(), mixed speculative/non-speculative traffic
+    adds NO compiled decode-step variants (level-1 rides the target's own
+    fused step; each window size compiled once up front)."""
+    from repro.core.scheduler import SchedulerService
+    _, spec = pair
+    svc = SchedulerService(spec, num_slots=2)
+    try:
+        svc.warm(seq_lens=[16], group_sizes=[1, 2])
+        compiled = spec.decode_cache_size()
+        for i, sp in enumerate([
+                SamplingParams(temperature=0.0, max_new_tokens=5),
+                SamplingParams(temperature=0.9, seed=1, max_new_tokens=6,
+                               speculation=False),
+                SamplingParams(temperature=1.3, top_k=4, seed=2,
+                               max_new_tokens=5),
+                SamplingParams(temperature=0.5, top_p=0.7, seed=3,
+                               max_new_tokens=6, speculation=False)]):
+            svc.submit_and_wait([[1 + i, 2, 3]], sampling=sp)
+        # the contract is RELATIVE flatness: warm() compiled every window
+        # level and the level-1 path rides the target's own fused step,
+        # so mixed traffic afterwards adds zero programs.  (No absolute
+        # bound — the module-scoped engine accumulates batch-shape
+        # variants across tests.)
+        assert spec.decode_cache_size() == compiled
+        st = svc.stats()
+        assert st["speculation"]["enabled"] is True
+        assert st["decode"]["compiled_steps"] == compiled
+    finally:
+        svc.close()
+
+
+def test_spec_adaptive_backoff_on_zero_acceptance(pair):
+    """A draft that never agrees (random 1-layer model, stochastic rows)
+    drives acceptance to ~0: the controller must back off to level 1 and
+    the stream must STILL byte-match the sequential reference."""
+    target, spec = pair
+    work = [([2 + i, 3, 4], SamplingParams(
+        max_new_tokens=40, temperature=1.1, seed=500 + i))
+        for i in range(2)]
+    s, got = _sched_run(spec, work, num_slots=2)
+    _, want = _sched_run(target, work, num_slots=2)
+    assert got == want
+    st = s.speculation_stats()
+    assert st["k_hist"].get("1", 0) > 0      # plain ticks happened
+
+
+def test_spec_engine_rejects_incompatible_pairs():
+    (cfg, model, params), (dcfg, dmodel, dparams) = _models()
+    t_dense = InferenceEngine(model, params, max_len=64, max_batch=4)
+    d_win = InferenceEngine(dmodel, dparams, max_len=64, max_batch=4,
+                            window=32)
+    with pytest.raises(ValueError, match="sliding window"):
+        SpeculativeEngine(t_dense, d_win)
+    d_len = InferenceEngine(dmodel, dparams, max_len=32, max_batch=4)
+    with pytest.raises(ValueError, match="max_len"):
+        SpeculativeEngine(t_dense, d_len)
+    t_paged = PagedInferenceEngine(model, params, max_len=64, max_batch=4,
+                                   page_size=16)
+    d_dense = InferenceEngine(dmodel, dparams, max_len=64, max_batch=4)
+    with pytest.raises(ValueError, match="paged"):
+        SpeculativeEngine(t_paged, d_dense)
