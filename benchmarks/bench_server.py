@@ -20,6 +20,14 @@ Three scenarios:
     ``--junit``) assert both decisions happened, were auditable at
     GET /v1/slo AND as sealed flight-recorder traces, and that the
     usage ledger attributed the traffic per version.
+  * chaos                    — fault-tolerance drill: a 3-replica
+    generate plane under a seeded fault schedule (replica killed, replica
+    stalled past the stall-kill threshold, injected step fault) while
+    seeded streams decode and open-loop infer traffic runs beside them.
+    Self-checks: zero admitted failures, failed-over streams
+    byte-identical to the unfaulted reference, killed replicas cordoned
+    and auto-restarted to ready, and every injected fault accounted for
+    in /metrics and the flight-recorder failover spans.
   * rest_overload_4x         — OPEN-LOOP arrivals at ~4x the endpoint's
     measured closed-loop capacity against a tight admission budget.
     Requests are counted HONESTLY: admitted vs shed (429) vs
@@ -389,6 +397,152 @@ def run_slo_canary(timeout_s: float = 30.0) -> None:
         srv.stop()
 
 
+def run_chaos(timeout_s: float = 60.0) -> None:
+    """Chaos drill: a 3-replica generate plane under a SEEDED fault
+    schedule — one replica killed outright, one stalled mid-decode past
+    the stall-kill threshold, one raising an injected step fault — while
+    six seeded streams decode and an open-loop infer load runs beside
+    them.  The acceptance bar: zero admitted requests fail, every
+    failed-over stream is byte-identical to the unfaulted reference run
+    (the fold_in rng contract), the killed replicas are cordoned and
+    auto-restarted back to ready, and /metrics + the flight recorder
+    account for every injected fault."""
+    engine = _build_gen_engine(seed=0, max_len=96, max_batch=8)
+    n_streams, n_tok = 6, 32
+    prompt = [2, 7, 1, 8]
+
+    # unfaulted reference: same engine object, same seeds => the chaos
+    # run's streams must reproduce these tokens exactly
+    ref_app = FlexServeApp(engine=engine, num_slots=4)
+    ref_app.generation.entry_for().service.warm()
+    ref_srv = FlexServeServer(ref_app).start()
+    refs = {}
+    cl = FlexServeClient(*ref_srv.address, retries=0)
+    for s in range(n_streams):
+        refs[s] = [e["token"] for e in
+                   cl.generate_stream(prompt, max_new_tokens=n_tok,
+                                      temperature=0.8, seed=1000 + s)
+                   if "token" in e]
+    cl.close()
+    ref_srv.stop()
+
+    # the seeded schedule: deterministic sites, not wall-clock chance.
+    # replica_kill is sweep-indexed (fires on the monitor's 3rd look at
+    # replica 1); decode_tick/engine_step are tick-indexed, so they fire
+    # while a stream is decoding BY CONSTRUCTION.
+    fault_config = {"faults": [
+        {"site": "replica_kill", "replica": 1, "at": 3, "count": 1},
+        {"site": "decode_tick", "action": "stall", "replica": 2,
+         "at": 12, "delay_ms": 1200, "count": 1},
+        {"site": "engine_step", "replica": 0, "at": 6, "count": 1,
+         "message": "injected step fault"},
+    ]}
+    registry, members = _build_members(2, deep_narrow=True)
+    app = FlexServeApp(registry, Ensemble(members, max_batch=16), engine,
+                       coalesce=True, max_wait_ms=2.0, num_slots=4,
+                       replicas=3, fault_config=fault_config,
+                       replica_options={"health_interval_s": 0.02,
+                                        "stall_kill_s": 0.4,
+                                        "max_failovers": 3})
+    srv = FlexServeServer(app).start()
+    host, port = srv.address
+    t_start = time.perf_counter()
+    stream_out: dict = {}
+    stream_errs: List[str] = []
+    lock = threading.Lock()
+
+    def run_stream(s: int) -> None:
+        scl = FlexServeClient(host, port, retries=0)
+        try:
+            toks = [e["token"] for e in
+                    scl.generate_stream(prompt, max_new_tokens=n_tok,
+                                        temperature=0.8, seed=1000 + s,
+                                        trace_id=f"chaos-s{s}")
+                    if "token" in e]
+            with lock:
+                stream_out[s] = toks
+        except Exception as e:           # noqa: BLE001 — tallied below
+            with lock:
+                stream_errs.append(f"stream {s}: {type(e).__name__}: {e}")
+        finally:
+            scl.close()
+
+    try:
+        threads = [threading.Thread(target=run_stream, args=(s,),
+                                    daemon=True)
+                   for s in range(n_streams)]
+        for t in threads:
+            t.start()
+        # concurrent open-loop infer load on the SAME endpoint: the chaos
+        # is on the decode plane, the infer plane must not notice
+        payload = {"tokens": np.ones((1, 8), np.int32).tolist()}
+        load = open_loop_round(host, port, payload, rate_rps=25.0,
+                               n_req=50, n_workers=8)
+        for t in threads:
+            t.join(timeout=timeout_s)
+        mcl = FlexServeClient(host, port, retries=0)
+
+        _check("chaos_zero_admitted_failures",
+               load["erred"] == 0 and not stream_errs,
+               f"infer erred={load['erred']} "
+               f"stream_errors={stream_errs[:3]}")
+        diverged = [s for s in range(n_streams)
+                    if stream_out.get(s) != refs[s]]
+        _check("chaos_streams_byte_identical", not diverged,
+               f"streams {diverged} diverged from the unfaulted "
+               f"reference (failover must resume on the original key)")
+
+        # recovery: both killed replicas cordoned + restarted to ready
+        deadline = time.perf_counter() + timeout_s
+        summ = mcl.replicas()
+        while time.perf_counter() < deadline:
+            summ = mcl.replicas()
+            if summ["restarts"] >= 2 and summ["ready"] == 3:
+                break
+            time.sleep(0.1)
+        _check("chaos_replicas_recovered",
+               summ["kills"] >= 2 and summ["restarts"] >= 2
+               and summ["ready"] == 3,
+               f"kills={summ['kills']} restarts={summ['restarts']} "
+               f"ready={summ['ready']} (want 2 kills, 2 restarts, "
+               f"3 ready)")
+        _check("chaos_failovers_engaged", summ["failovers"] >= 1,
+               f"failovers={summ['failovers']} — no stream was ever "
+               f"resubmitted")
+
+        # accounting: every injected fault visible in /metrics ...
+        m = mcl.metrics()
+        fs = m["faults"]
+        sites = set(fs["sites"])
+        _check("chaos_fault_accounting",
+               fs["enabled"] and fs["fired_total"] >= 3
+               and {"replica_kill", "decode_tick",
+                    "engine_step"} <= sites,
+               f"fired_total={fs['fired_total']} sites={sorted(sites)}")
+        # ... and the failover visible as spans in the stream traces
+        traced = []
+        for s in range(n_streams):
+            try:
+                tr = mcl.trace(f"chaos-s{s}")
+            except HTTPStatusError:
+                continue
+            traced += [e["name"] for e in tr["events"]
+                       if e["name"].startswith("failover")]
+        _check("chaos_failover_traced", "failover" in traced,
+               f"no failover event in any stream trace: {traced}")
+
+        emit("rest_chaos_drill", (time.perf_counter() - t_start) * 1e6,
+             f"streams={len(stream_out)}/{n_streams} "
+             f"infer_admitted={load['admitted']} shed={load['shed']} "
+             f"kills={summ['kills']} restarts={summ['restarts']} "
+             f"failovers={summ['failovers']} "
+             f"evacuations={summ['evacuations']} "
+             f"faults_fired={fs['fired_total']}")
+        mcl.close()
+    finally:
+        srv.stop()
+
+
 def run() -> None:
     # --- scenario 1: thread-count sweep on the coalescing server -------------
     registry, members = _build_members()
@@ -457,7 +611,8 @@ def run() -> None:
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scenario", choices=("all", "overload", "slo_canary"),
+    ap.add_argument("--scenario",
+                    choices=("all", "overload", "slo_canary", "chaos"),
                     default="all")
     ap.add_argument("--clients", type=int, default=8)
     ap.add_argument("--rate-factor", type=float, default=4.0)
@@ -480,6 +635,8 @@ def main(argv=None) -> int:
                          max_queue=args.max_queue)
         elif args.scenario == "slo_canary":
             run_slo_canary(timeout_s=args.timeout_s)
+        elif args.scenario == "chaos":
+            run_chaos(timeout_s=args.timeout_s)
         else:
             run()
     finally:

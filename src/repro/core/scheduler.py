@@ -184,10 +184,14 @@ class ContinuousBatchingScheduler:
                  interactive_weight: int = 4,
                  device_sampling: bool = True,
                  max_prefill_batch: Optional[int] = None,
-                 client_weights: Optional[Dict[str, float]] = None):
+                 client_weights: Optional[Dict[str, float]] = None,
+                 faults: Optional[Any] = None):
         self.engine = engine
         self.num_slots = num_slots
         self.max_pending = max_pending
+        # fault-injection hook (a FaultInjector or replica-scoped view);
+        # fired at the decode_tick / engine_step / prefill sites
+        self.faults = faults
         self.interactive_weight = max(1, interactive_weight)
         self.device_sampling = device_sampling
         # per-client weighted fair dequeue (start-time fair queueing):
@@ -327,12 +331,22 @@ class ContinuousBatchingScheduler:
                extras: Optional[Dict[str, Any]] = None,
                sampling: Optional[SamplingParams] = None,
                sink: Optional[TokenSink] = None,
-               ctx: Optional[Any] = None) -> Request:
+               ctx: Optional[Any] = None,
+               resume_output: Optional[Sequence[int]] = None,
+               rng_key: Optional[np.ndarray] = None) -> Request:
         """Enqueue one prompt.  ``sampling`` (when given) carries the
         decode config — its max_new_tokens/eos_id override the legacy
         positional knobs — and every request gets its own sampler.
         ``ctx`` routes the request into its priority class's deque; a full
-        pending deque raises SchedulerBusy instead of growing unboundedly."""
+        pending deque raises SchedulerBusy instead of growing unboundedly.
+
+        ``resume_output``/``rng_key`` is the replica-failover resume path:
+        the request starts with that output already emitted (admission
+        prefills prompt+output with the sampling counter at len(output) —
+        the same recompute-resume a preempted request takes) and keeps the
+        ORIGINAL base key, so the continuation draws the exact tokens the
+        failed replica would have (an unseeded request must not re-resolve
+        fresh entropy mid-stream)."""
         if self.max_pending is not None and self.pending >= self.max_pending:
             raise SchedulerBusy(
                 f"pending deque at its bound ({self.pending}"
@@ -344,7 +358,11 @@ class ContinuousBatchingScheduler:
                       sampling.max_new_tokens, sampling.eos_id,
                       extras, sampling, sink, ctx)
         req.sampler = sampling.sampler()
-        req.base_key = base_key(sampling.resolve_seed())
+        req.base_key = (np.asarray(rng_key, np.uint32)
+                        if rng_key is not None
+                        else base_key(sampling.resolve_seed()))
+        if resume_output:
+            req.output = list(resume_output)
         req.submitted_at = time.perf_counter()
         req.trace = getattr(ctx, "trace", None)
         if req.trace is not None:
@@ -416,6 +434,11 @@ class ContinuousBatchingScheduler:
         """Reap cancellations/pauses/expiries + admit-from-queue + one
         decode step.  Returns every request that finished during this
         tick."""
+        if self.faults is not None:
+            # "decode_tick": stall/slow sleeps inside the driver loop (a
+            # wedged decode loop the health monitor must notice); "raise"
+            # poisons the tick like any driver error
+            self.faults.fire("decode_tick", tick=self.steps)
         t_tick = time.perf_counter()
         finished = self._reap()
         prefill_s = self._admit(finished)
@@ -424,6 +447,10 @@ class ContinuousBatchingScheduler:
             self._ensure_decode_pages()
         if self.active == 0:
             return finished
+        if self.faults is not None:
+            # "engine_step": a poisoned device step — raises after
+            # admission so the in-flight batch takes the failure
+            self.faults.fire("engine_step", tick=self.steps)
         if self.paged:
             self._sync_paged_state()
         spec_w = self._spec_window_for_tick()
@@ -706,6 +733,9 @@ class ContinuousBatchingScheduler:
         request's prompt + any output decoded before a pause — recompute
         preemption), first tokens sampled on device, and every surviving
         row inserted into the pooled state by one jitted scatter."""
+        if self.faults is not None:
+            # "prefill": simulated prefill OOM before the forward
+            self.faults.fire("prefill", group=len(reqs))
         n = len(reqs)
         B = self.engine.batch_buckets.bucket_for(n)
         tokens = np.zeros((B, S), np.int32)
@@ -875,6 +905,8 @@ class ContinuousBatchingScheduler:
         its KV straight into its freshly allocated pool pages — no group
         state, no slot scatter.  Newly completed full pages are published
         to the prefix cache so identical prefixes prefill once."""
+        if self.faults is not None:
+            self.faults.fire("prefill", group=len(items))
         ps = self.engine.page_size
         n = len(items)
         B = self.engine.batch_buckets.bucket_for(n)
@@ -1334,18 +1366,29 @@ class SchedulerService:
                  max_pending: Optional[int] = None,
                  interactive_weight: int = 4,
                  device_sampling: bool = True,
-                 client_weights: Optional[Dict[str, float]] = None):
+                 client_weights: Optional[Dict[str, float]] = None,
+                 faults: Optional[Any] = None):
         self.scheduler = ContinuousBatchingScheduler(
             engine, num_slots, max_pending=max_pending,
             interactive_weight=interactive_weight,
             device_sampling=device_sampling,
-            client_weights=client_weights)
+            client_weights=client_weights,
+            faults=faults)
         self._lock = threading.Lock()
         self._work = threading.Condition(self._lock)
         self._events: Dict[int, threading.Event] = {}
         self._errors: Dict[int, BaseException] = {}
         self._closed = False
         self._retiring = False
+        # health signals read LOCK-FREE by the replica monitor (a stalled
+        # driver holds the service lock, so the monitor must never take
+        # it): driver-error scoring, last completed tick's wall time, and
+        # a monotonic heartbeat stamp
+        self.driver_errors = 0
+        self.consecutive_errors = 0
+        self.last_error: Optional[BaseException] = None
+        self.last_tick_s = 0.0
+        self.last_step_at = time.monotonic()
         self._thread = threading.Thread(target=self._run, daemon=True,
                                         name="flexserve-scheduler")
         self._thread.start()
@@ -1353,6 +1396,10 @@ class SchedulerService:
     @property
     def engine(self) -> InferenceEngine:
         return self.scheduler.engine
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
 
     def submit_and_wait(self, prompts: Sequence[Sequence[int]], *,
                         max_new_tokens: int = 32,
@@ -1409,16 +1456,27 @@ class SchedulerService:
     def submit_request(self, prompt: Sequence[int], *,
                        sampling: SamplingParams,
                        sink: TokenSink,
-                       ctx: Optional[Any] = None) -> Request:
+                       ctx: Optional[Any] = None,
+                       resume_output: Optional[Sequence[int]] = None,
+                       rng_key: Optional[np.ndarray] = None,
+                       on_reassign: Optional[Callable[[Request], None]]
+                       = None) -> Request:
         """Admit one streaming request; its ``sink`` fires per token from
         the driver thread (it must never block).  The caller observes
-        completion through the sink's ``done`` flag."""
-        self.scheduler.engine.seq_buckets.bucket_for(len(prompt))
+        completion through the sink's ``done`` flag.  ``resume_output``/
+        ``rng_key`` is the failover-resume path (see ``submit``);
+        ``on_reassign`` is accepted for interface parity with the replica
+        pool — a single service never reassigns."""
+        del on_reassign
+        self.scheduler.engine.seq_buckets.bucket_for(
+            len(prompt) + len(resume_output or ()))
         with self._lock:
             if self._closed or self._retiring:
                 raise RuntimeError("scheduler service is closed")
             req = self.scheduler.submit(prompt, sampling=sampling,
-                                        sink=sink, ctx=ctx)
+                                        sink=sink, ctx=ctx,
+                                        resume_output=resume_output,
+                                        rng_key=rng_key)
             self._work.notify()
             return req
 
@@ -1541,8 +1599,16 @@ class SchedulerService:
                 return False
             time.sleep(0.002)
 
-    def stats(self) -> Dict[str, Any]:
-        with self._lock:
+    def stats(self, lock_timeout: Optional[float] = None
+              ) -> Optional[Dict[str, Any]]:
+        """Snapshot scheduler stats.  With ``lock_timeout`` set, returns
+        ``None`` instead of blocking when the driver holds the lock (a
+        stalled replica must not wedge ``/metrics``)."""
+        if lock_timeout is None:
+            self._lock.acquire()
+        elif not self._lock.acquire(timeout=lock_timeout):
+            return None
+        try:
             s = self.scheduler
             lat50, lat95 = s.latency_res.percentiles(0.50, 0.95)
             ttft50, ttft95 = s.ttft_res.percentiles(0.50, 0.95)
@@ -1603,12 +1669,26 @@ class SchedulerService:
                 "inter_token_ms_hist": h["inter_token_ms"].snapshot(),
                 "queue_wait_ms_hist": h["queue_wait_ms"].snapshot(),
             }
+        finally:
+            self._lock.release()
 
     def close(self) -> None:
         with self._lock:
             self._closed = True
             self._work.notify()
         self._thread.join(timeout=5.0)
+
+    def abandon(self) -> None:
+        """Mark the service closed WITHOUT taking the lock.
+
+        A stalled or wedged driver holds ``_lock`` indefinitely, so
+        ``close()`` would block behind it; the replica pool instead
+        abandons the service — the flag flip is atomic, an idle driver
+        notices within its 100ms wait tick, and a wedged one fails its
+        in-flight requests whenever (if ever) the stall releases.  The
+        daemon thread leaks only if the stall never ends."""
+        self._closed = True
+        self._retiring = True
 
     def _fail_in_flight(self, err: BaseException) -> None:
         """Fail every queued/active request (driver error or close):
@@ -1650,12 +1730,22 @@ class SchedulerService:
                         "scheduler service closed with requests in flight"))
                     return
                 try:
+                    t0 = time.monotonic()
                     finished = self.scheduler.step()
+                    now = time.monotonic()
+                    self.last_tick_s = now - t0
+                    self.last_step_at = now
+                    self.consecutive_errors = 0
                     events = [self._events.pop(r.req_id) for r in finished
                               if r.req_id in self._events]
                 except BaseException as err:  # noqa: BLE001 — keep driving
                     # Fail every in-flight request but keep the driver
                     # alive: a poisoned batch must not hang future ones.
+                    # The error counters feed the replica health monitor's
+                    # consecutive-error scoring.
+                    self.driver_errors += 1
+                    self.consecutive_errors += 1
+                    self.last_error = err
                     self._fail_in_flight(err)
                     continue
             for ev in events:

@@ -27,6 +27,7 @@ from repro.configs import ASSIGNED_ARCHS, get_config, reduce_for_smoke
 from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
                         ModelRegistry, SpeculativeEngine)
 from repro.models.build import build_model
+from repro.core.faults import FaultInjector
 from repro.serving import (FlexServeApp, FlexServeServer, ModelManager,
                            ModelStore)
 
@@ -39,7 +40,8 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
               flight_recorder_size: int = 256,
               profile_dir=None, slo_config=None,
               client_weights=None, draft_model=None,
-              draft_layers=None, spec_window: int = 4) -> FlexServeApp:
+              draft_layers=None, spec_window: int = 4,
+              replicas: int = 1, fault_config=None) -> FlexServeApp:
     registry = ModelRegistry()
     members = []
     engine = None
@@ -87,7 +89,8 @@ def build_app(arch_names, *, num_classes: int = 16, max_len: int = 256,
                         trace=trace,
                         flight_recorder_size=flight_recorder_size,
                         profile_dir=profile_dir, slo_policies=slo_config,
-                        client_weights=client_weights)
+                        client_weights=client_weights,
+                        replicas=replicas, fault_config=fault_config)
 
 
 def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
@@ -99,7 +102,8 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                     flight_recorder_size: int = 256,
                     profile_dir=None, slo_config=None,
                     client_weights=None, draft_model=None,
-                    draft_layers=None, spec_window: int = 4
+                    draft_layers=None, spec_window: int = 4,
+                    replicas: int = 1, fault_config=None
                     ) -> FlexServeApp:
     """Store-backed startup: seed the store on first run, then serve the
     LATEST published version of every member through a ModelManager.  The
@@ -129,7 +133,11 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
         if engine_member is None and cfg.family in ("dense", "moe", "ssm",
                                                     "hybrid"):
             engine_member = reg_name
-    manager = ModelManager(store, max_batch=max_batch)
+    # one injector shared end-to-end: checkpoint loads (manager), decode
+    # drivers + replica monitor (pool), and the stream writer (handler)
+    # all draw from the same deterministic schedule
+    faults = FaultInjector.load(fault_config)
+    manager = ModelManager(store, max_batch=max_batch, faults=faults)
     manager.bootstrap(member_names)
     app = FlexServeApp(manager=manager, num_slots=num_slots,
                        max_queue=max_queue,
@@ -138,7 +146,8 @@ def build_store_app(arch_names, store_dir: str, *, num_classes: int = 16,
                        trace=trace,
                        flight_recorder_size=flight_recorder_size,
                        profile_dir=profile_dir, slo_policies=slo_config,
-                       client_weights=client_weights)
+                       client_weights=client_weights,
+                       replicas=replicas, fault_config=faults)
     if engine_member is not None and app.generation is not None:
         draft_member = None
         if draft_model is not None:
@@ -227,6 +236,18 @@ def main(argv=None) -> int:
                     help="max draft tokens proposed per decode tick; the "
                          "scheduler adapts the live window to measured "
                          "acceptance")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="generate-plane scheduler replicas behind the "
+                         "endpoint; >1 enables the health-checked replica "
+                         "pool with automatic cordon/restart and "
+                         "transparent stream failover (GET /v1/replicas, "
+                         "POST /v1/replicas/{id}/cordon|uncordon)")
+    ap.add_argument("--fault-config", default=None, metavar="FILE",
+                    help="JSON fault schedule ({'faults': [...]}) for "
+                         "deterministic chaos drills: inject raises/"
+                         "stalls/drops at named sites (engine_step, "
+                         "decode_tick, prefill, engine_install, "
+                         "checkpoint_load, socket_drop, replica_kill)")
     ap.add_argument("--client-weight", action="append", default=None,
                     metavar="TAG=W",
                     help="per-client-tag fair-share weight (repeatable); "
@@ -258,7 +279,8 @@ def main(argv=None) -> int:
               flight_recorder_size=args.flight_recorder_size,
               profile_dir=args.profile_dir, slo_config=args.slo_config,
               client_weights=client_weights, draft_model=args.draft_model,
-              draft_layers=args.draft_layers, spec_window=args.spec_window)
+              draft_layers=args.draft_layers, spec_window=args.spec_window,
+              replicas=args.replicas, fault_config=args.fault_config)
     if args.model_store:
         app = build_store_app(args.ensemble, args.model_store, **kw)
     else:
@@ -271,6 +293,12 @@ def main(argv=None) -> int:
         # manager's load_engine already warmed before flipping the alias.
         warm_s = app.generation.entry_for().service.warm()
         print(f"[serve] decode path warm in {warm_s:.1f}s")
+    if args.replicas > 1:
+        print(f"[serve] replica pool: {args.replicas} decode replicas "
+              f"(health-checked; GET /v1/replicas)")
+    if args.fault_config:
+        print(f"[serve] chaos: fault schedule armed from "
+              f"{args.fault_config}")
     server = FlexServeServer(app, host=args.host, port=args.port)
     host, port = server.address
     print(f"[serve] FlexServe endpoint on http://{host}:{port} — "

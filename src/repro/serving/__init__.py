@@ -1,27 +1,38 @@
+from repro.core.faults import FaultInjector, FaultSpec, InjectedFault
 from repro.core.slo import (SLIStore, SLOController, SLOPolicy, UsageLedger,
                             load_policies)
 from repro.serving.admission import (AdmissionController, DeadlineError,
                                      RequestContext, ShedError, make_context)
-from repro.serving.client import FlexServeClient, HTTPStatusError
+from repro.serving.client import (BadRequestError, ConflictError,
+                                  DeadlineExceededError, FlexServeClient,
+                                  HTTPStatusError, InternalServerError,
+                                  NotFoundError, QueueFullError,
+                                  UnavailableError)
 from repro.serving.coalesce import BatchCoalescer, CoalesceError
 from repro.serving.generate import (GenerationError, GenerationService,
                                     GenerationStream)
 from repro.serving.lifecycle import (LifecycleError, ModelManager,
                                      default_engine_factory, default_factory)
 from repro.serving.modelstore import ModelStore, StoreError
+from repro.serving.replica import Replica, ReplicaPool
 from repro.serving.server import FlexServeApp, FlexServeServer
 from repro.serving.telemetry import (DeviceProfiler, FlightRecorder,
                                      Histogram, Reservoir, Trace,
                                      prometheus_exposition)
 
 __all__ = ["FlexServeApp", "FlexServeServer", "FlexServeClient",
-           "HTTPStatusError", "BatchCoalescer", "CoalesceError",
+           "HTTPStatusError", "BadRequestError", "NotFoundError",
+           "ConflictError", "QueueFullError", "UnavailableError",
+           "DeadlineExceededError", "InternalServerError",
+           "BatchCoalescer", "CoalesceError",
            "AdmissionController", "RequestContext", "ShedError",
            "DeadlineError", "make_context",
            "ModelStore", "StoreError",
            "ModelManager", "LifecycleError", "default_factory",
            "default_engine_factory", "GenerationError", "GenerationService",
            "GenerationStream",
+           "ReplicaPool", "Replica",
+           "FaultInjector", "FaultSpec", "InjectedFault",
            "FlightRecorder", "Trace", "Histogram", "Reservoir",
            "DeviceProfiler", "prometheus_exposition",
            "SLIStore", "SLOController", "SLOPolicy", "UsageLedger",

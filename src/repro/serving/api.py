@@ -33,9 +33,17 @@ Request plane (every inference route; all fields optional):
     ``X-FlexServe-Priority``, ``X-FlexServe-Deadline-Ms``,
     ``X-FlexServe-Client``, ``X-Request-Id`` (body wins).
 
-    Overload responses: 429 {"error": ...} with a ``Retry-After``
-    seconds header (may be fractional) when a queue's budget is full;
-    504 {"error": ...} on a missed deadline.
+    Every non-2xx response body is the structured error taxonomy:
+        {"error": {"code": "queue_full"|"client_quota"|"bad_request"|
+                           "not_found"|"conflict"|"unavailable"|
+                           "deadline_exceeded"|"internal"|...,
+                   "message": str, "retryable": bool,
+                   "trace_id": str|null}}
+    Clients dispatch typed errors off ``code`` and retry ONLY when
+    ``retryable`` is true.  Overload responses: 429 code "queue_full"
+    (or "client_quota") with a ``Retry-After`` seconds header (may be
+    fractional) when a queue's budget is full; 504 code
+    "deadline_exceeded" on a missed deadline.
 
 POST /v1/generate  {"prompts": [[1,2,3], ...], "max_new_tokens": 16,
                     "temperature"?: 0.8, "top_k"?: 40, "top_p"?: 0.95,
@@ -91,10 +99,30 @@ POST /v1/engines/{name}/rollback {"alias"?: "stable"}
     streams drain on the old engine.  /v1/generate targets an engine
     alias per request via "target".
 
+Replica pool surface (with ``--replicas N``; see repro.serving.replica):
+
+GET  /v1/replicas  -> {"replicas": {enabled, count, ready, warming,
+                       degraded, cordoned, restarting, cordoned_ids,
+                       restarts, kills, cordons, failovers,
+                       failover_failures, evacuations,
+                       per_replica: {id: {state, restarts, active,
+                                          pending, driver_errors, ...}}}}
+POST /v1/replicas/{id}/cordon    -> {"replica": {...}}
+    Drain-aware operator cordon: the replica takes no new work, its
+    in-flight requests finish in place.  404 unknown id; 409 without a
+    replica pool (single-service mode).
+POST /v1/replicas/{id}/uncordon  -> {"replica": {...}}
+    Returns the replica to ready (restarting its service first if it
+    was auto-killed).
+
 GET  /health       -> {"status": "ok"}            (liveness: process is up)
-GET  /healthz      -> 200 {"status": "ready"} | 503 {"error": ...}
-                      (readiness: >=1 loaded model, coalescer alive,
-                       not shutting down)
+GET  /healthz      -> 200 {"status": "ready", "replicas": {...}}
+                      | 503 {"error": ...}
+                      (readiness: >=1 loaded model, coalescer alive, not
+                       shutting down, AND >=1 generation replica ready —
+                       the payload aggregates per-replica health: ready
+                       count + cordoned list — so external LBs stop
+                       routing to a dead pool)
 GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                        "coalesce": {batches_formed, rows_total,
                                     mean_rows_per_batch, max_rows_per_batch,
@@ -163,6 +191,13 @@ GET  /metrics      -> {"uptime_s", "requests", "routes": {...},
                        "slo": {policies, evaluations, decisions,
                                promotions, rollbacks, breaches}
                               (zeroed without an SLO config),
+                       "replicas": {enabled, count, ready, degraded,
+                                    cordoned, restarts, kills, failovers,
+                                    evacuations, per_replica: {...}}
+                                   (zeroed without a replica pool),
+                       "faults": {enabled, specs, fired_total,
+                                  sites: {site: {specs, hits, fired}}}
+                                 (zeroed without --fault-config),
                        "telemetry": {capacity, in_flight, completed,
                                      completed_total, leaked_total}}
 
@@ -265,15 +300,67 @@ import numpy as np
 from repro.core.sampling import SamplingError, SamplingParams
 
 
+# status -> (default error code, retryable) for the structured error
+# taxonomy: every non-2xx body is {"error": {code, message, retryable,
+# trace_id}} and clients retry ONLY retryable codes (instead of
+# string-matching on the status line)
+_STATUS_CODES: Dict[int, "tuple[str, bool]"] = {
+    400: ("bad_request", False),
+    403: ("forbidden", False),
+    404: ("not_found", False),
+    405: ("method_not_allowed", False),
+    408: ("timeout", True),
+    409: ("conflict", False),
+    413: ("payload_too_large", False),
+    429: ("queue_full", True),
+    499: ("client_closed", False),
+    500: ("internal", False),
+    501: ("not_implemented", False),
+    503: ("unavailable", True),
+    504: ("deadline_exceeded", False),
+}
+
+
+def default_error_code(status: int) -> "tuple[str, bool]":
+    """(code, retryable) defaults for a bare status."""
+    if status in _STATUS_CODES:
+        return _STATUS_CODES[status]
+    if 400 <= status < 500:
+        return "bad_request", False
+    return "internal", False
+
+
 class ApiError(Exception):
-    """Route-layer failure; ``headers`` carries extras like Retry-After."""
+    """Route-layer failure; ``headers`` carries extras like Retry-After.
+
+    ``code``/``retryable`` feed the structured error taxonomy; both
+    default from the status so existing ``raise ApiError(...)`` sites
+    stay correct without changes."""
 
     def __init__(self, status: int, message: str,
-                 headers: Optional[Dict[str, str]] = None):
+                 headers: Optional[Dict[str, str]] = None,
+                 code: Optional[str] = None,
+                 retryable: Optional[bool] = None):
         super().__init__(message)
         self.status = status
         self.message = message
         self.headers = headers or {}
+        d_code, d_retry = default_error_code(status)
+        self.code = code if code is not None else d_code
+        self.retryable = retryable if retryable is not None else d_retry
+
+
+def error_body(err: ApiError,
+               trace_id: Optional[str] = None) -> Dict[str, Any]:
+    """The structured non-2xx body: every error response carries a
+    machine-readable code, whether a retry can help, and the trace id to
+    pull the request's timeline."""
+    return {"error": {
+        "code": err.code,
+        "message": err.message,
+        "retryable": err.retryable,
+        "trace_id": trace_id or err.headers.get("X-Request-Id"),
+    }}
 
 
 class JsonResponse:

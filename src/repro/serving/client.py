@@ -16,22 +16,33 @@ to the terminal ("done"/"error") event to keep the connection reusable;
 ``close()`` abandons a stream mid-flight (the server notices the
 disconnect and cancels the request).
 
-Resilience: the endpoint sheds overload as 429 (+ ``Retry-After``) and
-briefly 503s during hot swaps/startup.  Both are REJECTIONS — the server
-did no work — so the client retries them with capped exponential backoff
-plus jitter, honoring the server's ``Retry-After`` hint when present.
-Delivery metadata rides on the response object (``resp.attempts``).
-Probe routes (``health``/``healthz``) never retry: they exist to OBSERVE
-the 503.  A request that exhausts its retries raises ``HTTPStatusError``
-(a RuntimeError carrying ``.status`` and ``.retry_after_s``).
+Resilience: every non-2xx body carries the server's structured error
+taxonomy (``{"error": {"code", "message", "retryable", "trace_id"}}``).
+The client raises a TYPED error keyed off ``code`` (``QueueFullError``,
+``UnavailableError``, ...) and retries exactly the errors the server
+marked ``retryable`` — with capped exponential backoff plus jitter,
+honoring the ``Retry-After`` hint when present.  Unstructured bodies
+(older servers, proxies) fall back to the status-based
+``retry_statuses`` list.  Delivery metadata rides on the response object
+(``resp.attempts``).  Probe routes (``health``/``healthz``) never retry:
+they exist to OBSERVE the 503.
+
+Hedging (off by default): construct with ``hedge_ms=<float>`` or
+``hedge_ms="p95"`` and the idempotent unary routes (``infer``,
+``detect``) fire a BACKUP copy of any request still unanswered after the
+hedge delay, on its own connection; the first response wins and the
+loser's connection is torn down (the server sees a disconnect).  This
+trades duplicate work for tail latency — classic tail-at-scale hedging.
 """
 
 from __future__ import annotations
 
+import collections
 import datetime
 import email.utils
 import json
 import math
+import queue
 import random
 import socket
 import threading
@@ -69,13 +80,120 @@ def parse_retry_after(val: bytes) -> Optional[float]:
 
 
 class HTTPStatusError(RuntimeError):
-    """Non-200 response after any retries; carries the status code."""
+    """Non-200 response after any retries.
+
+    Carries the status code plus the server's structured error fields:
+    ``code`` (machine-readable taxonomy entry), ``retryable`` (whether
+    the server says a retry can help), ``trace_id`` (for ``trace()``),
+    and ``structured`` (False when the body wasn't a taxonomy body —
+    the retry decision then falls back to ``retry_statuses``)."""
 
     def __init__(self, status: int, message: str,
-                 retry_after_s: Optional[float] = None):
+                 retry_after_s: Optional[float] = None, *,
+                 code: Optional[str] = None,
+                 retryable: bool = False,
+                 trace_id: Optional[str] = None,
+                 structured: bool = False):
         super().__init__(message)
         self.status = status
         self.retry_after_s = retry_after_s
+        self.code = code or "internal"
+        self.retryable = retryable
+        self.trace_id = trace_id
+        self.structured = structured
+
+
+class BadRequestError(HTTPStatusError):
+    """``code: bad_request`` — the request itself is malformed."""
+
+
+class NotFoundError(HTTPStatusError):
+    """``code: not_found`` — unknown route/model/alias/trace."""
+
+
+class ConflictError(HTTPStatusError):
+    """``code: conflict`` — state precondition failed (409)."""
+
+
+class QueueFullError(HTTPStatusError):
+    """``code: queue_full`` — admission shed the request (retryable)."""
+
+
+class RequestTimeoutError(HTTPStatusError):
+    """``code: timeout`` — the server timed the request out (408)."""
+
+
+class ClientClosedError(HTTPStatusError):
+    """``code: client_closed`` — the server recorded a client abort."""
+
+
+class UnavailableError(HTTPStatusError):
+    """``code: unavailable`` — endpoint not servable right now
+    (startup, hot swap, zero ready replicas); retryable."""
+
+
+class DeadlineExceededError(HTTPStatusError):
+    """``code: deadline_exceeded`` — the request's own deadline passed
+    before the work finished; retrying cannot help THIS deadline."""
+
+
+class InternalServerError(HTTPStatusError):
+    """``code: internal`` — unexpected server-side failure."""
+
+
+# taxonomy code -> typed error class (unknown codes raise the base class)
+ERROR_TYPES: Dict[str, type] = {
+    "bad_request": BadRequestError,
+    "not_found": NotFoundError,
+    "conflict": ConflictError,
+    "queue_full": QueueFullError,
+    "timeout": RequestTimeoutError,
+    "client_closed": ClientClosedError,
+    "unavailable": UnavailableError,
+    "deadline_exceeded": DeadlineExceededError,
+    "internal": InternalServerError,
+}
+
+# status -> (code, retryable) fallback for unstructured bodies; mirrors
+# the server-side taxonomy so old/new clients classify identically
+_STATUS_FALLBACK: Dict[int, Tuple[str, bool]] = {
+    400: ("bad_request", False), 404: ("not_found", False),
+    405: ("not_found", False), 408: ("timeout", True),
+    409: ("conflict", False), 413: ("bad_request", False),
+    429: ("queue_full", True), 499: ("client_closed", False),
+    500: ("internal", False), 501: ("internal", False),
+    503: ("unavailable", True), 504: ("deadline_exceeded", False),
+}
+
+
+def make_error(status: int, raw: bytes, retry_after: Optional[float],
+               trace_id: Optional[str], context: str) -> HTTPStatusError:
+    """Parse a non-2xx body into the right typed error.  A structured
+    ``{"error": {...}}`` taxonomy body supplies code/retryable/trace_id
+    directly; anything else (legacy flat ``{"error": "msg"}``, proxies,
+    empty bodies) falls back to the status map with
+    ``structured=False``."""
+    try:
+        data = json.loads(raw or b"{}")
+    except ValueError:
+        data = {}
+    err = data.get("error") if isinstance(data, dict) else None
+    f_code, f_retry = _STATUS_FALLBACK.get(
+        status, ("bad_request" if 400 <= status < 500 else "internal",
+                 False))
+    if isinstance(err, dict) and "code" in err:
+        code = str(err["code"])
+        message = str(err.get("message", ""))
+        retryable = bool(err.get("retryable", f_retry))
+        trace_id = err.get("trace_id") or trace_id
+        structured = True
+    else:
+        code, retryable, structured = f_code, f_retry, False
+        message = str(err if err is not None else (data or raw[:200]))
+    cls = ERROR_TYPES.get(code, HTTPStatusError)
+    return cls(status, f"{context} -> {status} [{code}]: {message}",
+               retry_after, code=code, retryable=retryable,
+               trace_id=trace_id, structured=structured)
 
 
 class Response(dict):
@@ -199,12 +317,23 @@ class FlexServeClient:
     def __init__(self, host: str = "127.0.0.1", port: int = 8000,
                  timeout: float = 60.0, *, retries: int = 3,
                  backoff_s: float = 0.05, max_backoff_s: float = 2.0,
-                 retry_statuses: Sequence[int] = (429, 503)):
+                 retry_statuses: Sequence[int] = (429, 503),
+                 hedge_ms: Any = None):
         self.host, self.port, self.timeout = host, port, timeout
         self.retries = retries
         self.backoff_s = backoff_s
         self.max_backoff_s = max_backoff_s
         self.retry_statuses = tuple(retry_statuses)
+        # hedging: None = off, a number = fixed delay in ms, "p95"/"auto"
+        # = adapt the delay to the observed per-route p95 latency
+        if hedge_ms is not None and not isinstance(hedge_ms, (int, float)) \
+                and hedge_ms not in ("p95", "auto"):
+            raise ValueError(
+                "hedge_ms must be None, a number (ms), 'p95' or 'auto'")
+        self.hedge_ms = hedge_ms
+        self.hedges = 0                    # backups actually launched
+        self.hedge_wins = 0                # ... that beat the primary
+        self._latency: Dict[str, "collections.deque"] = {}
         self._local = threading.local()
 
     def _conn(self) -> _Connection:
@@ -269,32 +398,129 @@ class FlexServeClient:
         base = min(base, self.max_backoff_s)
         return min(base + random.uniform(0, base / 2), self.max_backoff_s)
 
+    def _should_retry(self, err: HTTPStatusError) -> bool:
+        """Structured bodies are authoritative — retry iff the server
+        says the error is retryable.  Unstructured bodies (legacy
+        servers, intermediaries) fall back to the status list."""
+        if err.structured:
+            return err.retryable
+        return err.status in self.retry_statuses
+
+    def _record_latency(self, path: str, dt_s: float) -> None:
+        lat = self._latency.get(path)
+        if lat is None:
+            lat = self._latency.setdefault(
+                path, collections.deque(maxlen=256))
+        lat.append(dt_s)
+
+    def _hedge_delay_s(self, path: str) -> Optional[float]:
+        """The current hedge delay for a route, or None when hedging is
+        off.  In "p95" mode the delay tracks the observed per-route p95
+        (50 ms until enough samples exist)."""
+        if self.hedge_ms is None:
+            return None
+        if isinstance(self.hedge_ms, (int, float)):
+            return max(0.0, float(self.hedge_ms) / 1e3)
+        lat = self._latency.get(path)
+        if lat is not None and len(lat) >= 8:
+            xs = sorted(lat)
+            return xs[min(len(xs) - 1, int(0.95 * len(xs)))]
+        return 0.05
+
+    def _hedged_roundtrip(self, request: bytes, delay_s: float
+                          ) -> Tuple[int, bytes, Optional[float],
+                                     Optional[str]]:
+        """One logical send with tail-latency hedging: a backup copy
+        goes out on its OWN connection if the primary hasn't answered
+        within ``delay_s``; the first HTTP response wins and the loser's
+        connection is closed (the server observes a disconnect and, on
+        streaming-free unary routes, simply wastes one forward).  Both
+        attempts use dedicated connections so the thread-local keep-alive
+        connection never ends up with an orphaned in-flight response."""
+        results: "queue.Queue[Tuple[str, Any, Any]]" = queue.Queue()
+        conns: Dict[str, _Connection] = {}
+        state = {"done": False}
+
+        def attempt(role: str) -> None:
+            conn = None
+            try:
+                conn = _Connection(self.host, self.port, self.timeout)
+                conns[role] = conn
+                results.put((role, conn.roundtrip(request), None))
+            except BaseException as e:      # noqa: BLE001 — reported below
+                results.put((role, None, e))
+            finally:
+                # covers the race where the loser's connection is created
+                # after the winner's teardown sweep ran
+                if conn is not None and state["done"]:
+                    conn.close()
+
+        threading.Thread(target=attempt, args=("primary",),
+                         daemon=True).start()
+        pending, backup_started = 1, False
+        winner = None
+        first_exc: Optional[BaseException] = None
+        try:
+            while pending:
+                if not backup_started:
+                    try:
+                        role, out, exc = results.get(timeout=delay_s)
+                    except queue.Empty:
+                        backup_started = True
+                        self.hedges += 1
+                        threading.Thread(target=attempt, args=("backup",),
+                                         daemon=True).start()
+                        pending += 1
+                        continue
+                else:
+                    role, out, exc = results.get()
+                pending -= 1
+                if exc is None:
+                    winner = (role, out)
+                    break
+                first_exc = first_exc or exc
+            if winner is None:
+                raise first_exc or ConnectionError("hedge: no attempts ran")
+            if winner[0] == "backup":
+                self.hedge_wins += 1
+            return winner[1]
+        finally:
+            state["done"] = True
+            for conn in list(conns.values()):
+                conn.close()
+
     def _request(self, method: str, path: str,
                  payload: Optional[Dict[str, Any]] = None, *,
                  retries: Optional[int] = None,
-                 ok: Tuple[int, ...] = (200,)) -> Response:
+                 ok: Tuple[int, ...] = (200,),
+                 hedge: bool = False) -> Response:
         request = self._raw_request(method, path, payload)
         retries = self.retries if retries is None else retries
         attempts = 0
         while True:
-            status, raw, retry_after, trace_id = \
-                self._roundtrip_once(request)
+            delay = self._hedge_delay_s(path) if hedge else None
+            t0 = time.perf_counter()
+            if delay is not None:
+                status, raw, retry_after, trace_id = \
+                    self._hedged_roundtrip(request, delay)
+            else:
+                status, raw, retry_after, trace_id = \
+                    self._roundtrip_once(request)
             attempts += 1
-            if status in self.retry_statuses and attempts <= retries:
-                # 429/503 are rejections (no server-side work happened):
-                # resending cannot double-execute the POST
+            if status in ok:
+                self._record_latency(path, time.perf_counter() - t0)
+                resp = Response(json.loads(raw or b"{}"))
+                resp.attempts = attempts
+                resp.trace_id = trace_id
+                return resp
+            err = make_error(status, raw, retry_after, trace_id,
+                             f"{method} {path}")
+            if self._should_retry(err) and attempts <= retries:
+                # retryable errors are REJECTIONS (no server-side work
+                # happened): resending cannot double-execute the POST
                 time.sleep(self._backoff_delay(attempts, retry_after))
                 continue
-            data = json.loads(raw or b"{}")
-            if status not in ok:
-                raise HTTPStatusError(
-                    status,
-                    f"{method} {path} -> {status}: "
-                    f"{data.get('error', data)}", retry_after)
-            resp = Response(data)
-            resp.attempts = attempts
-            resp.trace_id = trace_id
-            return resp
+            raise err
 
     def health(self) -> Dict[str, Any]:
         return self._request("GET", "/health", retries=0)
@@ -310,13 +536,11 @@ class FlexServeClient:
         dict, ``format="prometheus"`` the text exposition (a str)."""
         if format == "json":
             return self._request("GET", "/metrics")
-        status, raw, retry_after, _ = self._roundtrip_once(
+        status, raw, retry_after, trace_id = self._roundtrip_once(
             self._raw_request("GET", f"/metrics?format={format}"))
         if status != 200:
-            data = json.loads(raw or b"{}")
-            raise HTTPStatusError(
-                status, f"GET /metrics?format={format} -> {status}: "
-                        f"{data.get('error', data)}", retry_after)
+            raise make_error(status, raw, retry_after, trace_id,
+                             f"GET /metrics?format={format}")
         return raw.decode("utf-8")
 
     def trace(self, trace_id: str) -> Dict[str, Any]:
@@ -423,6 +647,30 @@ class FlexServeClient:
         return self._request("POST", self._engine_path(name, "rollback"),
                              body)
 
+    # --- replica admin --------------------------------------------------------
+
+    def replicas(self) -> Dict[str, Any]:
+        """Per-replica lifecycle states + pool counters
+        (GET /v1/replicas); works in single-service mode too."""
+        return self._request("GET", "/v1/replicas", retries=0)
+
+    def cordon_replica(self, rid: int,
+                       reason: Optional[str] = None) -> Dict[str, Any]:
+        """Drain-aware operator cordon: the replica takes no new work but
+        finishes what it has.  409 without a replica pool."""
+        body = {} if reason is None else {"reason": reason}
+        return self._request("POST", f"/v1/replicas/{rid}/cordon", body,
+                             retries=0)
+
+    def uncordon_replica(self, rid: int) -> Dict[str, Any]:
+        return self._request("POST", f"/v1/replicas/{rid}/uncordon", {},
+                             retries=0)
+
+    def hedge_stats(self) -> Dict[str, Any]:
+        """Client-side hedging counters (all zero when hedging is off)."""
+        return {"enabled": self.hedge_ms is not None,
+                "hedges": self.hedges, "hedge_wins": self.hedge_wins}
+
     @staticmethod
     def _plane_fields(body: Dict[str, Any], priority, deadline_ms,
                       client_tag, trace_id) -> Dict[str, Any]:
@@ -444,7 +692,7 @@ class FlexServeClient:
             body["target"] = target
         self._plane_fields(body, priority, deadline_ms, client_tag,
                            trace_id)
-        return self._request("POST", "/v1/infer", body)
+        return self._request("POST", "/v1/infer", body, hedge=True)
 
     def detect(self, inputs: Dict[str, Any], positive_class: int,
                policy: str = "or", threshold: float = 0.5,
@@ -460,7 +708,7 @@ class FlexServeClient:
             body["target"] = target
         self._plane_fields(body, priority, deadline_ms, client_tag,
                            trace_id)
-        return self._request("POST", "/v1/detect", body)
+        return self._request("POST", "/v1/detect", body, hedge=True)
 
     @staticmethod
     def _generate_body(prompts, max_new_tokens, eos_id, *,
@@ -527,14 +775,13 @@ class FlexServeClient:
                     if attempt or fresh:
                         raise
             attempts += 1
-            if status in self.retry_statuses and attempts <= self.retries:
-                for _ in records:          # drain the error body: the
-                    pass                   # connection stays reusable
-                time.sleep(self._backoff_delay(attempts, retry_after))
-                continue
             if status != 200:
-                data = json.loads(b"".join(records) or b"{}")
-                raise HTTPStatusError(
-                    status, f"POST /v1/generate -> {status}: "
-                            f"{data.get('error', data)}", retry_after)
+                # drain the error body (keeps the connection reusable)
+                # and classify it through the taxonomy
+                err = make_error(status, b"".join(records), retry_after,
+                                 None, "POST /v1/generate")
+                if self._should_retry(err) and attempts <= self.retries:
+                    time.sleep(self._backoff_delay(attempts, retry_after))
+                    continue
+                raise err
             return (json.loads(record) for record in records)

@@ -55,11 +55,14 @@ import time
 from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence
 
 from repro.core.engine import GenerationResult, InferenceEngine
+from repro.core.faults import FaultInjector
 from repro.core.sampling import SamplingParams
 from repro.core.scheduler import (Request, SchedulerBusy, SchedulerService,
                                   ZERO_PAGER_STATS, ZERO_SPECULATION_STATS)
 from repro.core.telemetry import BYTES_BUCKETS, Histogram
 from repro.serving.admission import RequestContext, ShedError
+from repro.serving.replica import (CORDONED, READY, ReplicaPool,
+                                   ZERO_REPLICA_STATS)
 
 # HTTP status a finished stream's trace records, by finish reason
 _TRACE_STATUS = {"deadline": 504, "error": 500, "cancelled": 499}
@@ -70,7 +73,8 @@ class GenerationError(RuntimeError):
 
 
 class _EngineEntry:
-    """One versioned engine serving one alias: its own scheduler service."""
+    """One versioned engine serving one alias: its own scheduler service
+    (or a :class:`~repro.serving.replica.ReplicaPool` duck-typing it)."""
 
     __slots__ = ("name", "version", "service", "installed_at")
 
@@ -302,6 +306,13 @@ class GenerationStream:
     def queue_high_water(self) -> int:
         return self._queue.high_water
 
+    def _reassign(self, new_req: Request) -> None:
+        """Replica failover moved the request: subsequent replay/resume/
+        cancel must target the NEW request.  Safe to swap mid-iteration —
+        the new request's output starts as a superset snapshot of the old
+        one's, so index-based replay stays monotonic."""
+        self.request = new_req
+
     def cancel(self) -> bool:
         """Abandon the stream (client went away); frees the decode slot —
         including a slot-less parked (paused) request."""
@@ -324,12 +335,22 @@ class GenerationService:
                  drain_timeout_s: float = 30.0,
                  max_pending: Optional[int] = None,
                  max_stream_buffer: int = 32,
-                 client_weights: Optional[Dict[str, float]] = None):
+                 client_weights: Optional[Dict[str, float]] = None,
+                 num_replicas: int = 1,
+                 faults: Optional[FaultInjector] = None,
+                 replica_options: Optional[Dict[str, Any]] = None):
         self.num_slots = num_slots
         self.default_alias = default_alias
         self.drain_timeout_s = drain_timeout_s
         # per-client weighted fair dequeue inside every engine's scheduler
         self.client_weights = client_weights
+        # replica pool: with num_replicas > 1 every installed engine fans
+        # out into N health-checked SchedulerService replicas behind one
+        # entry (engine swaps swap the whole pool); replica_options tunes
+        # the pool's health monitor / failover knobs
+        self.num_replicas = max(1, num_replicas)
+        self.faults = faults
+        self.replica_options = dict(replica_options or {})
         # backstop bound on each engine's pending deque; the app-level
         # AdmissionController sheds earlier (and with better hints), this
         # keeps a directly-driven service bounded too
@@ -361,12 +382,29 @@ class GenerationService:
         closed, so no in-flight stream is truncated by a swap.  ``warm``
         pre-compiles the decode data path (fused step, batched-prefill
         buckets, slot scatter) BEFORE the alias flips, so the first live
-        streams never pay compile latency."""
-        service = SchedulerService(engine,
-                                   num_slots=num_slots or self.num_slots,
-                                   max_pending=self.max_pending,
-                                   client_weights=self.client_weights)
-        warm_s = service.warm() if warm else 0.0
+        streams never pay compile latency.
+
+        With ``num_replicas > 1`` the engine fans out into a full
+        :class:`ReplicaPool` (one scheduler per replica over the SHARED
+        engine).  A failure while building the pool — e.g. an injected
+        ``engine_install`` fault — tears the partial pool down and
+        propagates BEFORE the alias flips, so no request ever observes a
+        half-installed version."""
+        if self.num_replicas > 1:
+            service = ReplicaPool(engine, self.num_replicas,
+                                  num_slots=num_slots or self.num_slots,
+                                  max_pending=self.max_pending,
+                                  client_weights=self.client_weights,
+                                  faults=self.faults, warm=warm,
+                                  **self.replica_options)
+            warm_s = service.warm_s
+        else:
+            service = SchedulerService(
+                engine, num_slots=num_slots or self.num_slots,
+                max_pending=self.max_pending,
+                client_weights=self.client_weights,
+                faults=self.faults)
+            warm_s = service.warm() if warm else 0.0
         entry = _EngineEntry(name, version, service)
         with self._lock:
             if self._closed:
@@ -507,7 +545,8 @@ class GenerationService:
                 on_finish=on_finish)
             try:
                 stream.request = entry.service.submit_request(
-                    prompt, sampling=sampling, sink=stream._sink, ctx=ctx)
+                    prompt, sampling=sampling, sink=stream._sink, ctx=ctx,
+                    on_reassign=stream._reassign)
                 break
             except GenerationError:
                 raise
@@ -601,11 +640,61 @@ class GenerationService:
                     "pager": dict(ZERO_PAGER_STATS),
                     # speculative engines overwrite the zeroed schema
                     # (acceptance EMA, window histogram, draft/verify ms)
-                    "speculation": dict(ZERO_SPECULATION_STATS)})
+                    "speculation": dict(ZERO_SPECULATION_STATS),
+                    # replica pools overwrite the zeroed pool schema
+                    # (lifecycle states, failovers, restarts)
+                    "replicas": dict(ZERO_REPLICA_STATS)})
         default = engines.get(self.default_alias)
         if default is not None:
             out.update({k: v for k, v in default.items() if k != "engine"})
         out["engines"] = engines
+        return out
+
+    # --- replica pool surface ---------------------------------------------------
+
+    def pool_for(self, alias: Optional[str] = None
+                 ) -> Optional[ReplicaPool]:
+        """The alias's replica pool, or ``None`` in single-service mode
+        (or before any engine is installed)."""
+        try:
+            entry = self.entry_for(alias)
+        except GenerationError:
+            return None
+        return entry.service if isinstance(entry.service, ReplicaPool) \
+            else None
+
+    def replica_summary(self, alias: Optional[str] = None
+                        ) -> Dict[str, Any]:
+        """Pool health summary for /healthz and /v1/replicas.  In
+        single-service mode the one implicit replica is reported (ready
+        iff its driver thread is alive), so readiness aggregation works
+        either way."""
+        try:
+            entry = self.entry_for(alias)
+        except GenerationError:
+            return dict(ZERO_REPLICA_STATS)
+        svc = entry.service
+        if isinstance(svc, ReplicaPool):
+            return svc.summary()
+        out = dict(ZERO_REPLICA_STATS)
+        alive = bool(getattr(svc, "alive", True))
+        out.update({
+            "count": 1,
+            "ready": 1 if alive else 0,
+            "per_replica": {"0": {
+                "id": 0, "state": READY if alive else CORDONED,
+                "manual": False, "cordoned_reason": None, "restarts": 0,
+                "steps": svc.scheduler.steps,
+                "active": svc.scheduler.active,
+                "pending": svc.scheduler.pending,
+                "driver_errors": svc.driver_errors,
+                "consecutive_errors": svc.consecutive_errors,
+                "last_tick_ms": svc.last_tick_s * 1e3,
+                "alive": alive,
+            }}})
+        if not alive:
+            out["cordoned"] = 1
+            out["cordoned_ids"] = [0]
         return out
 
     def close(self) -> None:

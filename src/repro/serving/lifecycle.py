@@ -41,6 +41,7 @@ import numpy as np
 
 from repro.core.engine import InferenceEngine, SpeculativeEngine
 from repro.core.ensemble import Ensemble, EnsembleMember
+from repro.core.faults import FaultInjector, InjectedFault
 from repro.core.registry import ModelRegistry
 from repro.serving.modelstore import ModelStore
 
@@ -106,7 +107,9 @@ class ModelManager:
                  max_batch: int = 8,
                  class_names: Optional[List[str]] = None,
                  default_alias: str = "stable",
-                 drain_timeout_s: float = 30.0):
+                 drain_timeout_s: float = 30.0,
+                 faults: Optional[FaultInjector] = None):
+        self.faults = faults
         self.store = store
         self.registry = registry or ModelRegistry()
         self.max_batch = max_batch
@@ -525,6 +528,16 @@ class ModelManager:
             pass
         model, apply_fn, num_classes = self._factory(manifest)
         like = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        if self.faults is not None:
+            # "checkpoint_load": a corrupted/unreadable checkpoint —
+            # surfaces like any store failure, BEFORE anything publishes
+            try:
+                self.faults.fire("checkpoint_load", name=name,
+                                 version=version)
+            except InjectedFault as e:
+                raise LifecycleError(
+                    f"checkpoint load failed for {name} v{version}: {e}"
+                ) from e
         params, manifest = self.store.load(name, version, like)
         return self.registry.register(
             name, model, params, version=version,

@@ -36,6 +36,8 @@ import numpy as np
 from repro.core.batching import BucketSpec
 from repro.core.engine import InferenceEngine
 from repro.core.ensemble import Ensemble
+from repro.core.faults import (ZERO_FAULT_STATS, FaultInjector,
+                               InjectedFault)
 from repro.core.registry import ModelRegistry
 from repro.core.slo import (ZERO_SLO, SLIStore, SLOController, UsageLedger,
                             load_policies)
@@ -46,6 +48,7 @@ from repro.serving.coalesce import BatchCoalescer
 from repro.serving.generate import GenerationError, GenerationService
 from repro.serving.lifecycle import LifecycleError, ModelManager
 from repro.serving.modelstore import StoreError
+from repro.serving.replica import ZERO_REPLICA_STATS
 from repro.serving.telemetry import (DeviceProfiler, FlightRecorder,
                                      prometheus_exposition)
 
@@ -69,6 +72,15 @@ class FlexServeApp:
     a ``manager`` instead of a static ``ensemble`` to serve store-backed,
     hot-swappable models; with a manager attached, generation engines are
     versioned and hot-swappable too (POST /v1/engines/{name}/load).
+
+    ``replicas > 1`` runs the generate plane as a health-checked
+    :class:`~repro.serving.replica.ReplicaPool` — N independent decode
+    schedulers over the shared engine, with automatic cordon/restart and
+    transparent failover (see GET /v1/replicas).  ``fault_config``
+    accepts anything :meth:`FaultInjector.load` does (path / dict /
+    injector) and arms the deterministic chaos sites across every layer;
+    ``replica_options`` passes pool tuning knobs (health thresholds)
+    straight through.
     """
 
     def __init__(self, registry: Optional[ModelRegistry] = None,
@@ -91,10 +103,21 @@ class FlexServeApp:
                  slo_interval_s: float = 2.0,
                  sli_bucket_s: float = 10.0,
                  sli_n_buckets: int = 60,
-                 client_weights: Optional[Dict[str, float]] = None):
+                 client_weights: Optional[Dict[str, float]] = None,
+                 replicas: int = 1,
+                 fault_config: Any = None,
+                 replica_options: Optional[Dict[str, Any]] = None):
         if manager is not None and ensemble is not None:
             raise ValueError("pass either a static ensemble or a manager")
         self.manager = manager
+        # one injector shared by every layer (scheduler drivers, lifecycle
+        # loads, the stream writer) so a single config file describes the
+        # whole chaos drill
+        self.faults: Optional[FaultInjector] = FaultInjector.load(
+            fault_config)
+        if manager is not None and self.faults is not None \
+                and getattr(manager, "faults", None) is None:
+            manager.faults = self.faults
         self.registry = (manager.registry if manager is not None
                          else registry or ModelRegistry())
         self._ensemble = ensemble
@@ -145,7 +168,10 @@ class FlexServeApp:
                 engine, num_slots=num_slots,
                 max_pending=max(num_slots, max_queue),
                 max_stream_buffer=max_stream_buffer,
-                client_weights=client_weights)
+                client_weights=client_weights,
+                num_replicas=replicas,
+                faults=self.faults,
+                replica_options=replica_options)
             if manager is not None:
                 manager.attach_generation(self.generation)
         policies = load_policies(slo_policies) if slo_policies else []
@@ -245,7 +271,12 @@ class FlexServeApp:
     # --- readiness ------------------------------------------------------------
 
     def ready(self) -> Dict[str, Any]:
-        """Readiness probe payload; raises 503 while not servable."""
+        """Readiness probe payload; raises 503 while not servable.
+
+        With a generation service attached the probe aggregates replica
+        health: the payload reports the ready count and the cordoned set,
+        and the endpoint goes 503 the moment ZERO replicas can take work
+        — a load balancer drains it before clients see hard failures."""
         if self._closing:
             raise api.ApiError(503, "shutting down")
         if self.coalescer is not None and not self.coalescer.alive:
@@ -256,8 +287,18 @@ class FlexServeApp:
         elif (self._ensemble is None and self.engine is None
               and len(self.registry) == 0):
             raise api.ApiError(503, "no models loaded yet")
-        return {"status": "ready", "models": len(self.registry),
-                "coalescing": self.coalescer is not None}
+        out = {"status": "ready", "models": len(self.registry),
+               "coalescing": self.coalescer is not None}
+        if self.generation is not None and self.generation.ready:
+            rs = self.generation.replica_summary()
+            out["replicas"] = {"count": rs["count"], "ready": rs["ready"],
+                               "cordoned": list(rs["cordoned_ids"])}
+            if rs["count"] > 0 and rs["ready"] == 0:
+                raise api.ApiError(
+                    503, f"no ready replicas ({rs['count']} configured: "
+                         f"{rs['warming']} warming, {rs['cordoned']} "
+                         f"cordoned, {rs['restarting']} restarting)")
+        return out
 
     # --- route handlers ------------------------------------------------------
 
@@ -320,6 +361,11 @@ class FlexServeApp:
         if path.startswith("/v1/engines/"):
             return self._engine_admin(method, path[len("/v1/engines/"):],
                                       body)
+        if method == "GET" and path == "/v1/replicas":
+            return self._replicas_status(query)
+        if path.startswith("/v1/replicas/"):
+            return self._replica_admin(method,
+                                       path[len("/v1/replicas/"):], body)
         if method == "POST" and path == "/v1/infer":
             return self._traced("infer", body, headers, arrival,
                                 self._infer)
@@ -505,6 +551,11 @@ class FlexServeApp:
         out["admission"] = self.admission.stats()
         # always present (zeroed with tracing off) so the /metrics schema
         # — and the Prometheus exposition — is stable across configs
+        out["replicas"] = (self.generation.replica_summary()
+                           if self.generation is not None
+                           else dict(ZERO_REPLICA_STATS))
+        out["faults"] = (self.faults.stats() if self.faults is not None
+                         else dict(ZERO_FAULT_STATS))
         out["usage"] = self.usage.totals()
         out["slo"] = (self.slo.stats() if self.slo is not None
                       else dict(ZERO_SLO))
@@ -593,6 +644,44 @@ class FlexServeApp:
             raise api.ApiError(404, str(e)) from None
         except LifecycleError as e:
             raise api.ApiError(409, str(e)) from None
+
+    # --- replica admin surface ------------------------------------------------
+
+    def _replicas_status(self, query: Dict[str, str]) -> Dict[str, Any]:
+        """Per-replica lifecycle states and pool counters.  Works in
+        single-service mode too (the one implicit replica is reported),
+        so dashboards don't need to know how the endpoint was started."""
+        if self.generation is None:
+            return dict(ZERO_REPLICA_STATS)
+        return self.generation.replica_summary(query.get("target"))
+
+    def _replica_admin(self, method: str, rest: str,
+                       body: bytes) -> Dict[str, Any]:
+        """POST /v1/replicas/{id}/cordon|uncordon — operator drain
+        control.  Cordon is drain-aware (in-flight work finishes in
+        place); uncordon restarts the replica first if its driver died."""
+        rid_s, _, action = rest.partition("/")
+        if method != "POST" or action not in ("cordon", "uncordon"):
+            raise api.ApiError(404,
+                               f"no route {method} /v1/replicas/{rest}")
+        req = api.parse_request(body)
+        pool = (self.generation.pool_for(req.get("target"))
+                if self.generation is not None else None)
+        if pool is None:
+            raise api.ApiError(
+                409, "no replica pool on this endpoint; start it with "
+                     "--replicas > 1 to enable cordon/uncordon")
+        try:
+            rid = int(rid_s)
+        except ValueError:
+            raise api.ApiError(404, f"bad replica id {rid_s!r}") from None
+        try:
+            if action == "cordon":
+                reason = str(req.get("reason", "manual cordon"))
+                return pool.cordon(rid, reason=reason)
+            return pool.uncordon(rid)
+        except KeyError as e:
+            raise api.ApiError(404, str(e)) from None
 
     def _model_status(self, name: str) -> Dict[str, Any]:
         if self.manager is not None:
@@ -830,8 +919,11 @@ def make_handler(app: FlexServeApp):
                     try:
                         length = int(val)
                     except ValueError:
-                        self._reply(400, b'{"error": "bad Content-Length"}',
-                                    False)
+                        self._reply(
+                            400,
+                            api.encode_response(api.error_body(api.ApiError(
+                                400, "bad Content-Length"))),
+                            False)
                         return False
                 elif key == b"connection":
                     keep = b"close" not in val.lower()
@@ -845,10 +937,12 @@ def make_handler(app: FlexServeApp):
             try:
                 status, payload = 200, app.handle(method, path, body, plane)
             except api.ApiError as e:
-                status, payload, extra = e.status, {"error": e.message}, \
-                    e.headers
+                status, extra = e.status, e.headers
+                payload = api.error_body(e)
             except Exception as e:          # noqa: BLE001 — server boundary
-                status, payload = 500, {"error": f"{type(e).__name__}: {e}"}
+                status = 500
+                payload = api.error_body(
+                    api.ApiError(500, f"{type(e).__name__}: {e}"))
             if isinstance(payload, api.StreamingResponse):
                 return self._stream_reply(payload, keep)
             ctype = "application/json"
@@ -894,12 +988,23 @@ def make_handler(app: FlexServeApp):
             try:
                 self.wfile.write(head)
                 for event in resp.events:
+                    if app.faults is not None:
+                        # "socket_drop": the connection dies mid-stream —
+                        # same teardown path as a real failed write
+                        app.faults.fire("socket_drop")
                     data = api.encode_response(event) + b"\n"
                     # chunk = size line + payload (wfile is unbuffered:
                     # one write, one segment — the flush per token)
                     self.wfile.write(b"%x\r\n%s\r\n" % (len(data), data))
                 self.wfile.write(b"0\r\n\r\n")
                 return keep
+            except InjectedFault:
+                resp.disconnect()             # cancel: free the decode slot
+                try:
+                    self.connection.close()
+                except OSError:
+                    pass
+                return False
             except (ConnectionError, TimeoutError, OSError):
                 resp.disconnect()             # cancel: free the decode slot
                 return False

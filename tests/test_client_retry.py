@@ -1,14 +1,24 @@
 """Client-side Retry-After parsing + backoff: the old ``float(val)``
 parse rejected RFC 9110 HTTP-dates and accepted nan/inf/negatives,
-which reached ``time.sleep`` unvalidated."""
+which reached ``time.sleep`` unvalidated.
+
+Also pins the structured error taxonomy parse: typed error classes are
+selected off the body's ``code``, the retry decision follows the
+server's ``retryable`` flag exactly, and unstructured bodies fall back
+to the status-based ``retry_statuses`` list."""
 
 import email.utils
+import json
 import math
 import time
 
 import pytest
 
-from repro.serving.client import FlexServeClient, parse_retry_after
+from repro.serving.client import (BadRequestError, DeadlineExceededError,
+                                  FlexServeClient, HTTPStatusError,
+                                  NotFoundError, QueueFullError,
+                                  UnavailableError, make_error,
+                                  parse_retry_after)
 
 
 @pytest.mark.parametrize("raw,want", [
@@ -60,3 +70,72 @@ def test_backoff_falls_back_on_unusable_hint():
             assert math.isfinite(d) and 0.0 < d <= 2.0
     # exponential in the attempt number until the cap
     assert c._backoff_delay(2, None) >= 0.05 * 2
+
+
+# --- structured error taxonomy ------------------------------------------------
+
+
+def _body(code, message="boom", retryable=False, trace_id="t-1"):
+    return json.dumps({"error": {"code": code, "message": message,
+                                 "retryable": retryable,
+                                 "trace_id": trace_id}}).encode()
+
+
+@pytest.mark.parametrize("code,status,cls", [
+    ("bad_request", 400, BadRequestError),
+    ("not_found", 404, NotFoundError),
+    ("queue_full", 429, QueueFullError),
+    ("unavailable", 503, UnavailableError),
+    ("deadline_exceeded", 504, DeadlineExceededError),
+])
+def test_make_error_types_off_code(code, status, cls):
+    err = make_error(status, _body(code, retryable=code in
+                                   ("queue_full", "unavailable")),
+                     None, None, "POST /x")
+    assert type(err) is cls
+    assert err.structured and err.code == code and err.status == status
+    assert err.trace_id == "t-1"
+    assert code in str(err)
+
+
+def test_make_error_unknown_code_falls_back_to_base():
+    err = make_error(418, _body("teapot"), None, None, "GET /x")
+    assert type(err) is HTTPStatusError and err.code == "teapot"
+
+
+def test_make_error_unstructured_body_uses_status_map():
+    err = make_error(429, b'{"error": "queue full"}', 1.5, "hdr-id",
+                     "POST /x")
+    assert type(err) is QueueFullError and not err.structured
+    assert err.retryable and err.trace_id == "hdr-id"
+    err = make_error(500, b"not json at all", None, None, "GET /x")
+    assert type(err) is type(make_error(500, b"{}", None, None, "x"))
+    assert not err.retryable
+
+
+def test_retry_decision_follows_server_retryable():
+    c = FlexServeClient()
+    # structured verdict is authoritative, even against retry_statuses
+    assert c._should_retry(make_error(
+        429, _body("queue_full", retryable=True), None, None, "x"))
+    assert not c._should_retry(make_error(
+        503, _body("unavailable", retryable=False), None, None, "x"))
+    # a structured retryable code outside retry_statuses still retries
+    assert c._should_retry(make_error(
+        408, _body("timeout", retryable=True), None, None, "x"))
+    # unstructured falls back to the status list
+    assert c._should_retry(make_error(429, b"", None, None, "x"))
+    assert not c._should_retry(make_error(500, b"", None, None, "x"))
+
+
+def test_hedge_delay_modes():
+    assert FlexServeClient()._hedge_delay_s("/v1/infer") is None
+    c = FlexServeClient(hedge_ms=20)
+    assert c._hedge_delay_s("/v1/infer") == pytest.approx(0.02)
+    c = FlexServeClient(hedge_ms="p95")
+    assert c._hedge_delay_s("/v1/infer") == pytest.approx(0.05)  # cold
+    for ms in (10,) * 19 + (1000,):
+        c._record_latency("/v1/infer", ms / 1e3)
+    assert 0.009 <= c._hedge_delay_s("/v1/infer") <= 1.0
+    with pytest.raises(ValueError):
+        FlexServeClient(hedge_ms="always")

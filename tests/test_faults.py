@@ -1,0 +1,105 @@
+"""Deterministic fault-injection harness (repro.core.faults).
+
+The injector is the foundation the chaos drills stand on, so its
+scheduling semantics are pinned exactly: 1-based ``at``, ``every``
+strides, ``count`` caps, per-(spec, replica) counters, and the
+raise/stall/should behaviors.
+"""
+
+import json
+import time
+
+import pytest
+
+from repro.core.faults import (ZERO_FAULT_STATS, FaultInjector, FaultSpec,
+                               InjectedFault)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        FaultSpec(site="x", action="explode")
+    with pytest.raises(ValueError):
+        FaultSpec(site="x", at=0)
+    with pytest.raises(ValueError):
+        FaultSpec(site="x", every=0)
+    with pytest.raises(ValueError):
+        FaultInjector.from_config([{"site": "x", "frequency": 2}])
+
+
+def test_at_every_count_schedule():
+    inj = FaultInjector.from_config(
+        [{"site": "s", "at": 3, "every": 2, "count": 2}])
+    fired = [hit for hit in range(1, 11)
+             if inj.should("s") is not None]
+    # 1-based hits: first firing at hit 3, stride 2, capped at 2 firings
+    assert fired == [3, 5]
+
+
+def test_unlimited_count():
+    inj = FaultInjector.from_config([{"site": "s", "at": 1, "count": 0}])
+    assert sum(inj.should("s") is not None for _ in range(7)) == 7
+
+
+def test_fire_raises_with_site_and_message():
+    inj = FaultInjector.from_config(
+        {"faults": [{"site": "boom", "message": "injected oom"}]})
+    with pytest.raises(InjectedFault) as ei:
+        inj.fire("boom")
+    assert ei.value.site == "boom"
+    assert "injected oom" in str(ei.value)
+    # count=1 default: second hit passes through
+    assert inj.fire("boom") is None
+
+
+def test_stall_sleeps_and_returns_action():
+    inj = FaultInjector.from_config(
+        [{"site": "tick", "action": "stall", "delay_ms": 60}])
+    t0 = time.monotonic()
+    assert inj.fire("tick") == "stall"
+    assert time.monotonic() - t0 >= 0.05
+    assert inj.fire("tick") is None
+
+
+def test_per_replica_counters_are_independent():
+    # replica: null -> each replica gets its OWN at/count schedule
+    inj = FaultInjector.from_config([{"site": "s", "at": 2, "count": 1}])
+    assert inj.should("s", replica=0) is None        # r0 hit 1
+    assert inj.should("s", replica=1) is None        # r1 hit 1
+    assert inj.should("s", replica=0) is not None    # r0 hit 2 -> fires
+    assert inj.should("s", replica=1) is not None    # r1 hit 2 -> fires
+    assert inj.should("s", replica=0) is None        # r0 count exhausted
+
+
+def test_replica_scoped_spec_only_matches_its_replica():
+    inj = FaultInjector.from_config(
+        [{"site": "s", "replica": 1, "at": 1}])
+    assert inj.should("s", replica=0) is None
+    assert inj.should("s", replica=2) is None
+    assert inj.should("s", replica=1) is not None
+    scoped = inj.scoped(1)
+    assert scoped.should("s") is None                # count=1 used up
+
+
+def test_load_coercions(tmp_path):
+    assert FaultInjector.load(None) is None
+    inj = FaultInjector([FaultSpec(site="s")])
+    assert FaultInjector.load(inj) is inj
+    assert FaultInjector.load([{"site": "s"}]).should("s") is not None
+    p = tmp_path / "faults.json"
+    p.write_text(json.dumps({"faults": [{"site": "s", "at": 1}]}))
+    assert FaultInjector.load(str(p)).should("s") is not None
+
+
+def test_stats_accounting():
+    inj = FaultInjector.from_config(
+        [{"site": "a", "count": 1}, {"site": "b", "count": 2, "at": 1}])
+    assert inj.should("b") is not None
+    with pytest.raises(InjectedFault):
+        inj.fire("a")
+    assert inj.should("b") is not None
+    s = inj.stats()
+    assert s["enabled"] and s["specs"] == 2 and s["fired_total"] == 3
+    assert s["sites"]["a"] == {"specs": 1, "hits": 1, "fired": 1}
+    assert s["sites"]["b"] == {"specs": 1, "hits": 2, "fired": 2}
+    # the zero block mirrors the live schema so /metrics stays stable
+    assert set(ZERO_FAULT_STATS) == set(s)

@@ -1,0 +1,326 @@
+"""Replica pool: least-loaded routing, health-monitor kill/restart,
+byte-identical failover (the fold_in rng contract makes a resumed
+continuation emit exactly the tokens the dead replica would have), and
+the HTTP admin/observability surface (/v1/replicas, cordon/uncordon,
+/healthz aggregation, hedged requests)."""
+
+import threading
+import time
+
+import jax
+import pytest
+
+from conftest import smoke_model
+from repro.core import (Ensemble, EnsembleMember, InferenceEngine,
+                        ModelRegistry)
+from repro.core.faults import FaultInjector, InjectedFault
+from repro.core.sampling import SamplingParams
+from repro.core.scheduler import SchedulerService
+from repro.serving import (FlexServeApp, FlexServeClient, FlexServeServer,
+                           NotFoundError, ReplicaPool, UnavailableError)
+from repro.serving import api
+from repro.serving.generate import GenerationService
+
+PROMPTS = [[1, 2, 3], [4, 5], [6, 7, 8, 9]]
+
+
+def _samp(seed=11, n=16):
+    return SamplingParams(temperature=0.8, seed=seed, max_new_tokens=n)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg, model, params = smoke_model("yi-9b")
+    return InferenceEngine(model, params, max_len=128, max_batch=4)
+
+
+def _reference(engine, prompt, sampling):
+    svc = SchedulerService(engine, 2)
+    try:
+        return svc.submit_and_wait([prompt], sampling=sampling).tokens[0]
+    finally:
+        svc.close()
+
+
+def _stream_collect(pool, prompt, sampling, timeout=60.0):
+    done = threading.Event()
+    box = {}
+
+    def sink(req, token, is_done):
+        if is_done:
+            box["req"] = req
+            done.set()
+
+    pool.submit_request(prompt, sampling=sampling, sink=sink)
+    assert done.wait(timeout), "stream never finished"
+    return box["req"]
+
+
+# --- pool semantics (no HTTP) ------------------------------------------------
+
+
+def test_pool_unary_matches_single_service(engine):
+    svc = SchedulerService(engine, 2)
+    try:
+        ref = svc.submit_and_wait(PROMPTS, sampling=_samp())
+    finally:
+        svc.close()
+    pool = ReplicaPool(engine, 3, num_slots=2)
+    try:
+        got = pool.submit_and_wait(PROMPTS, sampling=_samp())
+    finally:
+        pool.close()
+    assert got.tokens == ref.tokens
+    assert got.finish_reasons == ref.finish_reasons
+
+
+def test_stream_failover_is_byte_identical(engine):
+    """An engine_step fault mid-stream kills the request on its replica;
+    the pool resubmits elsewhere with resume_output + the ORIGINAL rng
+    key, so the final output matches the unfaulted run exactly."""
+    prompt, sampling = [3, 1, 4, 1, 5], _samp(seed=23, n=20)
+    ref = _reference(engine, prompt, sampling)
+    faults = FaultInjector.load(
+        [{"site": "engine_step", "at": 4, "count": 1}])
+    pool = ReplicaPool(engine, 3, num_slots=2, faults=faults,
+                       monitor=False, max_failovers=3)
+    try:
+        req = _stream_collect(pool, prompt, sampling)
+        assert req.finish_reason == "length"
+        assert list(req.output) == ref
+        assert pool.failovers_total >= 1
+        assert pool.failovers_by_kind["stream"] >= 1
+    finally:
+        pool.close()
+
+
+def test_unary_failover_is_transparent(engine):
+    prompt, sampling = [9, 8, 7], _samp(seed=5, n=12)
+    ref = _reference(engine, prompt, sampling)
+    faults = FaultInjector.load(
+        [{"site": "engine_step", "at": 3, "count": 1}])
+    pool = ReplicaPool(engine, 2, num_slots=2, faults=faults,
+                       monitor=False, max_failovers=3)
+    try:
+        got = pool.submit_and_wait([prompt], sampling=sampling)
+        assert got.tokens[0] == ref
+        assert pool.failovers_by_kind["unary"] >= 1
+    finally:
+        pool.close()
+
+
+def test_failover_exhaustion_surfaces_the_error(engine):
+    """With zero failover budget the injected failure reaches the caller
+    instead of retrying forever."""
+    faults = FaultInjector.load(
+        [{"site": "engine_step", "at": 2, "count": 1,
+          "message": "injected step fault"}])
+    pool = ReplicaPool(engine, 2, num_slots=2, faults=faults,
+                       monitor=False, max_failovers=0)
+    try:
+        with pytest.raises(InjectedFault, match="injected step fault"):
+            pool.submit_and_wait([[1, 2, 3]], sampling=_samp(n=8))
+    finally:
+        pool.close()
+
+
+def test_monitor_kills_restarts_and_streams_survive(engine):
+    """replica_kill fires on replica 1 while six seeded streams decode:
+    its in-flight work evacuates onto siblings byte-identically, the dead
+    member is cordoned and auto-restarted back to ready."""
+    n_tok = 32
+    seeds = [100 + i for i in range(6)]
+    prompt = [2, 7, 1, 8]
+    refs = {}
+    svc = SchedulerService(engine, 2)
+    try:
+        for s in seeds:
+            refs[s] = svc.submit_and_wait(
+                [prompt], sampling=_samp(seed=s, n=n_tok)).tokens[0]
+    finally:
+        svc.close()
+
+    faults = FaultInjector.load(
+        [{"site": "replica_kill", "replica": 1, "at": 2, "count": 1}])
+    pool = ReplicaPool(engine, 3, num_slots=2, faults=faults,
+                       health_interval_s=0.01, max_failovers=3)
+    try:
+        done = {s: threading.Event() for s in seeds}
+        boxes = {}
+
+        def sink_for(s):
+            def sink(req, token, is_done):
+                if is_done:
+                    boxes[s] = req
+                    done[s].set()
+            return sink
+
+        for s in seeds:
+            pool.submit_request(prompt, sampling=_samp(seed=s, n=n_tok),
+                                sink=sink_for(s))
+        for s in seeds:
+            assert done[s].wait(120), f"stream seed={s} never finished"
+        for s in seeds:
+            assert boxes[s].finish_reason == "length"
+            assert list(boxes[s].output) == refs[s], f"seed={s} diverged"
+
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            summ = pool.summary()
+            if summ["restarts"] >= 1 and summ["ready"] == 3:
+                break
+            time.sleep(0.05)
+        summ = pool.summary()
+        assert summ["kills"] >= 1
+        assert summ["restarts"] >= 1
+        assert summ["ready"] == 3
+        assert pool.evacuations_total >= 1
+        assert pool.failovers_total >= 1
+    finally:
+        pool.close()
+
+
+def test_crash_during_engine_swap_never_publishes(engine):
+    """An engine_install fault between engine build and alias repoint
+    tears the half-built pool down and leaves the alias on the old
+    version; a retry installs cleanly."""
+    faults = FaultInjector.load(
+        [{"site": "engine_install", "replica": 1, "at": 2, "count": 1}])
+    gen = GenerationService(num_replicas=2, num_slots=2, faults=faults,
+                            replica_options={"monitor": False})
+    try:
+        gen.install("m", 1, engine)
+        ok = gen.generate([[1, 2, 3]], SamplingParams(max_new_tokens=4))
+        assert len(ok.tokens[0]) == 4
+
+        with pytest.raises(InjectedFault):
+            gen.install("m", 2, engine)
+        # the alias never observed the half-installed version
+        assert gen.entry_for(None).version == 1
+        ok = gen.generate([[1, 2, 3]], SamplingParams(max_new_tokens=4))
+        assert len(ok.tokens[0]) == 4
+
+        # fault budget exhausted: the retry succeeds and swaps atomically
+        res = gen.install("m", 2, engine)
+        assert res["engine"] == "m@v2"
+        assert gen.entry_for(None).version == 2
+    finally:
+        gen.close()
+
+
+# --- HTTP surface ------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def server(engine):
+    cfg, model, params = smoke_model("yi-9b")
+    registry = ModelRegistry()
+    members = []
+    for i in range(2):
+        pp = model.init(jax.random.PRNGKey(i))
+        registry.register(f"yi#{i}", model, pp)
+
+        def apply(p, batch, _m=model):
+            return _m.forward(p, batch)[:, -1, :8]
+
+        members.append(EnsembleMember(f"yi#{i}", apply, pp, 8))
+    ensemble = Ensemble(members, max_batch=8)
+    app = FlexServeApp(registry, ensemble, engine, replicas=3,
+                       replica_options={"health_interval_s": 0.05})
+    srv = FlexServeServer(app).start()
+    yield srv
+    srv.stop()
+
+
+@pytest.fixture(scope="module")
+def client(server):
+    host, port = server.address
+    return FlexServeClient(host, port)
+
+
+def test_healthz_aggregates_replica_health(client):
+    h = client.healthz()
+    assert h["replicas"] == {"count": 3, "ready": 3, "cordoned": []}
+
+
+def test_replicas_route_and_cordon_cycle(client):
+    r = client.replicas()
+    assert r["enabled"] and r["count"] == 3
+    assert set(r["per_replica"]) == {"0", "1", "2"}
+    assert all(v["state"] == "ready" for v in r["per_replica"].values())
+
+    d = client.cordon_replica(2, reason="maintenance")
+    assert d["state"] == "cordoned" and d["manual"]
+    assert client.healthz()["replicas"]["cordoned"] == [2]
+    assert client.replicas()["per_replica"]["2"][
+        "cordoned_reason"] == "maintenance"
+
+    d = client.uncordon_replica(2)
+    assert d["state"] == "ready"
+    assert client.healthz()["replicas"]["cordoned"] == []
+
+
+def test_cordon_unknown_replica_is_typed_404(client):
+    with pytest.raises(NotFoundError) as ei:
+        client.cordon_replica(99)
+    err = ei.value
+    assert err.structured and err.code == "not_found"
+    assert not err.retryable
+
+
+def test_healthz_503_when_no_ready_replicas(client):
+    for rid in (0, 1, 2):
+        client.cordon_replica(rid)
+    try:
+        with pytest.raises(UnavailableError) as ei:
+            client.healthz()
+        assert ei.value.structured and ei.value.retryable
+        assert "no ready replicas" in str(ei.value)
+    finally:
+        for rid in (0, 1, 2):
+            client.uncordon_replica(rid)
+    assert client.healthz()["replicas"]["ready"] == 3
+
+
+def test_cordon_without_pool_is_409(engine):
+    app = FlexServeApp(engine=engine)
+    try:
+        with pytest.raises(api.ApiError) as ei:
+            app._replica_admin("POST", "0/cordon", {})
+        assert ei.value.status == 409
+    finally:
+        app.close()
+
+
+def test_generate_and_stream_through_pool_agree(client):
+    kw = dict(max_new_tokens=6, temperature=0.7, seed=3)
+    unary = client.generate([[1, 2, 3]], **kw)["outputs"][0]
+    events = list(client.generate_stream([1, 2, 3], **kw))
+    assert events[-1]["event"] == "done"
+    toks = [e["token"] for e in events if "token" in e]
+    assert toks == unary
+
+
+def test_metrics_report_replica_and_fault_sections(client):
+    m = client.metrics()
+    assert m["replicas"]["count"] == 3
+    assert m["replicas"]["enabled"]
+    # no --fault-config on this app: schema-stable zero block
+    assert m["faults"] == {"enabled": False, "specs": 0,
+                           "fired_total": 0, "sites": {}}
+    text = client.metrics(format="prometheus")
+    assert "replicas" in text
+
+
+def test_hedged_infer_smoke(server):
+    host, port = server.address
+    hcl = FlexServeClient(host, port, hedge_ms=1)
+    try:
+        for _ in range(3):
+            resp = hcl.infer({"tokens": [[1, 2, 3, 4]]})
+            assert len(resp["model_0"]) == 1
+        stats = hcl.hedge_stats()
+        assert stats["enabled"]
+        assert stats["hedges"] >= 1
+    finally:
+        hcl.close()
